@@ -1,0 +1,22 @@
+"""Shared helpers for the per-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) * 1e6
+    return out, dt
+
+
+def rows_to_csv(rows: list[dict]) -> str:
+    if not rows:
+        return ""
+    cols = list(rows[0])
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(str(r.get(c, "")) for c in cols))
+    return "\n".join(lines)

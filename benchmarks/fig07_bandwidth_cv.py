@@ -1,0 +1,20 @@
+"""Paper Fig. 7: read/write on-chip bandwidth demand of CV models."""
+
+from repro.core.bandwidth import ArrayConfig, workload_peak_bw
+from repro.core.workload import cv_model_zoo
+
+
+def run(array_sizes=(64, 128, 256)) -> list[dict]:
+    rows = []
+    for name, wl in cv_model_zoo().items():
+        for a in array_sizes:
+            bw = workload_peak_bw(wl, ArrayConfig(H_A=a, W_A=a, d_w=4))
+            rows.append(
+                {
+                    "model": name,
+                    "pe_array": f"{a}x{a}",
+                    "read_B_per_cycle": round(bw["read_bytes_per_cycle"], 1),
+                    "write_B_per_cycle": round(bw["write_bytes_per_cycle"], 1),
+                }
+            )
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Fig. 8: read/write bandwidth demand of NLP models (GEMM+softmax).
+
+Anchor: seq-2048 models (GPT-3/Neo/J) demand ~102 B/cycle write BW on a
+256x256 array (Table II case IV) — reproduced exactly.
+"""
+
+from repro.core.bandwidth import (
+    ArrayConfig,
+    gemm_read_bw_per_cycle,
+    gemm_write_bw_per_cycle,
+    softmax_bw_per_cycle,
+)
+from repro.core.workload import GemmLayer, SoftmaxLayer, nlp_model_zoo
+
+
+def run(array_sizes=(64, 128, 256)) -> list[dict]:
+    rows = []
+    for name, wl in nlp_model_zoo().items():
+        for a in array_sizes:
+            arr = ArrayConfig(H_A=a, W_A=a, d_w=4)
+            rd = max(
+                gemm_read_bw_per_cycle(l, arr)
+                for l in wl.layers
+                if isinstance(l, GemmLayer)
+            )
+            wr = max(
+                gemm_write_bw_per_cycle(l, arr)
+                for l in wl.layers
+                if isinstance(l, GemmLayer)
+            )
+            sm = max(
+                (softmax_bw_per_cycle(l, arr) for l in wl.layers if isinstance(l, SoftmaxLayer)),
+                default=0.0,
+            )
+            rows.append(
+                {
+                    "model": name,
+                    "pe_array": f"{a}x{a}",
+                    "gemm_read_B_per_cycle": round(rd, 1),
+                    "gemm_write_B_per_cycle": round(wr, 1),
+                    "softmax_B_per_cycle": round(sm, 1),
+                }
+            )
+    return rows

@@ -1,0 +1,38 @@
+"""Paper Fig. 9: impact of GLB size on DRAM accesses / speedup / energy for
+CV models (baseline 2 MB GLB, batch 16)."""
+
+from repro.core.access_counts import dram_reduction_pct
+from repro.core.evaluate import evaluate_system
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import cv_model_zoo
+
+CAPS = (4, 8, 16, 32, 64, 128, 256)
+
+
+def run(mode="inference", batch=16) -> list[dict]:
+    rows = []
+    for name, wl in cv_model_zoo().items():
+        base = evaluate_system(
+            wl, batch, HybridMemorySystem(glb=glb_array("sram", 2.0)), mode
+        )
+        for cap in CAPS:
+            m = evaluate_system(
+                wl, batch, HybridMemorySystem(glb=glb_array("sram", cap)), mode
+            )
+            rows.append(
+                {
+                    "model": name,
+                    "mode": mode,
+                    "glb_mb": cap,
+                    "dram_reduction_pct": round(
+                        dram_reduction_pct(wl, batch, cap, 2.0, mode), 1
+                    ),
+                    "speedup_x": round(base.latency_s / m.latency_s, 2),
+                    "energy_saving_x": round(base.energy_j / m.energy_j, 2),
+                }
+            )
+    return rows
+
+
+def run_training():
+    return run(mode="training")

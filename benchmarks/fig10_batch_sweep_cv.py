@@ -1,0 +1,33 @@
+"""Paper Fig. 10: impact of batch size (baseline 16 samples @ 4 MB GLB)."""
+
+from repro.core.access_counts import MemoryParams, access_counts
+from repro.core.evaluate import evaluate_system
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import cv_model_zoo
+
+BATCHES = (32, 64, 128)
+
+
+def run(mode="inference", glb_mb=4.0, zoo=None) -> list[dict]:
+    rows = []
+    zoo = zoo or cv_model_zoo()
+    for name, wl in zoo.items():
+        sys_ = HybridMemorySystem(glb=glb_array("sram", glb_mb))
+        base_acc = access_counts(wl, 16, MemoryParams(glb_mb=glb_mb), mode)
+        base = evaluate_system(wl, 16, sys_, mode)
+        for b in BATCHES:
+            acc = access_counts(wl, b, MemoryParams(glb_mb=glb_mb), mode)
+            m = evaluate_system(wl, b, sys_, mode)
+            rows.append(
+                {
+                    "model": name,
+                    "mode": mode,
+                    "batch": b,
+                    "dram_increase_pct": round(
+                        100 * (acc.dram_total - base_acc.dram_total) / base_acc.dram_total, 1
+                    ),
+                    "slowdown_x": round(m.latency_s / base.latency_s, 2),
+                    "energy_increase_x": round(m.energy_j / base.energy_j, 2),
+                }
+            )
+    return rows

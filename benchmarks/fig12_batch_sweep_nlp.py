@@ -1,0 +1,8 @@
+"""Paper Fig. 12: batch-size sweep for NLP models."""
+
+from benchmarks.fig10_batch_sweep_cv import run as _run
+from repro.core.workload import nlp_model_zoo
+
+
+def run(mode="inference") -> list[dict]:
+    return _run(mode=mode, zoo=nlp_model_zoo())

@@ -1,0 +1,23 @@
+"""Paper Fig. 13: critical switching current vs theta_SH, w_SOT, t_SOT, t_FL."""
+
+import dataclasses
+
+from repro.core import dtco
+
+
+def run() -> list[dict]:
+    dev = dtco.SOTDevice()
+    rows = []
+    for th in (0.1, 0.3, 0.5, 1.0, 2.0, 10.0, 50.0, 100.0, 152.0):
+        d = dataclasses.replace(dev, theta_sh=th)
+        rows.append({"sweep": "theta_sh", "value": th, "I_c_uA": round(dtco.critical_current(d) * 1e6, 4)})
+    for w in (50, 80, 100, 130, 160, 200):
+        d = dataclasses.replace(dev, w_sot_nm=float(w))
+        rows.append({"sweep": "w_sot_nm", "value": w, "I_c_uA": round(dtco.critical_current(d) * 1e6, 3)})
+    for t in (1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0):
+        d = dataclasses.replace(dev, t_sot_nm=t)
+        rows.append({"sweep": "t_sot_nm", "value": t, "I_c_uA": round(dtco.critical_current(d) * 1e6, 3)})
+    for tf in (0.3, 0.5, 0.8, 1.0, 1.2, 1.5):
+        d = dataclasses.replace(dev, t_fl_nm=tf)
+        rows.append({"sweep": "t_fl_nm", "value": tf, "I_c_uA": round(dtco.critical_current(d) * 1e6, 3)})
+    return rows

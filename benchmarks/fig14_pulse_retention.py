@@ -1,0 +1,35 @@
+"""Paper Fig. 14: (a) write pulse width vs applied current; (b) thermal
+stability & retention vs MTJ dimension (P_RF = 1e-9)."""
+
+import dataclasses
+
+from repro.core import dtco
+
+
+def run() -> list[dict]:
+    dev = dtco.SOTDevice()
+    ic = dtco.critical_current(dev)
+    rows = []
+    for od in (1.2, 1.5, 2.0, 3.0, 4.0, 6.0):
+        rows.append(
+            {
+                "sweep": "i_sw_over_ic",
+                "value": od,
+                "tau_p_ps": round(dtco.write_pulse_width_vs_current(dev, od * ic) * 1e12, 1),
+                "delta": "",
+                "retention_s": "",
+            }
+        )
+    for d_mtj in (35, 45, 55, 65, 75, 88):
+        d = dataclasses.replace(dev, d_mtj_nm=float(d_mtj))
+        ret = dtco.retention_time_s(d)
+        rows.append(
+            {
+                "sweep": "d_mtj_nm",
+                "value": d_mtj,
+                "tau_p_ps": "",
+                "delta": round(dtco.thermal_stability(d), 1),
+                "retention_s": f"{ret:.3e}",
+            }
+        )
+    return rows

@@ -1,0 +1,12 @@
+"""Paper Fig. 15: TMR vs MgO thickness; read latency vs TMR."""
+
+from repro.core import dtco
+
+
+def run() -> list[dict]:
+    rows = []
+    for t in (1.0, 1.5, 2.0, 2.5, 3.0, 3.5):
+        rows.append({"sweep": "t_mgo_nm", "value": t, "tmr_pct": round(dtco.tmr_percent(t), 1), "read_ps": ""})
+    for tmr in (100, 150, 200, 240, 300):
+        rows.append({"sweep": "tmr_pct", "value": tmr, "tmr_pct": "", "read_ps": round(dtco.read_latency_s(tmr) * 1e12, 1)})
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Fig. 16 / Section V-D1: process & temperature Monte-Carlo."""
+
+from repro.core import dtco
+
+
+def run() -> list[dict]:
+    dev = dtco.SOTDevice()
+    res = dtco.monte_carlo_variation(dev, n_samples=5000)
+    gb = dtco.apply_guard_band(dev)
+    return [
+        {
+            "metric": "worst_write_Ic_uA(+4sigma)",
+            "value": round(res.worst_write_ic_a * 1e6, 2),
+        },
+        {"metric": "nominal_Ic_uA", "value": round(dtco.critical_current(dev) * 1e6, 2)},
+        {
+            "metric": "worst_read_delta(-4sigma,T_hot)",
+            "value": round(res.worst_read_delta, 1),
+        },
+        {
+            "metric": "worst_retention_s(-4sigma,T_hot)",
+            "value": f"{res.worst_read_retention_s:.3e}",
+        },
+        {"metric": "yield_fraction(ret>=1s)", "value": res.yield_fraction},
+        {"metric": "guardband_t_fl_nm", "value": gb.t_fl_nm},
+        {"metric": "guardband_w_sot_nm", "value": gb.w_sot_nm},
+    ]

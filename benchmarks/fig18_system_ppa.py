@@ -1,0 +1,47 @@
+"""Paper Fig. 18: system-level energy/latency of SOT and DTCO-opt SOT vs
+SRAM at iso-capacity — the paper's headline table."""
+
+from repro.core.evaluate import geomean, improvement_table
+from repro.core.workload import cv_model_zoo, nlp_model_zoo
+
+QUADRANTS = [
+    ("cv", "inference", 64.0, {"sot": (5, 2), "sot_opt": (7, 8)}),
+    ("cv", "training", 256.0, {"sot": (6, 2), "sot_opt": (8, 9)}),
+    ("nlp", "inference", 64.0, {"sot": (2, 2), "sot_opt": (3, 4)}),
+    ("nlp", "training", 256.0, {"sot": (6, 2.5), "sot_opt": (8, 4.5)}),
+]
+
+
+def run() -> list[dict]:
+    zoos = {"cv": cv_model_zoo(), "nlp": nlp_model_zoo()}
+    rows = []
+    for domain, mode, cap, paper in QUADRANTS:
+        tab = improvement_table(zoos[domain], 16, cap, mode)
+        for tech in ("sot", "sot_opt"):
+            e = geomean(v[f"{tech}_energy_x"] for v in tab.values())
+            l = geomean(v[f"{tech}_latency_x"] for v in tab.values())
+            rows.append(
+                {
+                    "domain": domain,
+                    "mode": mode,
+                    "glb_mb": cap,
+                    "tech": tech,
+                    "energy_x": round(e, 2),
+                    "latency_x": round(l, 2),
+                    "paper_energy_x": paper[tech][0],
+                    "paper_latency_x": paper[tech][1],
+                }
+            )
+    return rows
+
+
+def run_per_model() -> list[dict]:
+    zoos = {"cv": cv_model_zoo(), "nlp": nlp_model_zoo()}
+    rows = []
+    for domain, mode, cap, _ in QUADRANTS:
+        tab = improvement_table(zoos[domain], 16, cap, mode)
+        for model, v in tab.items():
+            rows.append(
+                {"domain": domain, "mode": mode, "model": model, **{k: round(x, 2) for k, x in v.items()}}
+            )
+    return rows

@@ -1,0 +1,22 @@
+"""Paper Fig. 19: area of SOT / DTCO-opt-SOT vs SRAM at iso-capacity."""
+
+from repro.core.memory_system import glb_array
+
+
+def run() -> list[dict]:
+    rows = []
+    for cap in (16.0, 64.0, 256.0):
+        sram = glb_array("sram", cap)
+        sot = glb_array("sot", cap)
+        opt = glb_array("sot_opt", cap)
+        rows.append(
+            {
+                "capacity_mb": cap,
+                "sram_mm2": round(sram.area_mm2, 1),
+                "sot_mm2": round(sot.area_mm2, 1),
+                "sot_opt_mm2": round(opt.area_mm2, 1),
+                "sot_ratio": round(sot.area_mm2 / sram.area_mm2, 3),
+                "sot_opt_ratio": round(opt.area_mm2 / sram.area_mm2, 3),
+            }
+        )
+    return rows

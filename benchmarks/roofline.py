@@ -1,0 +1,33 @@
+"""Roofline table from the multi-pod dry-run artifacts (deliverable g)."""
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+
+
+def run() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        r = json.load(open(path))
+        rf = r["roofline"]
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "mesh": r["mesh"],
+                "tag": r.get("tag", ""),
+                "bound": rf["bottleneck"],
+                "t_compute_ms": round(rf["t_compute_s"] * 1e3, 3),
+                "t_memory_ms": round(rf["t_memory_s"] * 1e3, 3),
+                "t_collective_ms": round(rf["t_collective_s"] * 1e3, 3),
+                "roofline_pct": round(rf["roofline_fraction"] * 100, 1),
+                "useful_flop_frac": round(rf["useful_flop_fraction"], 3),
+                "args_gib": round(r["memory"]["argument_bytes"] / 2**30, 2),
+                "temp_gib": round(r["memory"]["temp_bytes"] / 2**30, 2),
+            }
+        )
+    if not rows:
+        rows = [{"note": f"no dry-run artifacts in {ARTIFACT_DIR}; run repro.launch.dryrun"}]
+    return rows

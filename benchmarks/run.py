@@ -1,0 +1,121 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark) followed by
+per-benchmark detail tables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import (
+    fig07_bandwidth_cv,
+    fig08_bandwidth_nlp,
+    fig09_glb_sweep_cv,
+    fig10_batch_sweep_cv,
+    fig11_glb_sweep_nlp,
+    fig12_batch_sweep_nlp,
+    fig13_critical_current,
+    fig14_pulse_retention,
+    fig15_tmr_read,
+    fig16_pt_variation,
+    fig18_system_ppa,
+    fig19_area,
+    roofline,
+    tab07_bitcell_power,
+)
+from benchmarks.common import rows_to_csv, timed
+
+
+def _derive(name: str, rows: list[dict]) -> str:
+    """One-number summary per benchmark for the headline CSV."""
+    try:
+        if name == "fig07_bandwidth_cv":
+            m = max(r["read_B_per_cycle"] for r in rows if r["pe_array"] == "256x256")
+            return f"max_read_B_per_cycle_256={m}"
+        if name == "fig08_bandwidth_nlp":
+            g = [r for r in rows if r["model"] == "gpt3" and r["pe_array"] == "256x256"]
+            return f"gpt3_write_B_per_cycle={g[0]['gemm_write_B_per_cycle']}(paper:102)"
+        if name.startswith("fig09") or name.startswith("fig11"):
+            best = max(r["dram_reduction_pct"] for r in rows)
+            return f"max_dram_reduction_pct={best}"
+        if name.startswith("fig10") or name.startswith("fig12"):
+            worst = max(r["slowdown_x"] for r in rows)
+            return f"max_slowdown_x={worst}"
+        if name == "fig13_critical_current":
+            th = [r for r in rows if r["sweep"] == "theta_sh"]
+            return f"I_c_at_theta152_uA={th[-1]['I_c_uA']}"
+        if name == "fig14_pulse_retention":
+            d = [r for r in rows if r["sweep"] == "d_mtj_nm" and r["value"] == 55]
+            return f"delta_at_55nm={d[0]['delta']}(paper:45)"
+        if name == "fig15_tmr_read":
+            t = [r for r in rows if r["value"] == 3.0]
+            return f"tmr_at_3nm={t[0]['tmr_pct']}(paper:240)"
+        if name == "fig16_pt_variation":
+            return "guard_band=30pct"
+        if name == "tab07_bitcell_power":
+            m = [r for r in rows if r["cell"] == "sot_dtco(timing_ps)"]
+            return f"read/write_ps={m[0]['read_uW']}/{m[0]['write_uW']}(paper:250/520)"
+        if name == "fig18_system_ppa":
+            o = [r for r in rows if r["tech"] == "sot_opt" and r["domain"] == "cv" and r["mode"] == "training"]
+            return f"cv_train_opt={o[0]['energy_x']}x/{o[0]['latency_x']}x(paper:8/9)"
+        if name == "fig19_area":
+            r64 = [r for r in rows if r["capacity_mb"] == 64.0]
+            return f"area_ratio_64MB={r64[0]['sot_opt_ratio']}(paper:0.54)"
+        if name == "roofline":
+            if "note" in rows[0]:
+                return rows[0]["note"]
+            import statistics
+
+            worst = min(r["roofline_pct"] for r in rows)
+            return f"cells={len(rows)},worst_roofline_pct={worst}"
+    except Exception as e:  # pragma: no cover
+        return f"derive_error:{e}"
+    return ""
+
+
+BENCHMARKS = [
+    ("fig07_bandwidth_cv", fig07_bandwidth_cv.run),
+    ("fig08_bandwidth_nlp", fig08_bandwidth_nlp.run),
+    ("fig09_glb_sweep_cv_inf", fig09_glb_sweep_cv.run),
+    ("fig09_glb_sweep_cv_train", fig09_glb_sweep_cv.run_training),
+    ("fig10_batch_sweep_cv", fig10_batch_sweep_cv.run),
+    ("fig11_glb_sweep_nlp", fig11_glb_sweep_nlp.run),
+    ("fig12_batch_sweep_nlp", fig12_batch_sweep_nlp.run),
+    ("fig13_critical_current", fig13_critical_current.run),
+    ("fig14_pulse_retention", fig14_pulse_retention.run),
+    ("fig15_tmr_read", fig15_tmr_read.run),
+    ("fig16_pt_variation", fig16_pt_variation.run),
+    ("tab07_bitcell_power", tab07_bitcell_power.run),
+    ("fig18_system_ppa", fig18_system_ppa.run),
+    ("fig19_area", fig19_area.run),
+    ("roofline", roofline.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="print detail tables")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    details = []
+    for name, fn in BENCHMARKS:
+        if args.only and args.only not in name:
+            continue
+        rows, us = timed(fn)
+        base = name.split("_inf")[0].split("_train")[0] if name.startswith("fig09") else name
+        print(f"{name},{us:.0f},{_derive(base, rows)}")
+        details.append((name, rows))
+    if args.full:
+        for name, rows in details:
+            print(f"\n## {name}")
+            print(rows_to_csv(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Memory-system co-design copilot: apply the paper's STCO loop to any
+assigned architecture + shape, then show the TPU-side plan the framework
+derives from it (remat policy + kernel tiling).
+
+    PYTHONPATH=src python examples/memory_copilot.py --arch internlm2-20b
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.core.bandwidth import ArrayConfig, workload_peak_bw
+from repro.core.stco import dram_access_curve, knee_capacity
+from repro.core.vmem_planner import plan_attention_tiles, plan_matmul_tiles, plan_remat
+from repro.core.workload import transformer_block_layers, Workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-20b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+
+    # 1) paper-side: profile the arch as a Section-III workload
+    layers = []
+    for i in range(cfg.n_layers):
+        layers += transformer_block_layers(
+            f"l{i}", shape.seq_len, cfg.d_model, max(cfg.n_heads, 1),
+            max(cfg.d_ff, cfg.d_model), kv_heads=max(cfg.n_kv_heads, 1),
+        )
+    wl = Workload(cfg.name, tuple(layers), "lm")
+    bw = workload_peak_bw(wl, ArrayConfig())
+    curve = dram_access_curve(wl, shape.global_batch, "training", d_w=2)
+    knee = knee_capacity(curve)
+    print(f"{cfg.name} @ {shape.name}: peak BW rd {bw['read_bytes_per_cycle']:.0f} "
+          f"/ wr {bw['write_bytes_per_cycle']:.0f} B/cycle; GLB knee {knee} MB")
+
+    # 2) TPU-side: the same capacity math drives remat + kernel tiles
+    chips = 256
+    tokens_per_device = shape.global_batch * shape.seq_len // chips
+    params = 2 * cfg.n_layers * cfg.d_model**2 * 8  # rough bf16 bytes
+    rp = plan_remat(cfg.n_layers, tokens_per_device, cfg.d_model,
+                    params_plus_opt_bytes=params * 6 / chips)  # ZeRO-sharded
+    print(f"remat plan: {rp.policy} (activations "
+          f"{rp.activation_bytes_no_remat/2**30:.1f} -> "
+          f"{rp.activation_bytes_chosen/2**30:.1f} GiB, budget "
+          f"{rp.hbm_budget_bytes/2**30:.1f} GiB)")
+    mm = plan_matmul_tiles(shape.seq_len, cfg.d_model, max(cfg.d_ff, cfg.d_model), d_w=2)
+    print(f"GEMM tiling: ({mm.bm},{mm.bk},{mm.bn}) OI={mm.oi_flops_per_byte:.0f} "
+          f"flops/B ({'compute' if mm.compute_bound else 'memory'}-bound), "
+          f"VMEM {mm.vmem_bytes/2**20:.1f} MiB")
+    bq, bkv = plan_attention_tiles(shape.seq_len, shape.seq_len, cfg.resolved_head_dim)
+    print(f"attention tiling: block_q={bq}, block_kv={bkv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's closed STCO<->DTCO loop + a mini training run.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Profiles a ResNet-50 workload (paper Section III), sweeps GLB sizes
+   (Algorithms 1/2), runs the DTCO optimizer (Section IV) and prints the
+   SRAM vs SOT-MRAM vs DTCO-opt system comparison (Fig. 18).
+2. Trains a reduced llama3.2-1b for 100 steps on the synthetic pipeline to
+   show the JAX framework end-to-end.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.evaluate import compare_technologies
+from repro.core.stco import run_stco
+from repro.core.workload import cv_model_zoo
+
+
+def stco_demo():
+    wl = cv_model_zoo()["resnet50"]
+    print(f"== STCO/DTCO closed loop on {wl.name} ==")
+    res = run_stco(wl, batch=16, mode="inference")
+    print(f"peak BW demand: rd {res.peak_read_bw_bytes_per_cycle:.0f} B/cy, "
+          f"wr {res.peak_write_bw_bytes_per_cycle:.0f} B/cy")
+    print(f"chosen GLB capacity (knee): {res.chosen_capacity_mb} MB")
+    d = res.dtco.device
+    print(f"DTCO device: theta_SH={d.theta_sh} t_FL={d.t_fl_nm}nm "
+          f"w_SOT={d.w_sot_nm}nm t_MgO={d.t_mgo_nm}nm d_MTJ={d.d_mtj_nm}nm")
+    print(f"  retention {res.dtco.retention_s:.1f}s, Delta {res.dtco.delta:.1f}, "
+          f"read bus {res.dtco.read_bus_bits}b, write bus {res.dtco.write_bus_bits}b")
+    m = compare_technologies(wl, 16, 64.0, "inference")
+    sram = m["sram"]
+    for tech in ("sot", "sot_opt"):
+        v = m[tech]
+        print(f"  {tech:8s}: {sram.energy_j / v.energy_j:4.1f}x energy, "
+              f"{sram.latency_s / v.latency_s:4.1f}x latency vs SRAM @64MB")
+    print(f"pareto points: {len(res.pareto)}")
+
+
+def train_demo():
+    print("\n== mini training run (reduced llama3.2-1b) ==")
+    from repro.launch.train import train
+
+    _, losses, wd = train("llama3.2-1b", steps=100, batch=8, seq=128,
+                          smoke=True, lr=5e-3, log_every=20)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}; stragglers flagged: {len(wd.events)}")
+
+
+if __name__ == "__main__":
+    stco_demo()
+    train_demo()

@@ -1,0 +1,43 @@
+"""End-to-end LM training with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/train_llm.py --arch gemma2-2b --steps 150
+
+Kills-and-resumes itself halfway to demonstrate checkpoint restart: run the
+script twice with the same --ckpt-dir and the second run resumes.
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_llm")
+    ap.add_argument("--int8-grads", action="store_true")
+    args = ap.parse_args()
+
+    _, losses, wd = train(
+        args.arch,
+        steps=args.steps,
+        batch=8,
+        seq=128,
+        smoke=True,  # reduced config; pass smoke=False on real hardware
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=25,
+        int8_grads=args.int8_grads,
+        lr=3e-3,
+    )
+    n = max(len(losses) // 10, 1)
+    print(f"trained {len(losses)} steps; "
+          f"mean loss first-{n}: {sum(losses[:n])/n:.4f} -> "
+          f"last-{n}: {sum(losses[-n:])/n:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: SOT-MRAM STCO/DTCO memory-system co-design as a JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-N, auto-resume."""
+
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,1 @@
+"""Arch configs (one module per assigned architecture) + registry."""

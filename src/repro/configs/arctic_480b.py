@@ -1,0 +1,17 @@
+"""arctic-480b [hf:Snowflake/snowflake-arctic-base; hf] — 128e top-2 MoE
+with a dense residual branch in parallel (Arctic's dense-MoE hybrid)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe", n_layers=35, d_model=7168,
+    n_heads=56, n_kv_heads=8, head_dim=128, d_ff=4864, vocab=32000,
+    mlp_type="swiglu", n_experts=128, top_k=2, moe_d_ff=4864,
+    dense_residual_d_ff=4864, capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="arctic-smoke", family="moe", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=64, vocab=256,
+    mlp_type="swiglu", n_experts=4, top_k=2, moe_d_ff=64,
+    dense_residual_d_ff=64, dtype="float32", param_dtype="float32",
+)

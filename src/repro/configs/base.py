@@ -1,0 +1,123 @@
+"""Model/run configuration dataclasses.
+
+One ``ModelConfig`` describes any architecture in the zoo; family-specific
+fields are simply unused by other families.  ``smoke()`` returns the reduced
+same-family config used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "hybrid", "ssm", "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None  # defaults to d_model // n_heads
+    # --- MLP / act ---
+    mlp_type: Literal["swiglu", "geglu", "gelu_mlp"] = "swiglu"
+    # --- norm / embedding ---
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    tie_embeddings: bool = False
+    scale_embed_by_sqrt_dim: bool = False  # gemma
+    # --- positional ---
+    rope_theta: float = 10000.0
+    pos_embed: Literal["rope", "mrope", "learned", "none"] = "rope"
+    max_position: int = 1 << 20
+    # --- attention pattern ---
+    attn_pattern: tuple[str, ...] = ("global",)  # cycled over layers
+    window: int = 4096  # sliding window for "local" layers
+    attn_softcap: float | None = None  # gemma2: 50.0, grok: 30.0
+    final_softcap: float | None = None  # gemma2: 30.0
+    use_qk_norm: bool = False
+    post_block_norm: bool = False  # gemma2 post-norms
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 2
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    dense_residual_d_ff: int = 0  # arctic: dense FFN in parallel with MoE
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    shared_attn_every: int = 0  # zamba2: shared attention block period
+    # --- encoder-decoder (whisper) ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    enc_seq: int = 0  # fixed encoder length (1500 frames for whisper)
+    # --- VLM (qwen2-vl) ---
+    n_img_tokens: int = 0
+    # --- numerics / implementation selection ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    attn_impl: Literal["naive", "blockwise", "pallas"] = "naive"
+    ssm_impl: Literal["ref", "chunked", "pallas"] = "chunked"
+    remat: Literal["none", "dots", "full"] = "none"
+    # Megatron-style sequence parallelism: layer-boundary activations (and
+    # thus the remat-saved stack) shard their seq axis over "model".
+    shard_seq_activations: bool = False
+    # MoE dispatch: "gspmd" (compiler-managed resharding) or "shard_map"
+    # (explicit expert-parallel all_to_all; needs n_experts % data == 0).
+    moe_impl: Literal["gspmd", "shard_map"] = "gspmd"
+    # Unrolled decode: python-loop over layer groups with per-group cache
+    # buffers (in-place updates, no scan carry copies) — serving optimization.
+    decode_unroll: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0 and self.dec_layers > 0
+
+    def attn_type(self, layer_idx: int) -> str:
+        return self.attn_pattern[layer_idx % len(self.attn_pattern)]
+
+    def layer_group_size(self) -> int:
+        """Scan group: one period of the attention/hybrid pattern."""
+        if self.family == "hybrid" and self.shared_attn_every:
+            return self.shared_attn_every
+        return len(self.attn_pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (shape) cell of the assignment grid."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# Archs whose attention is sub-quadratic / state-based enough for 500k.
+LONG_CONTEXT_ARCHS = ("zamba2-2.7b", "mamba2-130m")
+
+
+def applicable_shapes(arch_name: str, family: str) -> list[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch_name in LONG_CONTEXT_ARCHS:
+        names.append("long_500k")
+    return names

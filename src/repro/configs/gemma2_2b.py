@@ -1,0 +1,19 @@
+"""gemma2-2b [arXiv:2408.00118; hf] — local+global alternating, softcaps."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b", family="dense", n_layers=26, d_model=2304,
+    n_heads=8, n_kv_heads=4, head_dim=256, d_ff=9216, vocab=256000,
+    mlp_type="geglu", tie_embeddings=True, scale_embed_by_sqrt_dim=True,
+    attn_pattern=("local", "global"), window=4096,
+    attn_softcap=50.0, final_softcap=30.0, post_block_norm=True,
+)
+
+SMOKE = ModelConfig(
+    name="gemma2-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    mlp_type="geglu", tie_embeddings=True, scale_embed_by_sqrt_dim=True,
+    attn_pattern=("local", "global"), window=8,
+    attn_softcap=50.0, final_softcap=30.0, post_block_norm=True,
+    dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,16 @@
+"""gemma-2b [arXiv:2403.08295; hf] — GeGLU, head_dim 256, MQA (kv=1)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b", family="dense", n_layers=18, d_model=2048,
+    n_heads=8, n_kv_heads=1, head_dim=256, d_ff=16384, vocab=256000,
+    mlp_type="geglu", norm="rmsnorm", tie_embeddings=True,
+    scale_embed_by_sqrt_dim=True,
+)
+
+SMOKE = ModelConfig(
+    name="gemma-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=1, head_dim=16, d_ff=128, vocab=256,
+    mlp_type="geglu", tie_embeddings=True, scale_embed_by_sqrt_dim=True,
+    dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,16 @@
+"""grok-1-314b [hf:xai-org/grok-1; unverified] — 8 experts top-2."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe", n_layers=64, d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128, d_ff=32768, vocab=131072,
+    mlp_type="geglu", n_experts=8, top_k=2, moe_d_ff=32768,
+    attn_softcap=30.0,
+)
+
+SMOKE = ModelConfig(
+    name="grok1-smoke", family="moe", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    mlp_type="geglu", n_experts=4, top_k=2, moe_d_ff=64,
+    attn_softcap=30.0, dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,15 @@
+"""internlm2-20b [arXiv:2403.17297; hf] — dense GQA decoder."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b", family="dense", n_layers=48, d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128, d_ff=16384, vocab=92544,
+    mlp_type="swiglu", rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="internlm2-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    mlp_type="swiglu", rope_theta=1_000_000.0, dtype="float32",
+    param_dtype="float32",
+)

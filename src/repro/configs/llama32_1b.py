@@ -1,0 +1,15 @@
+"""llama3.2-1b [hf:meta-llama/Llama-3.2-1B; unverified] — small llama3."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b", family="dense", n_layers=16, d_model=2048,
+    n_heads=32, n_kv_heads=8, head_dim=64, d_ff=8192, vocab=128256,
+    mlp_type="swiglu", rope_theta=500_000.0, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="llama32-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    mlp_type="swiglu", rope_theta=500_000.0, tie_embeddings=True,
+    dtype="float32", param_dtype="float32",
+)

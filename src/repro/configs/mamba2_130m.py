@@ -1,0 +1,17 @@
+"""mamba2-130m [arXiv:2405.21060; unverified] — attention-free SSD."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm", n_layers=24, d_model=768,
+    n_heads=1, n_kv_heads=1, d_ff=0, vocab=50288,  # 50280 padded to /16
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_groups=1,
+    ssm_chunk=256, tie_embeddings=True, pos_embed="none",
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke", family="ssm", n_layers=2, d_model=64,
+    n_heads=1, n_kv_heads=1, d_ff=0, vocab=256,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_groups=1,
+    ssm_chunk=8, tie_embeddings=True, pos_embed="none",
+    dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,17 @@
+"""qwen2-vl-2b [arXiv:2409.12191; hf] — M-RoPE backbone; patch-embedding
+frontend is a stub (input_specs provides precomputed patch embeddings)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", family="vlm", n_layers=28, d_model=1536,
+    n_heads=12, n_kv_heads=2, head_dim=128, d_ff=8960, vocab=151936,
+    mlp_type="swiglu", pos_embed="mrope", rope_theta=1_000_000.0,
+    tie_embeddings=True, n_img_tokens=1024,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2vl-smoke", family="vlm", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    mlp_type="swiglu", pos_embed="mrope", tie_embeddings=True,
+    n_img_tokens=4, dtype="float32", param_dtype="float32",
+)

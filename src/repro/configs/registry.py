@@ -1,0 +1,62 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import (
+    arctic_480b,
+    gemma2_2b,
+    gemma_2b,
+    grok1_314b,
+    internlm2_20b,
+    llama32_1b,
+    mamba2_130m,
+    qwen2_vl_2b,
+    whisper_large_v3,
+    zamba2_27b,
+)
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig, applicable_shapes
+
+_MODULES = {
+    "internlm2-20b": internlm2_20b,
+    "gemma-2b": gemma_2b,
+    "gemma2-2b": gemma2_2b,
+    "llama3.2-1b": llama32_1b,
+    "arctic-480b": arctic_480b,
+    "grok-1-314b": grok1_314b,
+    "zamba2-2.7b": zamba2_27b,
+    "qwen2-vl-2b": qwen2_vl_2b,
+    "mamba2-130m": mamba2_130m,
+    "whisper-large-v3": whisper_large_v3,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    cfg = _MODULES[name].CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke(name: str, **overrides) -> ModelConfig:
+    cfg = _MODULES[name].SMOKE
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def arch_shape_cells() -> list[tuple[str, str]]:
+    """All 40 (arch, shape) assignment cells (skips included as cells but
+    filtered by ``applicable_shapes`` for execution)."""
+    cells = []
+    for a in ARCHS:
+        for s in SHAPES:
+            cells.append((a, s))
+    return cells
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    out = []
+    for a in ARCHS:
+        fam = _MODULES[a].CONFIG.family
+        for s in applicable_shapes(a, fam):
+            out.append((a, s))
+    return out

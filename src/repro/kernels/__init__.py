@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package ships:
+  <name>.py  pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     jit'd public wrapper (auto interpret=True on CPU)
+  ref.py     pure-jnp oracle used by the allclose test sweeps
+
+BlockSpec tile shapes come from ``repro.core.vmem_planner`` — the paper's
+GLB capacity/bandwidth co-design applied to the HBM->VMEM boundary.
+"""

@@ -1,0 +1,82 @@
+"""Public flash-attention op: layout adaptation, planner-driven block sizes,
+custom VJP (forward = Pallas kernel; backward = blockwise recompute).
+
+The model passes (B, S, H, hd) / (B, T, KV, hd) activations; the kernel
+wants head-major (B, H, S, hd).  ``interpret`` defaults to True off-TPU so
+the same code path validates on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vmem_planner import plan_attention_tiles
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5)
+)
+def _fa(q, k, v, causal, window, softcap):
+    bq, bkv = plan_attention_tiles(q.shape[2], k.shape[2], q.shape[3])
+    out, _ = flash_attention_fwd(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=bq,
+        block_kv=bkv,
+        interpret=_auto_interpret(),
+    )
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window, softcap):
+    bq, bkv = plan_attention_tiles(q.shape[2], k.shape[2], q.shape[3])
+    out, lse = flash_attention_fwd(
+        q, k, v,
+        causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_kv=bkv, interpret=_auto_interpret(),
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, softcap, res, g):
+    q, k, v, out, lse = res
+    from repro.kernels.flash_attention.flash_attention_bwd import flash_attention_bwd
+
+    bq, bkv = plan_attention_tiles(q.shape[2], k.shape[2], q.shape[3])
+    return flash_attention_bwd(
+        q, k, v, out, lse, g,
+        causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_kv=bkv, interpret=_auto_interpret(),
+    )
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, hd)  — model activation layout
+    k: jax.Array,  # (B, T, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Returns (B, S, H, hd)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa(qt, kt, vt, causal, window, softcap)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel (and its VJP recompute)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def reference_attention(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, KV, T, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    group = H // KV
+    qg = q.reshape(B, KV, group, S, hd)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qg, k).astype(jnp.float32) * (hd ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgst,bkth->bkgsh", p, v)
+    return o.reshape(B, H, S, hd)

@@ -1,0 +1,38 @@
+"""Public SSD-scan op with custom VJP (backward = oracle recompute)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.ref import reference_ssd
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_fwd
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd(x, dt, a_log, B_, C_, chunk):
+    return ssd_scan_fwd(x, dt, a_log, B_, C_, chunk=chunk, interpret=_auto_interpret())
+
+
+def _ssd_fwd(x, dt, a_log, B_, C_, chunk):
+    out = _ssd(x, dt, a_log, B_, C_, chunk)
+    return out, (x, dt, a_log, B_, C_)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, a_log, B_, C_ = res
+    _, vjp = jax.vjp(lambda *a: reference_ssd(*a), x, dt, a_log, B_, C_)
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(x, dt, a_log, B_, C_, chunk: int = 128):
+    """Returns (y, final_state); see kernel docstring for layouts."""
+    return _ssd(x, dt, a_log, B_, C_, chunk)

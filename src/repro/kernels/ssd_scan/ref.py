@@ -1,0 +1,30 @@
+"""Pure-jnp sequential oracle for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_ssd(x, dt, a_log, B_, C_):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); B_/C_: (B,S,G,N).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=2)
+    Ch = jnp.repeat(C_, rep, axis=2)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dec = jnp.exp(dtt * (-jnp.exp(a_log)))  # (B,H)
+        h = h * dec[..., None, None] + jnp.einsum("bhn,bhp,bh->bhpn", bt, xt, dtt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (x, dt, Bh, Ch)
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,22 @@
+"""Public tiled-GEMM op; block shapes from the paper-derived VMEM planner."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.vmem_planner import plan_matmul_tiles
+from repro.kernels.tiled_matmul.tiled_matmul import tiled_matmul_fwd
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tiled_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(M,K) @ (K,N) with planner-chosen VMEM tiling."""
+    M, K = a.shape
+    N = b.shape[1]
+    plan = plan_matmul_tiles(M, K, N, d_w=a.dtype.itemsize)
+    return tiled_matmul_fwd(
+        a, b, bm=plan.bm, bk=plan.bk, bn=plan.bn, interpret=_auto_interpret()
+    )

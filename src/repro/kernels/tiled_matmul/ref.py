@@ -1,0 +1,9 @@
+"""Oracle for the tiled GEMM: plain jnp matmul with fp32 accumulation."""
+
+import jax.numpy as jnp
+
+
+def reference_matmul(a, b):
+    return jnp.matmul(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(a.dtype)

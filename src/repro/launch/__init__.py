@@ -1,0 +1,1 @@
+"""Launch layer: mesh construction, train/serve drivers, multi-pod dry-run."""

@@ -1,0 +1,307 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, constructs ShapeDtypeStruct
+inputs (weak-type-correct, shardable, zero allocation), lowers the jitted
+train/prefill/serve step with explicit in/out shardings, compiles it, and
+records ``memory_analysis()`` (proves per-chip fit) + ``cost_analysis()`` +
+the parsed collective schedule into a JSON artifact consumed by
+``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out artifacts/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from functools import partial
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeConfig, applicable_shapes
+from repro.configs.registry import ARCHS, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    decode_token_specs,
+    prefill_input_specs,
+    train_input_specs,
+)
+from repro.launch.steps import (
+    abstract_init,
+    build_serve_steps,
+    build_train_step,
+    rules_for,
+)
+from repro.models.api import model_api
+from repro.optim import adamw
+
+
+def dryrun_config(arch: str, shape: ShapeConfig, **extra):
+    """Arch config tuned for lowering at scale: blockwise attention for the
+    XLA path (flash-equivalent memory behaviour), remat for training."""
+    overrides = dict(attn_impl="blockwise", ssm_impl="chunked")
+    if shape.kind == "train":
+        # "full" saves only layer boundaries — Algorithm 2's residency test
+        # says the full activation set does not fit 16 GB/chip at these
+        # shapes (see core.vmem_planner.plan_remat); the perf hillclimb
+        # selectively relaxes this where memory allows.  Sequence-parallel
+        # activations shard the saved boundary stack over the model axis.
+        overrides["remat"] = "full"
+        overrides["shard_seq_activations"] = True
+    overrides.update(extra)
+    return get_config(arch, **overrides)
+
+
+def _with_n_groups(cfg, n_groups: int):
+    """Shrink the layer stack to ``n_groups`` scan groups (cost probes)."""
+    g = cfg.layer_group_size()
+    kw = dict(n_layers=n_groups * g)
+    if cfg.is_encdec:
+        kw.update(enc_layers=n_groups, dec_layers=n_groups, n_layers=n_groups)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _lower_cell(cfg, shape: ShapeConfig, mesh, arch: str):
+    """Lower + compile one cell; returns (compiled, bundle, mode, tokens)."""
+    if shape.kind == "train":
+        batch_specs = train_input_specs(cfg, shape)
+        bundle = build_train_step(
+            cfg, mesh, optimizer=_optimizer_for(arch), batch_specs=batch_specs
+        )
+        lowered = bundle.step_fn.lower(
+            bundle.param_shapes, bundle.opt_shapes, batch_specs
+        )
+        return lowered.compile(), bundle, "train", shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        batch_specs = prefill_input_specs(cfg, shape)
+        bundle = build_serve_steps(
+            cfg, mesh, shape.global_batch, shape.seq_len, batch_specs=batch_specs
+        )
+        lowered = bundle.prefill_fn.lower(bundle.param_shapes, batch_specs)
+        return lowered.compile(), bundle, "prefill", shape.global_batch * shape.seq_len
+    bundle = build_serve_steps(cfg, mesh, shape.global_batch, shape.seq_len)
+    tok = decode_token_specs(cfg, shape)
+    lowered = bundle.decode_fn.lower(bundle.param_shapes, bundle.cache_shapes, tok)
+    return lowered.compile(), bundle, "decode", shape.global_batch
+
+
+def _probe_costs(
+    arch: str, shape: ShapeConfig, mesh, chips: int, n_groups: int, overrides=None
+):
+    """XLA's cost analysis counts while-loop bodies ONCE (trip counts are not
+    multiplied), so a scanned 48-layer model under-reports ~n_layers x.
+    Probe compiles at 1 and 2 scan groups and extrapolate:
+        total(G) = probe(1) + (G - 1) * (probe(2) - probe(1)).
+    Exact for collectives (none live inside the attention/SSD tile loops) and
+    a best-case bound for HBM bytes (tile loops counted once == every K/V
+    tile fetched once, the ideal flash schedule).  FLOPs from these probes
+    still under-count inner tile loops, so the compute term uses the
+    analytic counter (roofline.analytic_step_flops); probe flops are kept in
+    the artifact as a cross-check."""
+
+    def costs(cfg_small):
+        compiled, _, _, _ = _lower_cell(cfg_small, shape, mesh, arch)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = rl.collective_bytes(compiled.as_text())
+        return (
+            float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll,
+        )
+
+    def extrapolate(v1, v2):
+        return max(v1 + (n_groups - 1) * (v2 - v1), v1)
+
+    base = dryrun_config(arch, shape, **(overrides or {}))
+    f1, b1, c1 = costs(_with_n_groups(base, 1))
+    f2, b2, c2 = costs(_with_n_groups(base, 2))
+    flops = extrapolate(f1, f2) * chips
+    hbm = extrapolate(b1, b2) * chips
+    coll = {k: extrapolate(c1[k], c2[k]) * chips for k in c1}
+    return flops, hbm, coll
+
+
+def _optimizer_for(arch: str):
+    import jax.numpy as jnp
+
+    # bf16 moments keep ZeRO-sharded optimizer state of the giant MoEs
+    # within 16 GB/chip (see EXPERIMENTS.md §Dry-run).
+    if arch in ("arctic-480b", "grok-1-314b"):
+        return adamw(lr=1e-4, moment_dtype=jnp.bfloat16)
+    return adamw(lr=3e-4)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: str | None,
+    overrides: dict | None = None,
+    tag: str = "",
+):
+    shape = SHAPES[shape_name]
+    cfg = dryrun_config(arch, shape, **(overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+
+    api = model_api(cfg)
+    shapes, specs = abstract_init(api)
+    n_params = rl.count_params(shapes)
+    n_active = rl.count_active_params(shapes, specs, cfg.top_k, cfg.n_experts)
+
+    compiled, bundle, mode, tokens = _lower_cell(cfg, shape, mesh, arch)
+    mem = compiled.memory_analysis()
+    model_flops = rl.model_flops_estimate(n_active, tokens, mode)
+
+    # HLO-derived bytes/collectives via layer-count differencing probes;
+    # analytic einsum-exact flops (probe flops kept as cross-check).
+    kinds, n_groups = __import__(
+        "repro.models.model", fromlist=["group_structure"]
+    ).group_structure(cfg)
+    probe_flops, hbm_bytes, coll = _probe_costs(
+        arch, shape, mesh, chips, n_groups, overrides
+    )
+    flops = rl.analytic_step_flops(
+        cfg, shape.kind, shape.global_batch, shape.seq_len, cfg.remat
+    )
+
+    # algorithmic-minimum HBM traffic: params once (+ KV/state cache once
+    # for decode) — the memory-side "MODEL_FLOPS".  Decode reads ALL params
+    # (a 128-token batch with top-2 routing touches every expert).
+    dtype_bytes = 2  # bf16 params
+    ideal_bytes = (n_params if mode == "decode" else n_active) * dtype_bytes
+    if mode == "decode":
+        cache_bytes = sum(
+            math.prod(v.shape) * v.dtype.itemsize
+            for v in jax.tree.leaves(bundle.cache_shapes)
+        )
+        ideal_bytes += cache_bytes
+    terms = rl.RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        collective_bytes_by_type=coll,
+        collective_bytes=rl.collective_cost_bytes(coll),
+        chips=chips,
+        model_flops=model_flops,
+        ideal_bytes=ideal_bytes,
+    )
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "mode": mode,
+        "tag": tag,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "chips": chips,
+        "params": n_params,
+        "active_params": n_active,
+        "tokens_per_step": tokens,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_estimate": mem.argument_size_in_bytes
+            + max(mem.temp_size_in_bytes, 0),
+        },
+        "roofline": terms.summary(),
+        "probe_hlo_flops": probe_flops,
+        "analytic_vs_probe_flops": flops / probe_flops if probe_flops else None,
+        "compile_seconds": time.time() - t0,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def fmt_record(r: dict) -> str:
+    m = r["memory"]
+    rf = r["roofline"]
+    return (
+        f"{r['arch']:17s} {r['shape']:12s} {r['mesh']:8s} {r['mode']:7s} "
+        f"args={m['argument_bytes']/2**30:7.2f}GiB temp={m['temp_bytes']/2**30:7.2f}GiB "
+        f"tc={rf['t_compute_s']*1e3:8.3f}ms tm={rf['t_memory_s']*1e3:8.3f}ms "
+        f"tx={rf['t_collective_s']*1e3:8.3f}ms bound={rf['bottleneck']:10s} "
+        f"roofline={rf['roofline_fraction']*100:5.1f}% "
+        f"(c={rf['compute_roofline_fraction']*100:4.1f}%/m={rf['memory_roofline_fraction']*100:4.1f}%) "
+        f"compile={r['compile_seconds']:5.1f}s"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix for perf variants")
+    ap.add_argument(
+        "--override",
+        action="append",
+        default=[],
+        help="cfg override key=value (e.g. moe_impl=shard_map)",
+    )
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.replace(".", "", 1).isdigit():
+            v = float(v) if "." in v else int(v)
+        overrides[k] = v
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        fam = get_config(arch).family
+        shape_names = (
+            applicable_shapes(arch, fam) if args.shape == "all" else [args.shape]
+        )
+        for shape_name in shape_names:
+            for multi in meshes:
+                try:
+                    rec = run_cell(
+                        arch, shape_name, multi, args.out,
+                        overrides=overrides, tag=args.tag,
+                    )
+                    print(fmt_record(rec), flush=True)
+                except Exception as e:
+                    failures.append((arch, shape_name, multi, repr(e)))
+                    print(
+                        f"FAIL {arch} {shape_name} multi={multi}: {e}", flush=True
+                    )
+                    if not args.continue_on_error:
+                        traceback.print_exc()
+                        raise
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Format EXPERIMENTS.md tables from dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.launch.gen_tables [dir...]
+"""
+
+import glob
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def table(paths):
+    rows = []
+    for p in sorted(paths):
+        r = json.load(open(p))
+        rf = r["roofline"]
+        m = r["memory"]
+        rows.append(
+            dict(
+                arch=r["arch"],
+                shape=r["shape"],
+                mesh=r["mesh"],
+                tag=r.get("tag", ""),
+                mode=r["mode"],
+                args_gib=fmt_bytes(m["argument_bytes"]),
+                temp_gib=fmt_bytes(m["temp_bytes"]),
+                tc_ms=f"{rf['t_compute_s']*1e3:.2f}",
+                tm_ms=f"{rf['t_memory_s']*1e3:.2f}",
+                tx_ms=f"{rf['t_collective_s']*1e3:.2f}",
+                bound=rf["bottleneck"],
+                mf_ratio=f"{rf['useful_flop_fraction']:.2f}",
+                roof=f"{rf['roofline_fraction']*100:.1f}%",
+            )
+        )
+    cols = list(rows[0])
+    out = ["| " + " | ".join(cols) + " |", "|" + "---|" * len(cols)]
+    for r in rows:
+        out.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    dirs = sys.argv[1:] or ["artifacts/dryrun"]
+    for d in dirs:
+        paths = glob.glob(d + "/*.json")
+        if paths:
+            print(f"### {d}\n")
+            print(table(paths))
+            print()

@@ -1,0 +1,61 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches JAX device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; real deployments get the same meshes from actual TPU topologies.
+
+Elastic scaling: ``make_elastic_mesh`` builds the largest (data, model)
+mesh the currently-live device set supports — on restart after losing a
+node, training resumes on the shrunken mesh and the checkpoint re-shards
+at load (see checkpoint.manager).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for {shape}, have {len(devices)} "
+            "(dry-run must set xla_force_host_platform_device_count first)"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (CPU smoke tests / real runs)."""
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices)
+    mp = math.gcd(model_parallel, n)
+    dp = n // mp
+    return jax.sharding.Mesh(np.asarray(devices[: dp * mp]).reshape(dp, mp), ("data", "model"))
+
+
+def make_elastic_mesh(target_model_parallel: int = 16):
+    """Largest usable (data, model) mesh from the live device set.
+
+    Straggler/failure handling at relaunch: if a pod slice died, the device
+    count drops and this returns the best-fitting smaller mesh instead of
+    refusing to start."""
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices)
+    mp = math.gcd(target_model_parallel, n)
+    while mp > 1 and n % mp:
+        mp //= 2
+    dp = n // mp
+    return jax.sharding.Mesh(np.asarray(devices[: dp * mp]).reshape(dp, mp), ("data", "model"))

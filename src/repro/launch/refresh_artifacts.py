@@ -1,0 +1,73 @@
+"""Recompute derived roofline fields in dry-run artifacts (no recompiles).
+
+Used when the analytic flop counter / active-param accounting changes:
+the HLO-derived quantities (bytes, collectives, memory) are untouched.
+
+    PYTHONPATH=src python -m repro.launch.refresh_artifacts artifacts/dryrun
+"""
+
+import glob
+import json
+import math
+import sys
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.launch import roofline as rl
+from repro.launch.dryrun import dryrun_config
+from repro.launch.steps import abstract_init
+from repro.models.api import model_api
+
+
+def refresh(path: str):
+    r = json.load(open(path))
+    arch, shape_name, mode = r["arch"], r["shape"], r["mode"]
+    shape = SHAPES[shape_name]
+    overrides = {}
+    for k, v in r.get("overrides", {}).items():
+        overrides[k] = v == "True" if v in ("True", "False") else v
+    cfg = dryrun_config(arch, shape, **overrides)
+    api = model_api(cfg)
+    shapes, specs = abstract_init(api)
+    n_params = rl.count_params(shapes)
+    n_active = rl.count_active_params(shapes, specs, cfg.top_k, cfg.n_experts)
+    tokens = r["tokens_per_step"]
+    model_flops = rl.model_flops_estimate(n_active, tokens, mode)
+    flops = rl.analytic_step_flops(
+        cfg, shape.kind, shape.global_batch, shape.seq_len, cfg.remat
+    )
+    ideal = (n_params if mode == "decode" else n_active) * 2
+    if mode == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: api.init_cache(shape.global_batch, shape.seq_len)
+        )
+        ideal += sum(
+            math.prod(v.shape) * v.dtype.itemsize
+            for v in jax.tree.leaves(cache_shapes)
+        )
+    rf = r["roofline"]
+    terms = rl.RooflineTerms(
+        flops=flops,
+        hbm_bytes=rf["hbm_bytes"],
+        collective_bytes_by_type=rf["collective_by_type"],
+        collective_bytes=rf["collective_bytes"],
+        chips=r["chips"],
+        model_flops=model_flops,
+        ideal_bytes=ideal,
+    )
+    r["params"], r["active_params"] = n_params, n_active
+    r["roofline"] = terms.summary()
+    json.dump(r, open(path, "w"), indent=1)
+    return r
+
+
+if __name__ == "__main__":
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    for p in sorted(glob.glob(out_dir + "/*.json")):
+        r = refresh(p)
+        rf = r["roofline"]
+        print(
+            f"{r['arch']:17s} {r['shape']:12s} {r['mesh']:8s} "
+            f"bound={rf['bottleneck']:10s} roofline={rf['roofline_fraction']*100:5.1f}%"
+        )

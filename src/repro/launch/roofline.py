@@ -1,0 +1,375 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+  compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips * 819 GB/s HBM)
+  collective = collective_bytes / (chips * 50 GB/s ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are parsed from the optimized HLO text: for each all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op we take the
+result-shape bytes (ring transfer volume ~= result bytes for gather-type
+ops; all-reduce pays ~2x for reduce-scatter+all-gather phases).
+
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (single forward), with N = active
+parameters for MoE (experts scaled by top_k/E).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:\w+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Result-shape bytes per collective type (de-duping async start/done)."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        # avoid double counting -start/-done pairs: count starts and bare ops
+        tail = hlo_text[m.start() : m.start() + 200]
+        if f"{op}-done" in tail.split("(")[0]:
+            continue
+        out[op] += _shape_bytes(shape_str)
+    return out
+
+
+def collective_cost_bytes(per_type: dict[str, float]) -> float:
+    """Ring-cost weighting: all-reduce ~2x (RS+AG), others ~1x."""
+    return sum(
+        b * (2.0 if op == "all-reduce" else 1.0) for op, b in per_type.items()
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    collective_bytes_by_type: dict
+    collective_bytes: float
+    chips: int
+    model_flops: float
+    # algorithmic-minimum HBM traffic (params once + cache once + IO):
+    # the memory-side analogue of MODEL_FLOPS, for memory-bound shapes.
+    ideal_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def compute_roofline_fraction(self) -> float:
+        """(MODEL_FLOPS / chips / peak) / bound_time — how close the step is
+        to the compute roofline (the right score for train/prefill)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / max(self.bound_time, 1e-30)
+
+    @property
+    def memory_roofline_fraction(self) -> float:
+        """(ideal_bytes / chips / BW) / bound_time — how close the step is
+        to the memory roofline (the right score for decode)."""
+        ideal = self.ideal_bytes / (self.chips * HBM_BW)
+        return ideal / max(self.bound_time, 1e-30)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Distance to the nearest applicable roof."""
+        return max(self.compute_roofline_fraction, self.memory_roofline_fraction)
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_type": self.collective_bytes_by_type,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "ideal_bytes": self.ideal_bytes,
+            "useful_flop_fraction": self.useful_flop_fraction,
+            "compute_roofline_fraction": self.compute_roofline_fraction,
+            "memory_roofline_fraction": self.memory_roofline_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def count_params(shapes_tree) -> float:
+    import jax
+
+    return float(
+        sum(math.prod(x.shape) for x in jax.tree.leaves(shapes_tree))
+    )
+
+
+def count_active_params(shapes_tree, specs_tree, top_k: int, n_experts: int) -> float:
+    """Active params: expert tensors (an 'experts' logical axis anywhere —
+    stacked layers prepend 'layers') scale by top_k/E."""
+    import jax
+
+    total = 0.0
+    leaves_shapes = jax.tree.leaves(shapes_tree)
+    leaves_specs = jax.tree.leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, tuple) or x is None
+    )
+    assert len(leaves_shapes) == len(leaves_specs)
+    for shp, spec in zip(leaves_shapes, leaves_specs):
+        n = math.prod(shp.shape)
+        if spec and "experts" in spec and n_experts:
+            n = n * top_k / n_experts
+        total += n
+    return float(total)
+
+
+def model_flops_estimate(
+    n_active_params: float, tokens: float, mode: str
+) -> float:
+    """6ND for train (fwd+bwd), 2ND for forward-only."""
+    per_tok = 6.0 if mode == "train" else 2.0
+    return per_tok * n_active_params * tokens
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-step FLOPs (the compute-term numerator)
+# ---------------------------------------------------------------------------
+#
+# XLA's cost analysis counts while-loop bodies once (trip counts are NOT
+# multiplied), so scanned-layer models under-report ~n_layers x and blockwise
+# attention under-reports its tile loops.  The dry-run therefore reports an
+# analytic FLOP count (exact einsum accounting from the configs, the same
+# practice as MaxText's TFLOPs reporting) and cross-validates it against
+# probe-extrapolated HLO flops (EXPERIMENTS.md shows both).
+
+
+def _attn_flops(cfg, B, S, T, causal_full=True):
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    qkv = 2 * B * S * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    wo = 2 * B * S * cfg.n_heads * hd * d
+    # blockwise/naive both evaluate masked full scores
+    sc = 4 * B * cfg.n_heads * S * T * hd
+    return qkv + wo + sc
+
+
+def _local_attn_flops(cfg, B, S):
+    return _attn_flops(cfg, B, S, min(cfg.window, S))
+
+
+def _mlp_flops(cfg, B, S, d_ff, n_mats):
+    return 2 * B * S * cfg.d_model * d_ff * n_mats
+
+
+def _moe_flops(cfg, B, S):
+    T = B * S
+    n_mats = 3 if cfg.mlp_type in ("swiglu", "geglu") else 2
+    f = 2 * T * cfg.d_model * cfg.n_experts  # router
+    f += 2 * T * cfg.top_k * cfg.d_model * cfg.moe_d_ff * n_mats
+    if cfg.dense_residual_d_ff:
+        f += 2 * T * cfg.d_model * cfg.dense_residual_d_ff * n_mats
+    return f
+
+
+def _ssd_flops(cfg, B, S):
+    from repro.models.ssm import ssm_dims
+
+    d_inner, H, P, N = ssm_dims(cfg)
+    G = cfg.ssm_groups
+    d = cfg.d_model
+    T = B * S
+    Q = min(cfg.ssm_chunk, S)
+    nc = -(-S // Q)
+    f = 2 * T * d * (2 * d_inner + 2 * G * N + H)  # in_proj
+    f += 2 * T * (d_inner + 2 * G * N) * cfg.ssm_conv_width  # depthwise conv
+    # intra-chunk: scores (Q^2 N H) + y_intra (Q^2 H P), per chunk per batch
+    f += 2 * B * nc * Q * Q * H * (N + P)
+    # chunk states + inter-chunk contribution
+    f += 4 * B * nc * Q * H * P * N
+    f += 2 * T * d_inner * d  # out_proj
+    return f
+
+
+def _block_flops(cfg, kind, B, S):
+    n_mats = 3 if cfg.mlp_type in ("swiglu", "geglu") else 2
+    if kind == "ssm":
+        return _ssd_flops(cfg, B, S)
+    attn = (
+        _local_attn_flops(cfg, B, S) if kind == "local" else _attn_flops(cfg, B, S, S)
+    )
+    if cfg.n_experts:
+        return attn + _moe_flops(cfg, B, S)
+    return attn + _mlp_flops(cfg, B, S, cfg.d_ff, n_mats)
+
+
+def analytic_forward_flops(cfg, B, S) -> float:
+    """One forward pass, full sequence."""
+    from repro.models.model import group_structure
+
+    if cfg.is_encdec:
+        Se = cfg.enc_seq
+        enc = cfg.enc_layers * (
+            _attn_flops(cfg, B, Se, Se) + _mlp_flops(cfg, B, Se, cfg.d_ff, 2)
+        )
+        dec = cfg.dec_layers * (
+            _attn_flops(cfg, B, S, S)
+            + _attn_flops(cfg, B, S, Se)  # cross
+            + _mlp_flops(cfg, B, S, cfg.d_ff, 2)
+        )
+        head = 2 * B * S * cfg.d_model * cfg.vocab
+        return enc + dec + head
+    kinds, n_groups = group_structure(cfg)
+    f = n_groups * sum(_block_flops(cfg, k, B, S) for k in kinds)
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        shared = (
+            2 * B * S * 2 * cfg.d_model * cfg.d_model  # concat proj
+            + _attn_flops(cfg, B, S, S)
+            + _mlp_flops(cfg, B, S, cfg.d_ff, 3 if cfg.mlp_type != "gelu_mlp" else 2)
+        )
+        f += n_groups * shared
+    f += 2 * B * S * cfg.d_model * cfg.vocab  # lm head
+    return f
+
+
+def analytic_decode_flops(cfg, B, ctx: int) -> float:
+    """One decode step against a ctx-long cache."""
+    from repro.models.model import group_structure
+
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+
+    def attn_dec(kind, T):
+        Tw = min(cfg.window, T) if kind == "local" else T
+        qkv = 2 * B * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+        wo = 2 * B * cfg.n_heads * hd * d
+        sc = 4 * B * cfg.n_heads * Tw * hd
+        return qkv + wo + sc
+
+    if cfg.is_encdec:
+        per = (
+            attn_dec("global", ctx)
+            + attn_dec("global", cfg.enc_seq)
+            + _mlp_flops(cfg, B, 1, cfg.d_ff, 2)
+        )
+        return cfg.dec_layers * per + 2 * B * d * cfg.vocab
+    kinds, n_groups = group_structure(cfg)
+    f = 0.0
+    for kind in kinds:
+        if kind == "ssm":
+            from repro.models.ssm import ssm_dims
+
+            d_inner, H, P, N = ssm_dims(cfg)
+            f += 2 * B * d * (2 * d_inner + 2 * cfg.ssm_groups * N + H)
+            f += 4 * B * H * P * N + 2 * B * d_inner * d
+        else:
+            f += attn_dec(kind, ctx)
+            if cfg.n_experts:
+                f += _moe_flops(cfg, B, 1)
+            else:
+                f += _mlp_flops(cfg, B, 1, cfg.d_ff, 3)
+    f *= n_groups
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        f += n_groups * (
+            2 * B * 2 * d * d + attn_dec("global", ctx) + _mlp_flops(cfg, B, 1, cfg.d_ff, 2)
+        )
+    return f + 2 * B * d * cfg.vocab
+
+
+def analytic_step_flops(cfg, shape_kind: str, B: int, S: int, remat: str) -> float:
+    """Full step: train = fwd(1 + recompute) + 2x fwd (bwd)."""
+    if shape_kind == "decode":
+        return analytic_decode_flops(cfg, B, S)
+    fwd = analytic_forward_flops(cfg, B, S)
+    if shape_kind == "prefill":
+        return fwd
+    recompute = {"none": 0.0, "dots": 0.5, "full": 1.0}[remat]
+    return fwd * (3.0 + recompute)
+
+
+def terms_from_compiled(
+    compiled, chips: int, model_flops: float, ideal_bytes: float = 0.0
+) -> RooflineTerms:
+    """The compiled module is the per-device SPMD program, so its
+    cost_analysis numbers are per-chip; totals scale by ``chips`` (the
+    brief's formulas then divide the totals back by ``chips``)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * chips
+    hbm = float(cost.get("bytes accessed", 0.0)) * chips
+    per_type = {
+        k: v * chips for k, v in collective_bytes(compiled.as_text()).items()
+    }
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes_by_type=per_type,
+        collective_bytes=collective_cost_bytes(per_type),
+        chips=chips,
+        model_flops=model_flops,
+        ideal_bytes=ideal_bytes,
+    )

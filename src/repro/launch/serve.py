@@ -1,0 +1,104 @@
+"""Batched serving driver: prefill + greedy decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config, get_smoke
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import prefill_input_specs
+from repro.launch.steps import build_serve_steps
+
+
+def serve(
+    arch: str,
+    batch: int = 4,
+    prompt_len: int = 32,
+    gen: int = 32,
+    smoke: bool = True,
+    model_parallel: int = 1,
+    seed: int = 0,
+):
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    mesh = make_host_mesh(model_parallel)
+    max_len = prompt_len + gen + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    shape = ShapeConfig("serve", prompt_len, batch, "prefill")
+    batch_specs = prefill_input_specs(cfg, shape)
+    bundle = build_serve_steps(cfg, mesh, batch, max_len, batch_specs=batch_specs)
+
+    from repro.models.api import model_api
+
+    api = model_api(cfg)
+    params = jax.jit(lambda k: api.init(k)[0], out_shardings=bundle.param_shardings)(
+        jax.random.PRNGKey(seed)
+    )
+
+    rng = np.random.default_rng(seed)
+    host_batch = {
+        "tokens": rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+    }
+    if cfg.family == "vlm":
+        host_batch["pixel_embeds"] = rng.standard_normal(
+            (batch, cfg.n_img_tokens, cfg.d_model)
+        ).astype(np.float32)
+    if cfg.family == "audio":
+        host_batch["frame_embeds"] = rng.standard_normal(
+            (batch, cfg.enc_seq, cfg.d_model)
+        ).astype(np.float32)
+
+    t0 = time.time()
+    logits, cache = bundle.prefill_fn(params, host_batch)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    generated = [np.asarray(next_tok)]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        logits, cache = bundle.decode_fn(params, cache, next_tok)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(np.asarray(next_tok))
+    jax.block_until_ready(next_tok)
+    t_decode = time.time() - t0
+
+    out = np.concatenate(generated, axis=1)
+    tps = batch * (gen - 1) / max(t_decode, 1e-9)
+    print(
+        f"prefill {prompt_len} toks x{batch}: {t_prefill*1e3:.1f}ms; "
+        f"decode {gen-1} steps: {t_decode*1e3:.1f}ms ({tps:.1f} tok/s)"
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+    out = serve(
+        args.arch,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen=args.gen,
+        smoke=args.smoke,
+        model_parallel=args.model_parallel,
+    )
+    print("generated token ids (first row):", out[0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Conventions (per the assignment brief):
+  * LM shapes are (seq_len, global_batch); ``train_*``/``prefill_*`` lower
+    full-sequence steps; ``decode_*``/``long_*`` lower ``serve_step`` — one
+    new token against a KV cache of seq_len.
+  * VLM: seq_len counts image+text tokens; the patch frontend is a stub, so
+    ``pixel_embeds`` arrive precomputed (B, n_img, d_model).
+  * audio (whisper): seq_len applies to the decoder; the conv/mel frontend
+    is a stub providing (B, 1500, d_model) frame embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        s_txt = S - cfg.n_img_tokens
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, s_txt), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, s_txt), jnp.int32),
+            "pixel_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16
+            ),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "frame_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+            ),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)

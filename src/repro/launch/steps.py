@@ -1,0 +1,318 @@
+"""Step builders: jitted train/prefill/decode steps with explicit shardings.
+
+``abstract_init`` traces the model init once to get both the parameter
+ShapeDtypeStructs (no allocation — this is how the 480B configs are lowered
+on a CPU host) and the logical-axis spec tree (captured as a side effect of
+the same trace, so shapes and specs can never drift).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models.api import ModelAPI, model_api
+from repro.optim import adamw, clip_by_global_norm
+from repro.optim.optimizers import Optimizer, OptState
+from repro.parallel.sharding import (
+    MULTI_POD_RULES,
+    SINGLE_POD_RULES,
+    batch_pspec,
+    constrain,
+    logical_to_pspec,
+    param_shardings,
+    sharding_context,
+)
+
+
+def rules_for(mesh: Mesh) -> dict:
+    return MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+
+
+HBM_BUDGET_BYTES = 12e9  # leave headroom under 16 GB/chip
+
+
+def serve_rules_for(mesh: Mesh, param_bytes: float) -> dict:
+    """Inference sharding policy: if TP-only fits HBM, replicate params over
+    the data/pod axes (no per-step FSDP all-gathers); otherwise keep the
+    FSDP sharding (the 480B/314B MoEs) and pay the gather."""
+    rules = dict(rules_for(mesh))
+    tp = mesh.shape.get("model", 1)
+    if param_bytes / tp <= HBM_BUDGET_BYTES:
+        rules["embed"] = ()
+        rules["experts"] = ()  # weights replicate; token buffers still
+        # shard via "expert_capacity" -> data
+    return rules
+
+
+def abstract_init(api: ModelAPI, seed: int = 0):
+    """Returns (param ShapeDtypeStruct tree, logical spec tree)."""
+    captured = {}
+
+    def f(key):
+        params, specs = api.init(key)
+        captured["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(seed))
+    return shapes, captured["specs"]
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh, rules: dict | None = None):
+    """Shard the leading batch dim with divisibility fallback (long_500k has
+    global_batch=1, which must not be forced onto a 16-way axis)."""
+    rules = rules or rules_for(mesh)
+    return {
+        k: NamedSharding(
+            mesh,
+            logical_to_pspec(
+                ("batch",) + (None,) * (len(v.shape) - 1), v.shape, mesh, rules
+            ),
+        )
+        for k, v in batch_specs.items()
+    }
+
+
+# --------------------------------------------------------------------- cache
+
+_CACHE_LOGICAL = {
+    # unified LM caches; cache seq axis shards over "model" (split-K decode)
+    "k": ("layers", None, "batch", "kv_seq", "kv", None),
+    "v": ("layers", None, "batch", "kv_seq", "kv", None),
+    "conv": ("layers", None, "batch", None, None),
+    "ssd": ("layers", None, "batch", None, None, None),
+    "shared_k": ("layers", "batch", "kv_seq", "kv", None),
+    "shared_v": ("layers", "batch", "kv_seq", "kv", None),
+    # enc-dec caches (layers, batch, seq, kv, hd)
+    "xk": ("layers", "batch", "kv_seq", "kv", None),
+    "xv": ("layers", "batch", "kv_seq", "kv", None),
+    "pos": (),
+}
+
+_ENCDEC_CACHE_LOGICAL = dict(_CACHE_LOGICAL)
+_ENCDEC_CACHE_LOGICAL.update(
+    {
+        "k": ("layers", "batch", "kv_seq", "kv", None),
+        "v": ("layers", "batch", "kv_seq", "kv", None),
+    }
+)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shapes: dict, mesh: Mesh, rules: dict | None = None):
+    rules = rules or rules_for(mesh)
+    table = _ENCDEC_CACHE_LOGICAL if cfg.is_encdec else _CACHE_LOGICAL
+
+    def shard(k, v, drop_layers: bool):
+        if k == "pos":
+            logical = ()
+        else:
+            logical = table[k][1:] if drop_layers else table[k]
+            logical = logical[: len(v.shape)]
+        return NamedSharding(mesh, logical_to_pspec(tuple(logical), v.shape, mesh, rules))
+
+    out = {}
+    for k, v in cache_shapes.items():
+        if k == "groups":  # unrolled-decode layout: per-group buffer dicts
+            out[k] = [
+                {kk: shard(kk, vv, True) for kk, vv in g.items()} for g in v
+            ]
+        else:
+            out[k] = shard(k, v, False)
+    return out
+
+
+# ---------------------------------------------------------------- moe wiring
+
+
+def _wire_expert_constraint(cfg: ModelConfig):
+    if cfg.n_experts:
+        moe_lib.set_expert_constraint(
+            lambda t: constrain(t, ("experts", "expert_capacity", None))
+        )
+    else:
+        moe_lib.set_expert_constraint(None)
+
+
+# ---------------------------------------------------------------- train step
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepBundle:
+    step_fn: Any  # jitted (params, opt_state, batch) -> (params, opt_state, metrics)
+    param_shardings: Any
+    opt_shardings: Any
+    batch_shardings: Any
+    param_shapes: Any
+    opt_shapes: Any
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    optimizer: Optimizer | None = None,
+    batch_specs: dict | None = None,
+    grad_clip: float = 1.0,
+    donate: bool = True,
+    int8_grads: bool = False,
+    microbatch: int = 1,
+) -> TrainStepBundle:
+    """``microbatch > 1`` splits the global batch into that many
+    sequentially-accumulated micro-steps (gradient accumulation) — the
+    activation-memory escape hatch for the 480B-class train shapes."""
+    api = model_api(cfg)
+    optimizer = optimizer or adamw(lr=3e-4)
+    rules = rules_for(mesh)
+    _wire_expert_constraint(cfg)
+
+    shapes, specs = abstract_init(api)
+    p_shard = param_shardings(specs, shapes, mesh, rules)
+    opt_shapes = jax.eval_shape(optimizer.init, shapes)
+    opt_shard = OptState(
+        step=NamedSharding(mesh, P()),
+        mu=param_shardings(specs, opt_shapes.mu, mesh, rules),
+        nu=(
+            param_shardings(specs, opt_shapes.nu, mesh, rules)
+            if opt_shapes.nu is not None
+            else None
+        ),
+    )
+
+    def _grads(params, batch):
+        if microbatch <= 1:
+            return jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+
+        def split(x):
+            return x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:])
+
+        micro = {k: split(v) for k, v in batch.items()}
+        mb0 = {k: v[0] for k, v in micro.items()}
+        metrics_shape = jax.eval_shape(lambda p, b: api.loss(p, b)[1], params, mb0)
+
+        def acc_step(carry, mb):
+            acc, loss_sum, met_sum = carry
+            (loss, metrics), g = jax.value_and_grad(api.loss, has_aux=True)(
+                params, mb
+            )
+            acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / microbatch, acc, g
+            )
+            met_sum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / microbatch, met_sum, metrics
+            )
+            return (acc, loss_sum + loss / microbatch, met_sum), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), metrics_shape)
+        (g, loss, metrics), _ = jax.lax.scan(
+            acc_step, (zero_g, jnp.zeros(()), zero_m), micro
+        )
+        return (loss, metrics), g
+
+    def step_fn(params, opt_state, batch):
+        with sharding_context(mesh, rules):
+            (loss, metrics), grads = _grads(params, batch)
+            if int8_grads:
+                from repro.optim import compress_grads, decompress_grads
+
+                grads = decompress_grads(compress_grads(grads))
+                grads = jax.tree.map(
+                    lambda g, p: g.astype(p.dtype), grads, params
+                )
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            return new_params, new_opt, metrics
+
+    b_shard = batch_shardings(batch_specs, mesh) if batch_specs else None
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(p_shard, opt_shard, b_shard),
+        out_shardings=(p_shard, opt_shard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return TrainStepBundle(
+        step_fn=jitted,
+        param_shardings=p_shard,
+        opt_shardings=opt_shard,
+        batch_shardings=b_shard,
+        param_shapes=shapes,
+        opt_shapes=opt_shapes,
+    )
+
+
+# ---------------------------------------------------------------- serve step
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStepBundle:
+    prefill_fn: Any
+    decode_fn: Any
+    param_shardings: Any
+    cache_shardings: Any
+    param_shapes: Any
+    cache_shapes: Any
+
+
+def build_serve_steps(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    batch_size: int,
+    max_len: int,
+    batch_specs: dict | None = None,
+    donate_cache: bool = True,
+    rules: dict | None = None,
+) -> ServeStepBundle:
+    api = model_api(cfg)
+    _wire_expert_constraint(cfg)
+
+    shapes, specs = abstract_init(api)
+    if rules is None:
+        import math as _math
+
+        param_bytes = sum(
+            _math.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(shapes)
+        )
+        rules = serve_rules_for(mesh, param_bytes)
+    p_shard = param_shardings(specs, shapes, mesh, rules)
+    cache_shapes = jax.eval_shape(partial(api.init_cache, batch_size, max_len))
+    c_shard = cache_shardings(cfg, cache_shapes, mesh, rules)
+
+    def prefill_fn(params, batch):
+        with sharding_context(mesh, rules):
+            return api.prefill(params, batch, max_len)
+
+    def decode_fn(params, cache, tokens):
+        with sharding_context(mesh, rules):
+            return api.decode_step(params, cache, tokens)
+
+    b_shard = batch_shardings(batch_specs, mesh, rules) if batch_specs else None
+    tok_shard = NamedSharding(
+        mesh,
+        logical_to_pspec(("batch", None), (batch_size, 1), mesh, rules),
+    )
+    jit_prefill = jax.jit(
+        prefill_fn,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(None, c_shard),
+    )
+    jit_decode = jax.jit(
+        decode_fn,
+        in_shardings=(p_shard, c_shard, tok_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,) if donate_cache else (),
+    )
+    return ServeStepBundle(
+        prefill_fn=jit_prefill,
+        decode_fn=jit_decode,
+        param_shardings=p_shard,
+        cache_shardings=c_shard,
+        param_shapes=shapes,
+        cache_shapes=cache_shapes,
+    )

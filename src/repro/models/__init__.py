@@ -1,0 +1,1 @@
+"""Model zoo: unified LM (dense/moe/ssm/hybrid/vlm) + encoder-decoder."""

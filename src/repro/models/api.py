@@ -1,0 +1,113 @@
+"""Family-dispatching model API: one call surface for every architecture.
+
+    api = model_api(cfg)
+    params, specs = api.init(rng)
+    logits, aux   = api.forward(params, batch)
+    loss, metrics = api.loss(params, batch)
+    logits, cache = api.prefill(params, batch, max_len)
+    logits, cache = api.decode_step(params, cache, tokens)
+    cache         = api.init_cache(batch_size, max_len)
+
+``batch`` is a dict with family-dependent keys:
+  dense/moe/ssm/hybrid: tokens, labels
+  vlm:                  tokens, labels, pixel_embeds
+  audio (whisper):      tokens, labels, frame_embeds
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, model
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def model_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encdec:
+        def init(rng):
+            return encdec.init_model(rng, cfg)
+
+        def forward(params, batch):
+            return encdec.forward(params, cfg, batch["frame_embeds"], batch["tokens"])
+
+        def loss(params, batch):
+            logits, aux = encdec.forward(
+                params, cfg, batch["frame_embeds"], batch["tokens"]
+            )
+            return _xent(logits, batch["labels"])
+
+        def prefill(params, batch, max_len):
+            return encdec.prefill(
+                params, cfg, batch["frame_embeds"], batch["tokens"], max_len
+            )
+
+        def decode_step(params, cache, tokens):
+            return encdec.decode_step(params, cfg, cache, tokens)
+
+        def init_cache(batch_size, max_len):
+            return encdec.init_cache(cfg, batch_size, max_len)
+
+    else:
+        def init(rng):
+            return model.init_model(rng, cfg)
+
+        def forward(params, batch):
+            return model.forward(
+                params, cfg, batch["tokens"], pixel_embeds=batch.get("pixel_embeds")
+            )
+
+        def loss(params, batch):
+            return model.lm_loss(
+                params,
+                cfg,
+                batch["tokens"],
+                batch["labels"],
+                pixel_embeds=batch.get("pixel_embeds"),
+            )
+
+        def prefill(params, batch, max_len):
+            return model.prefill(
+                params,
+                cfg,
+                batch["tokens"],
+                max_len,
+                pixel_embeds=batch.get("pixel_embeds"),
+            )
+
+        def decode_step(params, cache, tokens):
+            return model.decode_step(params, cfg, cache, tokens)
+
+        def init_cache(batch_size, max_len):
+            return model.init_cache(cfg, batch_size, max_len)
+
+    return ModelAPI(
+        cfg=cfg,
+        init=init,
+        forward=forward,
+        loss=loss,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+    )
+
+
+def _xent(logits, labels):
+    from repro.models.model import sharded_xent
+
+    loss = sharded_xent(logits, labels)
+    return loss, {"ce": loss, "aux": jnp.zeros(())}

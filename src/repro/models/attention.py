@@ -1,0 +1,288 @@
+"""GQA/MQA attention with causal, sliding-window, softcap and KV-cache paths.
+
+Three interchangeable inner implementations (config ``attn_impl``):
+  * ``naive``     — one fused einsum chain; best for short sequences.
+  * ``blockwise`` — online-softmax over (Q-block, KV-block) tiles in pure
+                    jnp via ``lax.scan``; memory O(S * block) instead of
+                    O(S^2); the XLA-side equivalent of the Pallas flash
+                    kernel, used by the dry-run (Pallas can't lower to the
+                    CPU backend).
+  * ``pallas``    — the Pallas flash-attention kernel (TPU target).
+
+The working-set math that picks block sizes lives in
+``repro.core.vmem_planner`` — the paper's GLB sizing applied to VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_mrope, apply_norm, apply_rope, dense_init, norm_init, softcap
+
+NEG_INF = -2.3819763e38  # bf16-safe large negative
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, "embed", "heads", dtype)
+    p["wk"], s["wk"] = dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, "embed", "kv", dtype)
+    p["wv"], s["wv"] = dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, "embed", "kv", dtype)
+    p["wo"], s["wo"] = dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, "heads", "embed", dtype)
+    if cfg.use_qk_norm:
+        p["q_norm"], s["q_norm"] = norm_init(hd, "rmsnorm", dtype)
+        p["k_norm"], s["k_norm"] = norm_init(hd, "rmsnorm", dtype)
+    return p, s
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions, kv_x=None, rope: bool = True):
+    """Returns q: (B,S,H,hd), k/v: (B,T,KV,hd)."""
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    T = kv_x.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (kv_x @ p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = (kv_x @ p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    if rope and cfg.pos_embed in ("rope", "mrope"):
+        if cfg.pos_embed == "mrope":
+            q = apply_mrope(q, positions, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(S, T, mode: str, window: int, q_offset=0, dtype=jnp.float32):
+    qi = jnp.arange(S)[:, None] + q_offset
+    ki = jnp.arange(T)[None, :]
+    if mode == "bidir":
+        return jnp.zeros((S, T), dtype)
+    allowed = ki <= qi
+    if mode == "local":
+        allowed &= ki > qi - window
+    return jnp.where(allowed, 0.0, NEG_INF).astype(dtype)
+
+
+def _sdpa_naive(q, k, v, cfg: ModelConfig, mode: str):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd). KV heads expanded for TP sharding."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = scores + _mask_bias(S, T, mode, cfg.window)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out
+
+
+def _expand_kv(k, H: int):
+    """Repeat KV heads up to H so the head axis stays TP-shardable.
+
+    A (KV, G) head split would leave both factors indivisible by a 16-way
+    "model" axis (e.g. KV=8, G=4), silently replicating every attention
+    tensor; expanded heads shard H-way and GSPMD reduces the repeat's
+    gradient back per KV head."""
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def _block_mask(q0, k0, bq, bkv, T, mode, window):
+    q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = k_pos < T
+    if mode != "bidir":
+        mask &= k_pos <= q_pos
+        if mode == "local":
+            mask &= k_pos > q_pos - window
+    return mask
+
+
+def _blockwise_fwd_core(q, k, v, mode, window, cap, block_q, block_kv):
+    """q,k,v head-major (B,H,S,hd)/(B,H,T,hd). Returns (out, lse)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scale = hd ** -0.5
+    bq, bkv = min(block_q, S), min(block_kv, T)
+    Sp, Tp = -(-S // bq) * bq, -(-T // bkv) * bkv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    nq, nk = Sp // bq, Tp // bkv
+    kb = jnp.moveaxis(kp.reshape(B, H, nk, bkv, hd), 2, 0)
+    vb = jnp.moveaxis(vp.reshape(B, H, nk, bkv, hd), 2, 0)
+
+    def q_step(args):
+        qi, q_tile = args  # q_tile: (B,H,bq,hd)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_t, v_t = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_tile, k_t).astype(jnp.float32)
+            s = softcap(s * scale, cap)
+            s = jnp.where(_block_mask(qi * bq, ki * bkv, bq, bkv, T, mode, window), s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_t.dtype), v_t
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, q.shape[-1]), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    qb = jnp.moveaxis(qp.reshape(B, H, nq, bq, hd), 2, 0)
+    outs, lses = jax.lax.map(q_step, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, Sp, hd)[:, :, :S]
+    lse = jnp.moveaxis(lses, 0, 2).reshape(B, H, Sp)[:, :, :S]
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_jnp(q, k, v, mode, window, cap, block_q, block_kv):
+    out, _ = _blockwise_fwd_core(q, k, v, mode, window, cap, block_q, block_kv)
+    return out
+
+
+def _flash_jnp_fwd(q, k, v, mode, window, cap, block_q, block_kv):
+    out, lse = _blockwise_fwd_core(q, k, v, mode, window, cap, block_q, block_kv)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_jnp_bwd(mode, window, cap, block_q, block_kv, res, dout):
+    """FlashAttention-2 style backward: recompute scores per kv block; the
+    only O(S) state is the dq accumulator.  Memory stays O(S * block)."""
+    q, k, v, out, lse = res
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scale = hd ** -0.5
+    bkv = min(block_kv, T)
+    Tp = -(-T // bkv) * bkv
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    nk = Tp // bkv
+    kb = jnp.moveaxis(kp.reshape(B, H, nk, bkv, hd), 2, 0)
+    vb = jnp.moveaxis(vp.reshape(B, H, nk, bkv, hd), 2, 0)
+    D = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)  # (B,H,S)
+
+    def kv_step(dq, inp):
+        ki, k_t, v_t = inp
+        s_raw = jnp.einsum("bhqd,bhkd->bhqk", q, k_t).astype(jnp.float32) * scale
+        s = softcap(s_raw, cap)
+        mask = _block_mask(0, ki * bkv, S, bkv, T, mode, window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (B,H,S,bkv)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dout.astype(jnp.float32), v_t.astype(jnp.float32))
+        ds = p * (dp - D[..., None])
+        if cap is not None:
+            t = jnp.tanh(s_raw / cap)
+            ds = ds * (1.0 - t * t)
+        ds = jnp.where(mask, ds, 0.0)
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, k_t.astype(jnp.float32)) * scale
+        dk_t = jnp.einsum("bhqk,bhqd->bhkd", ds, q.astype(jnp.float32)) * scale
+        dv_t = jnp.einsum("bhqk,bhqd->bhkd", p, dout.astype(jnp.float32))
+        return dq, (dk_t, dv_t)
+
+    dq0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, (jnp.arange(nk), kb, vb))
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, H, Tp, hd)[:, :, :T]
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, H, Tp, hd)[:, :, :T]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_jnp.defvjp(_flash_jnp_fwd, _flash_jnp_bwd)
+
+
+def _sdpa_blockwise(q, k, v, cfg: ModelConfig, mode: str, block_q=512, block_kv=1024):
+    """Memory-efficient blockwise attention (XLA flash equivalent)."""
+    B, S, H, hd = q.shape
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    qm = jnp.swapaxes(q, 1, 2)
+    km = jnp.swapaxes(k, 1, 2)
+    vm = jnp.swapaxes(v, 1, 2)
+    window = cfg.window if mode == "local" else None
+    out = _flash_jnp(qm, km, vm, mode, window, cfg.attn_softcap, block_q, block_kv)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def sdpa(q, k, v, cfg: ModelConfig, mode: str):
+    impl = cfg.attn_impl
+    if impl == "blockwise":
+        return _sdpa_blockwise(q, k, v, cfg, mode)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(
+            q, k, v,
+            causal=(mode != "bidir"),
+            window=cfg.window if mode == "local" else None,
+            softcap=cfg.attn_softcap,
+        )
+    return _sdpa_naive(q, k, v, cfg, mode)
+
+
+def attn_forward(p, x, cfg: ModelConfig, mode: str, positions, kv_x=None):
+    """Full-sequence attention (train / prefill). Returns (B,S,d_model)."""
+    q, k, v = _project_qkv(p, cfg, x, positions, kv_x=kv_x, rope=kv_x is None)
+    out = sdpa(q, k, v, cfg, mode)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(p, x, cfg: ModelConfig, mode: str, k_cache, v_cache, pos, positions):
+    """Single-token decode. x: (B,1,d). k_cache/v_cache: (B,T,KV,hd).
+    ``pos``: scalar current position (tokens < pos are valid).
+    Returns (out, k_cache, v_cache)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, pos, 0, 0))
+    T = k_cache.shape[1]
+    KV = cfg.n_kv_heads
+    G = cfg.n_heads // KV
+    qh = q.reshape(B, 1, KV, G, hd)
+    scale = hd ** -0.5
+    # f32 accumulation inside the dot: no f32 copy of the cache materialises
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", qh, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    ki = jnp.arange(T)[None, None, None, None, :]
+    valid = ki <= pos
+    if mode == "local":
+        valid &= ki > pos - cfg.window
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v_cache)
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, k_cache, v_cache

@@ -1,0 +1,251 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment brief: ``input_specs``
+provides precomputed frame embeddings (B, enc_seq, d_model).  Encoder =
+bidirectional pre-LN transformer with sinusoidal positions; decoder =
+causal self-attn + cross-attn + GELU MLP with learned positions; output
+head tied to the decoder token embedding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    init_mlp,
+    norm_init,
+    sinusoidal_positions,
+)
+from repro.parallel.sharding import constrain
+
+
+def _act_axes(cfg: ModelConfig):
+    return ("batch", "seq_act" if cfg.shard_seq_activations else None, None)
+
+
+def _maybe_remat(body, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return body
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat == "dots"
+        else jax.checkpoint_policies.nothing_saveable
+    )
+    return jax.checkpoint(body, policy=policy)
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p, s = {}, {}
+    p["ln_attn"], s["ln_attn"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["attn"], s["attn"] = attn.init_attention(ks[0], cfg)
+    p["ln_mlp"], s["ln_mlp"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["mlp"], s["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p, s
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p, s = {}, {}
+    p["ln_self"], s["ln_self"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["self_attn"], s["self_attn"] = attn.init_attention(ks[0], cfg)
+    p["ln_cross"], s["ln_cross"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["cross_attn"], s["cross_attn"] = attn.init_attention(ks[1], cfg, cross=True)
+    p["ln_mlp"], s["ln_mlp"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["mlp"], s["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p, s
+
+
+def init_model(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.enc_layers + cfg.dec_layers + 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)
+    p["dec_pos"] = (
+        jax.random.normal(keys[1], (cfg.max_position, cfg.d_model), jnp.float32) * 0.01
+    ).astype(dtype)
+    s["dec_pos"] = (None, "embed")
+
+    enc = [_init_enc_block(keys[2 + i], cfg) for i in range(cfg.enc_layers)]
+    p["enc_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *[b[0] for b in enc])
+    s["enc_blocks"] = jax.tree.map(
+        lambda spec: ("layers",) + tuple(spec), enc[0][1],
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    dec = [
+        _init_dec_block(keys[2 + cfg.enc_layers + i], cfg)
+        for i in range(cfg.dec_layers)
+    ]
+    p["dec_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *[b[0] for b in dec])
+    s["dec_blocks"] = jax.tree.map(
+        lambda spec: ("layers",) + tuple(spec), dec[0][1],
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    p["enc_final_norm"], s["enc_final_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["final_norm"], s["final_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    return p, s
+
+
+def encode(params, cfg: ModelConfig, frame_embeds):
+    """frame_embeds: (B, T_enc, d) from the stub frontend."""
+    x = frame_embeds.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, bp):
+        h = apply_norm(bp["ln_attn"], x, cfg.norm)
+        h = attn.attn_forward(bp["attn"], h, cfg, "bidir", positions)
+        x = x + h
+        h = apply_norm(bp["ln_mlp"], x, cfg.norm)
+        x = x + apply_mlp(bp["mlp"], h, cfg.mlp_type)
+        return constrain(x, _act_axes(cfg)), None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+
+def _dec_block_fwd(bp, cfg, x, enc_out, positions):
+    h = apply_norm(bp["ln_self"], x, cfg.norm)
+    q, k, v = attn._project_qkv(bp["self_attn"], cfg, h, positions, rope=False)
+    o = attn.sdpa(q, k, v, cfg, "global")
+    x = x + o.reshape(*x.shape[:2], -1) @ bp["self_attn"]["wo"]
+    h = apply_norm(bp["ln_cross"], x, cfg.norm)
+    h = attn.attn_forward(bp["cross_attn"], h, cfg, "bidir", positions, kv_x=enc_out)
+    x = x + h
+    h = apply_norm(bp["ln_mlp"], x, cfg.norm)
+    x = x + apply_mlp(bp["mlp"], h, cfg.mlp_type)
+    return constrain(x, _act_axes(cfg)), (k, v)
+
+
+def forward(params, cfg: ModelConfig, frame_embeds, tokens):
+    """Teacher-forced training forward. Returns (logits, aux=0)."""
+    enc_out = encode(params, cfg, frame_embeds)
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + params["dec_pos"][:S][None].astype(x.dtype)
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, bp):
+        x, _ = _dec_block_fwd(bp, cfg, x, enc_out, positions)
+        return x, None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return constrain(logits, ("batch", None, "vocab")), 0.0
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    L = cfg.dec_layers
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        # cross K/V precomputed at prefill
+        "xk": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype),
+        "xv": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, frame_embeds, tokens, max_len: int):
+    """Encode audio + run decoder prompt; returns (last logits, cache)."""
+    enc_out = encode(params, cfg, frame_embeds)
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + params["dec_pos"][:S][None].astype(x.dtype)
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, bp):
+        # cross K/V for this layer
+        hd = cfg.resolved_head_dim
+        T = enc_out.shape[1]
+        xk = (enc_out @ bp["cross_attn"]["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+        xv = (enc_out @ bp["cross_attn"]["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+        x, (k, v) = _dec_block_fwd(bp, cfg, x, enc_out, positions)
+        return x, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec_blocks"])
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0)
+    )
+    cache["xk"], cache["xv"] = xks.astype(cache["xk"].dtype), xvs.astype(cache["xv"].dtype)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """tokens: (B,1). Cross-attends to cached encoder K/V."""
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + jax.lax.dynamic_slice(
+        params["dec_pos"], (pos, 0), (1, cfg.d_model)
+    )[None].astype(x.dtype)
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    hd = cfg.resolved_head_dim
+
+    def body(x, scan_in):
+        bp, gc = scan_in
+        new_gc = dict(gc)
+        # self attention with cache
+        h = apply_norm(bp["ln_self"], x, cfg.norm)
+        q, k_new, v_new = attn._project_qkv(bp["self_attn"], cfg, h, positions, rope=False)
+        kc = jax.lax.dynamic_update_slice(gc["k"], k_new, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(gc["v"], v_new, (0, pos, 0, 0))
+        o = _cached_attn(q, kc, vc, cfg, pos)
+        x = x + o.reshape(B, 1, -1) @ bp["self_attn"]["wo"]
+        new_gc["k"], new_gc["v"] = kc, vc
+        # cross attention against cached encoder K/V
+        h = apply_norm(bp["ln_cross"], x, cfg.norm)
+        q = (h @ bp["cross_attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        o = _cached_attn(q, gc["xk"], gc["xv"], cfg, None)
+        x = x + o.reshape(B, 1, -1) @ bp["cross_attn"]["wo"]
+        # mlp
+        h = apply_norm(bp["ln_mlp"], x, cfg.norm)
+        x = x + apply_mlp(bp["mlp"], h, cfg.mlp_type)
+        return x, new_gc
+
+    group_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], group_caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    new_cache = dict(new_caches)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def _cached_attn(q, k_cache, v_cache, cfg: ModelConfig, pos):
+    """q: (B,1,H,hd) against full cache; pos=None -> all positions valid."""
+    B, _, H, hd = q.shape
+    KV = cfg.n_kv_heads
+    G = H // KV
+    qh = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qh, k_cache).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if pos is not None:
+        T = k_cache.shape[1]
+        valid = jnp.arange(T)[None, None, None, None, :] <= pos
+        scores = jnp.where(valid, scores, attn.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v_cache)

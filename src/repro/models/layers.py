@@ -1,0 +1,156 @@
+"""Base layers: params-as-pytrees modules with logical sharding axes.
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors
+``params`` with tuples of *logical axis names* per array dimension.
+``repro.parallel.sharding`` maps logical axes -> mesh axes.
+
+Logical axes used across the zoo:
+  "batch"   activation batch            -> ("pod","data")
+  "embed"   d_model dims of weights     -> "data" (FSDP / ZeRO-3)
+  "heads"   attention head dim          -> "model"
+  "kv"      kv-head dim                 -> "model" when divisible
+  "ffn"     MLP hidden                  -> "model"
+  "vocab"   vocabulary                  -> "model"
+  "experts" MoE expert dim              -> "data" when divisible
+  "layers"  stacked scan dim            -> replicated
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Specs = dict
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, d_in: int, d_out: int, in_axis: str, out_axis: str, dtype):
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * (
+        1.0 / math.sqrt(d_in)
+    )
+    return w.astype(dtype), (in_axis, out_axis)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return w.astype(dtype), ("vocab", "embed")
+
+
+def norm_init(d: int, kind: str, dtype):
+    # rmsnorm follows the gemma "(1 + scale)" convention with scale == 0 at
+    # init, which equals a standard unit-scale RMSNorm.
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}, {"scale": ("embed",)}
+    return (
+        {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"].astype(
+            jnp.float32
+        ) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> tuple[Params, Specs]:
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    if mlp_type in ("swiglu", "geglu"):
+        p["gate"], s["gate"] = dense_init(ks[0], d_model, d_ff, "embed", "ffn", dtype)
+        p["up"], s["up"] = dense_init(ks[1], d_model, d_ff, "embed", "ffn", dtype)
+        p["down"], s["down"] = dense_init(ks[2], d_ff, d_model, "ffn", "embed", dtype)
+    else:  # gelu_mlp
+        p["up"], s["up"] = dense_init(ks[0], d_model, d_ff, "embed", "ffn", dtype)
+        p["down"], s["down"] = dense_init(ks[1], d_ff, d_model, "ffn", "embed", dtype)
+    return p, s
+
+
+def apply_mlp(p: Params, x: jax.Array, mlp_type: str) -> jax.Array:
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["gate"], approximate=True) * (x @ p["up"])
+    else:
+        h = jax.nn.gelu(x @ p["up"], approximate=True)
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    ang = ang[..., None, :]  # (..., S, 1, D/2) broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions_thw: jax.Array, theta: float, sections=(16, 24, 24)
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head_dim/2 frequency slots are split
+    into (temporal, height, width) sections, each rotated by its own
+    position stream.  x: (B, S, H, D); positions_thw: (3, B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    n = d // 2
+    sec = jnp.zeros((n,), jnp.int32)
+    s0, s1, _ = sections
+    sec = sec.at[s0 : s0 + s1].set(1)
+    sec = sec.at[s0 + s1 :].set(2)
+    # pick the position stream per frequency slot
+    pos = positions_thw.astype(jnp.float32)  # (3, B, S)
+    pos_per_slot = pos[sec]  # (n, B, S) via fancy index on axis 0
+    ang = jnp.einsum("nbs,n->bsn", pos_per_slot, freqs)  # (B, S, n)
+    ang = ang[:, :, None, :]  # (B, S, 1, n)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

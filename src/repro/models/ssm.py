@@ -1,0 +1,280 @@
+"""Mamba-2 (SSD — state-space duality) blocks, arXiv:2405.21060.
+
+Forward (train/prefill) uses the chunked SSD algorithm:
+  within each chunk of length Q the output is a masked (decay-weighted)
+  attention-like product  Y_intra = (C B^T ∘ L) X ;  across chunks a small
+  recurrence carries the (H, P, N) state.  This is O(S*Q) instead of O(S^2)
+  and is exactly the structure the Pallas ``ssd_scan`` kernel tiles.
+
+Decode keeps a per-layer recurrent state (h: (B, H, P, N), conv buffer) and
+costs O(1) per token — which is why the SSM/hybrid archs run ``long_500k``.
+
+Layer layout follows mamba2: in_proj -> [z, x, B, C, dt], causal depthwise
+conv on (x, B, C), SSD, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, norm_init, apply_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    G = cfg.ssm_groups
+    conv_dim = d_inner + 2 * G * N
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    # The fused in_proj output mixes segments of unequal widths (z, x, B, C,
+    # dt), so its column dim is kept replicated; FSDP shards the "embed"
+    # rows.  SSD head compute is replicated across the TP axis (head counts
+    # are not TP-divisible for the assigned SSM archs — see DESIGN.md).
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    p["in_proj"], s["in_proj"] = dense_init(ks[0], d, d_in_proj, "embed", None, dtype)
+    p["conv_w"] = (
+        jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim), jnp.float32) * 0.2
+    ).astype(dtype)
+    s["conv_w"] = (None, None)
+    p["conv_b"] = jnp.zeros((conv_dim,), dtype)
+    s["conv_b"] = (None,)
+    p["A_log"] = jnp.log(
+        jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+    )  # per-head decay
+    s["A_log"] = (None,)
+    p["D"] = jnp.ones((H,), jnp.float32)
+    s["D"] = (None,)
+    p["dt_bias"] = jnp.full((H,), math.log(math.e - 1), jnp.float32)  # softplus^-1(1)
+    s["dt_bias"] = (None,)
+    p["norm"], s["norm"] = norm_init(d_inner, "rmsnorm", dtype)
+    s["norm"] = {"scale": (None,)}
+    p["out_proj"], s["out_proj"] = dense_init(ks[2], d_inner, d, None, "embed", dtype)
+    return p, s
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, new_state)
+    where state is the trailing K-1 inputs (for decode).
+
+    The full-sequence path uses one fused ``conv_general_dilated`` — the
+    shifted-slice formulation reads the (B,S,C) activation K times, which
+    dominated the mamba2 prefill memory roofline (EXPERIMENTS.md §Perf)."""
+    K = w.shape[0]
+    if state is None and x.shape[1] > 1:
+        y = jax.lax.conv_general_dilated(
+            x,
+            w[:, None, :].astype(x.dtype),  # (K, 1, C) depthwise filters
+            window_strides=(1,),
+            padding=[(K - 1, 0)],
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=x.shape[2],
+        ) + b
+        new_state = x[:, -(K - 1) :]
+        return jax.nn.silu(y), new_state
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1) :]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(x, dt, A, B_, C_, chunk: int):
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,) negative decay rates;
+    B_, C_: (B,S,G,N). Returns y: (B,S,H,P) and final state (B,H,P,N)."""
+    Bsz, S_orig, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(chunk, S_orig)
+    # pad tail to a chunk multiple; dt=0 pads are decay-1/input-0 no-ops.
+    S = -(-S_orig // Q) * Q
+    if S != S_orig:
+        pad = ((0, 0), (0, S - S_orig), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        B_ = jnp.pad(B_, pad)
+        C_ = jnp.pad(C_, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, S - S_orig), (0, 0)))
+    nc = S // Q
+    rep = H // G
+
+    # broadcast groups to heads
+    Bh = jnp.repeat(B_, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(C_, rep, axis=2)
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bh.reshape(Bsz, nc, Q, H, N)
+    Cc = Ch.reshape(Bsz, nc, Q, H, N)
+
+    dA = dtc * (-jnp.exp(A))  # (B,nc,Q,H) negative increments
+    seg = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    total = seg[:, :, -1:]  # (B,nc,1,H)
+
+    # --- intra-chunk (the "attention-like" quadratic-in-Q term) ---
+    # L[s,t] = exp(seg_s - seg_t) for t <= s.  Mask BEFORE exp: above the
+    # diagonal rel > 0 overflows, and where(c, inf, 0) NaNs the backward.
+    # The (B,nc,Q,Q,H) intermediates are stored in the compute dtype (bf16
+    # in production) with f32 accumulation in the dots — this halves the
+    # dominant HBM traffic of the XLA path (the Pallas kernel keeps these
+    # tiles in VMEM entirely).
+    cdt = x.dtype
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(causal, rel, -jnp.inf)).astype(cdt)
+    scores = jnp.einsum(
+        "bcqhn,bcthn->bcqth", Cc, Bc, preferred_element_type=jnp.float32
+    ).astype(cdt)
+    M = scores * L
+    xdt = xc * dtc[..., None].astype(cdt)  # dt-weighted inputs
+    y_intra = jnp.einsum(
+        "bcqth,bcthp->bcqhp", M, xdt, preferred_element_type=jnp.float32
+    )
+
+    # --- chunk states: state_c = sum_t exp(total - seg_t) * B_t x_t dt_t ---
+    decay_to_end = jnp.exp(total - seg)  # (B,nc,Q,H)
+    st = jnp.einsum(
+        "bcqh,bcqhn,bcqhp->bchpn",
+        decay_to_end.astype(jnp.float32),
+        Bc.astype(jnp.float32),
+        xdt.astype(jnp.float32),
+    )  # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence over nc chunks ---
+    chunk_decay = jnp.exp(total[:, :, 0]).astype(jnp.float32)  # (B,nc,H)
+
+    def step(h, inp):
+        dec, s_new = inp  # dec: (B,H), s_new: (B,H,P,N)
+        h = h * dec[:, :, None, None] + s_new
+        return h, h
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, states = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(st, 1, 0))
+    )  # states[c] = state AFTER chunk c
+    states = jnp.moveaxis(states, 0, 1)  # (B,nc,H,P,N)
+    # state entering chunk c = states[c-1]
+    prev = jnp.concatenate([h0[:, None], states[:, :-1]], axis=1)
+
+    # --- inter-chunk contribution: y_t += C_t exp(seg_t) h_prev ---
+    decay_from_start = jnp.exp(seg).astype(jnp.float32)  # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Cc.astype(jnp.float32), prev, decay_from_start
+    )
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), states[:, -1]
+
+
+def _ssd_ref(x, dt, A, B_, C_):
+    """O(S) sequential reference (slow, exact)."""
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=2)
+    Ch = jnp.repeat(C_, rep, axis=2)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        dec = jnp.exp(dtt * (-jnp.exp(A)))  # (B,H)
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", bt, xt, dtt
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Ch.astype(jnp.float32), 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def ssm_forward_with_state(p, x, cfg: ModelConfig):
+    """Full-sequence SSD block. x: (B,S,d_model).
+    Returns (y, conv_state, ssd_state) for prefill cache handoff."""
+    Bsz, S, _ = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    G = cfg.ssm_groups
+    zxbcdt = x @ p["in_proj"]
+    z, xin, BC, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * G * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, BC], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xin, B_, C_ = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xh = xin.reshape(Bsz, S, H, P)
+    Bm = B_.reshape(Bsz, S, G, N)
+    Cm = C_.reshape(Bsz, S, G, N)
+    if cfg.ssm_impl == "ref":
+        y, state = _ssd_ref(xh, dt, p["A_log"], Bm, Cm)
+    elif cfg.ssm_impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+
+        y, state = ssd_ops.ssd_scan(xh, dt, p["A_log"], Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, state = _ssd_chunked(xh, dt, p["A_log"], Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return y @ p["out_proj"], conv_state, state
+
+
+def ssm_forward(p, x, cfg: ModelConfig):
+    """Full-sequence SSD block. x: (B,S,d_model) -> (B,S,d_model)."""
+    y, _, _ = ssm_forward_with_state(p, x, cfg)
+    return y
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int, dtype):
+    d_inner, H, P, N = ssm_dims(cfg)
+    G = cfg.ssm_groups
+    conv_dim = d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((n_layers, batch, H, P, N), jnp.float32),
+    }
+
+
+def ssm_decode(p, x, cfg: ModelConfig, conv_state, ssd_state):
+    """One-token decode. x: (B,1,d). Returns (y, conv_state, ssd_state)."""
+    Bsz = x.shape[0]
+    d_inner, H, P, N = ssm_dims(cfg)
+    G = cfg.ssm_groups
+    zxbcdt = x @ p["in_proj"]
+    z, xin, BC, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * G * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, BC], axis=-1)  # (B,1,conv_dim)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    xin, B_, C_ = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    xh = xin.reshape(Bsz, H, P).astype(jnp.float32)
+    rep = H // G
+    Bm = jnp.repeat(B_.reshape(Bsz, G, N), rep, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(C_.reshape(Bsz, G, N), rep, axis=1).astype(jnp.float32)
+    dec = jnp.exp(dt * (-jnp.exp(p["A_log"])))  # (B,H)
+    ssd_state = ssd_state * dec[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", Bm, xh, dt
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, ssd_state)
+    y = y + xh * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return y @ p["out_proj"], conv_state, ssd_state

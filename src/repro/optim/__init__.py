@@ -1,0 +1,13 @@
+"""Optimizers (no optax dependency): AdamW + SGD-momentum, cosine/linear
+schedules, global-norm clipping, and optional int8 gradient compression for
+the cross-replica reduction (a distributed-optimization trick: quantise
+gradients before the data-axis all-reduce, dequantise after)."""
+
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    sgdm,
+)
+from repro.optim.compression import compress_grads, decompress_grads  # noqa: F401

@@ -1,0 +1,142 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Models annotate parameters/activations with *logical* axes; this module maps
+them onto mesh axes with divisibility fallbacks (a logical axis whose dim is
+not divisible by its mesh-axis extent is replicated instead — e.g. 8 KV
+heads on a 16-way "model" axis).
+
+A module-level context carries (mesh, rules) so model code can request
+activation constraints without threading the mesh through every function;
+when unset (pure-CPU unit tests) constraints are no-ops.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+SINGLE_POD_RULES: dict[str | None, Any] = {
+    "batch": ("data",),
+    "embed": ("data",),  # FSDP / ZeRO-3 parameter sharding
+    "heads": ("model",),
+    "kv": ("model",),
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("data",),
+    "expert_capacity": ("data",),  # takes over when expert count can't shard
+    "seq": (),  # sequence-parallel axis opt-in (hillclimb)
+    # Megatron-SP: layer-boundary activations shard seq over "model", which
+    # also shards the scan-AD residual stack (the dominant train-memory term)
+    "seq_act": ("model",),
+    # KV-cache sequence axis: sharded over "model" (flash-decoding split-K)
+    # because KV-head counts (1/2/4/8) rarely divide a 16-way TP axis.
+    "kv_seq": ("model",),
+    "layers": (),
+    None: (),
+}
+
+MULTI_POD_RULES = dict(SINGLE_POD_RULES)
+MULTI_POD_RULES.update(
+    {
+        "batch": ("pod", "data"),
+        # FSDP params across pod x data: optimizer state for the 480B MoE
+        # must span all 512 chips; ICI-attached pods make this viable.
+        "embed": ("pod", "data"),
+        "expert_capacity": ("pod", "data"),
+    }
+)
+
+
+class _Ctx:
+    mesh: Mesh | None = None
+    rules: dict | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: dict | None = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = rules or (
+        MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    )
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def _mesh_axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def logical_to_pspec(
+    logical: tuple, shape: tuple[int, ...], mesh: Mesh, rules: dict
+) -> P:
+    """Map logical axes to a PartitionSpec, dropping non-divisible ones."""
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        axes = tuple(a for a in rules.get(name, ()) if a in mesh.shape)
+        axes = tuple(a for a in axes if a not in used)
+        # greedy prefix that divides the dim
+        chosen: tuple[str, ...] = ()
+        for i in range(len(axes), 0, -1):
+            cand = axes[:i]
+            if dim % _mesh_axes_size(mesh, cand) == 0:
+                chosen = cand
+                break
+        used.update(chosen)
+        if len(chosen) == 0:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(chosen)
+    return P(*parts)
+
+
+def param_shardings(specs_tree, shapes_tree, mesh: Mesh, rules: dict | None = None):
+    """Build a NamedSharding pytree matching the params pytree."""
+    rules = rules or (
+        MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    )
+
+    def one(spec, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else tuple(shaped)
+        if spec is None:
+            spec = (None,) * len(shape)
+        return NamedSharding(mesh, logical_to_pspec(tuple(spec), shape, mesh, rules))
+
+    return jax.tree.map(
+        one, specs_tree, shapes_tree, is_leaf=lambda x: isinstance(x, tuple) or x is None
+    )
+
+
+def constrain(x: jax.Array, logical: tuple):
+    """Activation sharding constraint by logical axes; no-op without a mesh."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None:
+        return x
+    pspec = logical_to_pspec(tuple(logical), x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+def batch_pspec(mesh: Mesh, rules: dict | None = None) -> P:
+    rules = rules or (
+        MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    )
+    axes = tuple(a for a in rules["batch"] if a in mesh.shape)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))

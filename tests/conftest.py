@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run single-device CPU (the dry-run, and only the dry-run, forces 512
+# host devices — in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

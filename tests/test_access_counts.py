@@ -1,0 +1,116 @@
+"""Algorithms 1 & 2: invariants + paper-claimed behaviours."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.access_counts import (
+    MemoryParams,
+    access_counts,
+    dram_reduction_pct,
+    inference_access_counts,
+    training_access_counts,
+)
+from repro.core.workload import ConvLayer, GemmLayer, Workload, cv_model_zoo, nlp_model_zoo
+
+
+def _wl(n_layers=4, ch=64, fmap=28):
+    layers = tuple(
+        ConvLayer(f"c{i}", 3, 3, fmap, fmap, fmap, fmap, ch, ch)
+        for i in range(n_layers)
+    )
+    return Workload("toy", layers, "cv")
+
+
+def test_dram_access_monotone_in_glb():
+    """Bigger GLB never increases DRAM traffic (both modes)."""
+    wl = cv_model_zoo()["resnet50"]
+    for mode in ("inference", "training"):
+        prev = None
+        for cap in (2, 4, 8, 16, 32, 64, 128, 256, 512):
+            cur = access_counts(wl, 16, MemoryParams(glb_mb=cap), mode).dram_total
+            if prev is not None:
+                assert cur <= prev * (1 + 1e-12), (mode, cap)
+            prev = cur
+
+
+def test_training_needs_at_least_inference_traffic():
+    """Paper: 'training requires at least 2x DRAM accesses as inference'."""
+    for wl in cv_model_zoo().values():
+        inf = inference_access_counts(wl, 16, MemoryParams(glb_mb=8)).dram_total
+        trn = training_access_counts(wl, 16, MemoryParams(glb_mb=8)).dram_total
+        assert trn >= 1.9 * inf, wl.name
+
+
+def test_glb_counts_independent_of_glb_size():
+    """GLB action counts depend on the workload, not the GLB capacity."""
+    wl = _wl()
+    a = inference_access_counts(wl, 4, MemoryParams(glb_mb=2))
+    b = inference_access_counts(wl, 4, MemoryParams(glb_mb=512))
+    assert a.rd_glb == b.rd_glb and a.wr_glb == b.wr_glb
+
+
+def test_weight_traffic_is_mandatory():
+    """Weights stream from DRAM once per layer regardless of GLB size."""
+    wl = _wl()
+    mem = MemoryParams(glb_mb=1 << 20)
+    acc = inference_access_counts(wl, 1, mem)
+    w_mb = sum(l.weight_bytes(4) for l in wl.layers) / (1024 * 1024)
+    assert acc.rd_dram_w == pytest.approx(w_mb / mem.mbpa_dram)
+
+
+def test_infinite_glb_hits_algorithmic_minimum():
+    """With a huge GLB, inference DRAM = inputs + weights in, last out."""
+    wl = _wl(n_layers=3)
+    mem = MemoryParams(glb_mb=1 << 20)
+    acc = inference_access_counts(wl, 2, mem)
+    sizes = wl.entity_sizes_mb(2, 4)
+    expect_rd = sizes[0][0] / mem.mbpa_dram  # first ifmap (weights separate)
+    expect_wr = sizes[-1][1] / mem.mbpa_dram  # last ofmap
+    assert acc.rd_dram == pytest.approx(expect_rd)
+    assert acc.wr_dram == pytest.approx(expect_wr)
+
+
+def test_training_infinite_glb_no_backward_traffic():
+    wl = _wl(n_layers=3)
+    mem = MemoryParams(glb_mb=1 << 20)
+    acc = training_access_counts(wl, 2, mem)
+    sizes = wl.entity_sizes_mb(2, 4)
+    assert acc.rd_dram == pytest.approx(sizes[0][0] / mem.mbpa_dram)
+    # writes: last ofmap (activations) + all updated weights (hidden lane)
+    w_mb = sum(s[2] for s in sizes)
+    assert acc.wr_dram == pytest.approx(sizes[-1][1] / mem.mbpa_dram)
+    assert acc.wr_dram_w == pytest.approx(w_mb / mem.mbpa_dram)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    batch=st.integers(1, 64),
+    glb=st.sampled_from([2.0, 16.0, 64.0, 256.0]),
+    n_layers=st.integers(1, 12),
+)
+def test_counts_nonnegative_and_batch_monotone(batch, glb, n_layers):
+    wl = _wl(n_layers=n_layers)
+    mem = MemoryParams(glb_mb=glb)
+    for mode in ("inference", "training"):
+        acc = access_counts(wl, batch, mem, mode)
+        assert acc.rd_dram >= 0 and acc.wr_dram >= 0
+        assert acc.rd_glb > 0 and acc.wr_glb > 0
+        acc2 = access_counts(wl, batch + 8, mem, mode)
+        assert acc2.dram_total >= acc.dram_total  # paper Fig. 10/12
+        assert acc2.glb_total >= acc.glb_total
+
+
+def test_dram_reduction_pct_bounds():
+    wl = nlp_model_zoo()["bert"]
+    for mode in ("inference", "training"):
+        r = dram_reduction_pct(wl, 16, 256.0, 2.0, mode)
+        assert 0 <= r <= 100
+
+
+def test_paper_fig9_shape_cv_inference():
+    """Most CV models see >80% DRAM reduction at 64 MB (batch 16)."""
+    zoo = cv_model_zoo()
+    hits = sum(
+        dram_reduction_pct(wl, 16, 64.0, 2.0, "inference") > 80 for wl in zoo.values()
+    )
+    assert hits >= 0.7 * len(zoo)

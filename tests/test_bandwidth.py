@@ -1,0 +1,113 @@
+"""Section III-A bandwidth model: paper anchors + property tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandwidth import (
+    ArrayConfig,
+    conv_oi,
+    conv_read_bw_per_cycle,
+    conv_write_bw_per_cycle,
+    gemm_read_bw_per_cycle,
+    gemm_write_bw_per_cycle,
+    softmax_bw_per_cycle,
+    workload_peak_bw,
+)
+from repro.core.workload import ConvLayer, GemmLayer, SoftmaxLayer, cv_model_zoo, nlp_model_zoo
+
+ARR = ArrayConfig(H_A=256, W_A=256, d_w=4)
+
+
+def test_gpt_write_bw_anchor():
+    """Paper Fig. 8(b): seq-2048 models demand ~102 B/cycle write BW on a
+    256x256 array (Table II case M>=H, N>=W, K>=W: W^2/(2W+K-1)*d_w)."""
+    g = GemmLayer("gpt3_ffn", K=2048, M=12288, N=49152)
+    bw = gemm_write_bw_per_cycle(g, ARR)
+    assert bw == pytest.approx(102.4, rel=0.01)
+
+
+def test_case4_read_bw_is_HA_elements():
+    """Table II case IV (K>=W): read BW = (HW + WH)/(2W) = H elements."""
+    g = GemmLayer("big", K=4096, M=8192, N=8192)
+    assert gemm_read_bw_per_cycle(g, ARR) == pytest.approx(256 * 4)
+
+
+def test_softmax_bw():
+    s = SoftmaxLayer("sm", rows=512, cols=512)
+    assert softmax_bw_per_cycle(s, ARR) == 4 * 256
+
+
+def test_conv_read_bw_formula():
+    """Eq. (7) literal check."""
+    l = ConvLayer("c", 3, 3, 14, 14, 14, 14, 256, 256)
+    expect = (9 + 196) * 4 / (9 * 196) * 256 * 256
+    assert conv_read_bw_per_cycle(l, ARR) == pytest.approx(expect)
+
+
+def test_one_by_one_conv_more_bw_than_3x3():
+    """Paper observation: 1x1 convolutions are memory-intensive."""
+    c1 = ConvLayer("c1", 1, 1, 7, 7, 7, 7, 512, 512)
+    c3 = ConvLayer("c3", 3, 3, 7, 7, 7, 7, 512, 512)
+    assert conv_read_bw_per_cycle(c1, ARR) > conv_read_bw_per_cycle(c3, ARR)
+
+
+def test_write_bw_always_leq_read_bw_conv():
+    """Paper: 'write bandwidth is always smaller than the read bandwidth'."""
+    for wl in cv_model_zoo().values():
+        for l in wl.layers:
+            if isinstance(l, ConvLayer):
+                assert conv_write_bw_per_cycle(l, ARR) <= conv_read_bw_per_cycle(
+                    l, ARR
+                ) * (1 + 1e-9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    k=st.integers(1, 7),
+    fmap=st.integers(2, 64),
+    chans=st.integers(1, 512),
+    ha=st.sampled_from([16, 64, 128, 256]),
+)
+def test_conv_bw_scales_with_array(k, fmap, chans, ha):
+    """BW demand grows with PE count and is positive/finite (Eq. 7/8)."""
+    l = ConvLayer("c", k, k, fmap, fmap, fmap, fmap, chans, chans)
+    small = ArrayConfig(H_A=ha, W_A=ha, d_w=4)
+    big = ArrayConfig(H_A=2 * ha, W_A=2 * ha, d_w=4)
+    b1 = conv_read_bw_per_cycle(l, small)
+    b2 = conv_read_bw_per_cycle(l, big)
+    assert 0 < b1 < math.inf
+    assert b2 == pytest.approx(4 * b1)  # quadratic in array side
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    m=st.integers(1, 8192),
+    n=st.integers(1, 8192),
+    k=st.integers(1, 8192),
+)
+def test_gemm_bw_positive_all_cases(m, n, k):
+    g = GemmLayer("g", K=k, M=m, N=n)
+    assert gemm_read_bw_per_cycle(g, ARR) > 0
+    assert gemm_write_bw_per_cycle(g, ARR) > 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(m=st.integers(1, 4096), n=st.integers(1, 4096), k=st.integers(1, 4096))
+def test_gemm_write_bw_bounded_by_array_output_rate(m, n, k):
+    """Write BW can't exceed one output element per PE column per cycle."""
+    g = GemmLayer("g", K=k, M=m, N=n)
+    assert gemm_write_bw_per_cycle(g, ARR) <= ARR.W_A * ARR.d_w + 1e-9
+
+
+def test_oi_positive_and_bw_inverse():
+    l = ConvLayer("c", 3, 3, 28, 28, 28, 28, 128, 128)
+    assert conv_oi(l, 4) > 0
+
+
+def test_workload_peak_bw_nlp_monotone_in_array():
+    wl = nlp_model_zoo()["gpt2"]
+    small = workload_peak_bw(wl, ArrayConfig(H_A=64, W_A=64, d_w=4))
+    big = workload_peak_bw(wl, ArrayConfig(H_A=256, W_A=256, d_w=4))
+    assert big["read_bytes_per_cycle"] >= small["read_bytes_per_cycle"]

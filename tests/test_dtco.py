@@ -1,0 +1,140 @@
+"""Section IV DTCO physics: paper anchors + monotonicity properties."""
+
+import dataclasses
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dtco
+
+
+DEV = dtco.SOTDevice()  # Table VI point
+
+
+def test_table6_thermal_stability():
+    assert dtco.thermal_stability(DEV) == pytest.approx(45.0, rel=0.05)
+
+
+def test_table6_retention_seconds_range():
+    """Delta=45 cell retains data for seconds-to-minutes at P_RF=1e-9 —
+    the paper's cache-lifetime argument."""
+    t = dtco.retention_time_s(DEV)
+    assert 1.0 < t < 3600.0
+
+
+def test_fig14b_delta70_retention_over_10_years():
+    d = dataclasses.replace(DEV, d_mtj_nm=88.0)
+    assert dtco.thermal_stability(d) > 60
+    assert dtco.retention_time_s(d) > 10 * 365 * 24 * 3600
+
+
+def test_table6_tmr_anchor():
+    assert dtco.tmr_percent(3.0) == pytest.approx(240.0, rel=0.02)
+
+
+def test_read_latency_anchor_250ps():
+    assert dtco.read_latency_s(240.0) == pytest.approx(0.25e-9, rel=0.01)
+
+
+def test_write_pulse_anchor_520ps():
+    assert dtco.write_pulse_width_s(DEV, overdrive=2.0) == pytest.approx(
+        0.52e-9, rel=0.01
+    )
+
+
+def test_fig13a_ic_decreases_with_theta():
+    prev = math.inf
+    for th in (0.1, 0.3, 1.0, 10.0, 100.0):
+        ic = dtco.critical_current(dataclasses.replace(DEV, theta_sh=th))
+        assert ic < prev
+        prev = ic
+    # theta >= 100 reaches the ~uA floor of Fig. 13(a)
+    assert prev < 2e-6
+
+
+def test_fig13b_ic_linear_in_width():
+    i1 = dtco.critical_current(dataclasses.replace(DEV, w_sot_nm=65.0))
+    i2 = dtco.critical_current(dataclasses.replace(DEV, w_sot_nm=130.0))
+    assert i2 == pytest.approx(2 * i1, rel=1e-6)
+
+
+def test_fig13c_sot_thickness_optimum_near_3nm():
+    ics = {
+        t: dtco.critical_current(dataclasses.replace(DEV, t_sot_nm=t))
+        for t in (1.0, 2.0, 2.5, 3.0, 3.5, 5.0)
+    }
+    best = min(ics, key=ics.get)
+    assert 2.0 <= best <= 3.5
+    assert ics[1.0] > ics[best] and ics[5.0] > ics[best]
+
+
+def test_fig13d_ic_decreases_with_thinner_free_layer():
+    thin = dtco.critical_current(dataclasses.replace(DEV, t_fl_nm=0.5))
+    thick = dtco.critical_current(dataclasses.replace(DEV, t_fl_nm=1.2))
+    assert thin < thick
+
+
+def test_fig14a_pulse_width_vs_current():
+    i_c = dtco.critical_current(DEV)
+    slow = dtco.write_pulse_width_vs_current(DEV, 1.5 * i_c)
+    fast = dtco.write_pulse_width_vs_current(DEV, 4.0 * i_c)
+    assert fast < slow
+    assert dtco.write_pulse_width_vs_current(DEV, 0.9 * i_c) == math.inf
+
+
+def test_fig15_tmr_monotone_and_read_speedup():
+    assert dtco.tmr_percent(1.0) < dtco.tmr_percent(2.0) < dtco.tmr_percent(3.0)
+    assert dtco.read_latency_s(100.0) > dtco.read_latency_s(240.0)
+
+
+def test_guard_band():
+    gb = dtco.apply_guard_band(DEV, 0.30)
+    assert gb.t_fl_nm == pytest.approx(DEV.t_fl_nm * 1.3)
+    assert gb.w_sot_nm == pytest.approx(DEV.w_sot_nm * 1.3)
+
+
+def test_monte_carlo_worst_cases():
+    res = dtco.monte_carlo_variation(DEV, n_samples=2000)
+    # +4 sigma geometry must be the write worst case
+    assert res.worst_write_ic_a > dtco.critical_current(DEV)
+    # -4 sigma, T_hot must shrink Delta and retention
+    assert res.worst_read_delta < dtco.thermal_stability(DEV)
+    assert res.worst_read_retention_s < dtco.retention_time_s(DEV)
+    assert 0.0 <= res.yield_fraction <= 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    th=st.floats(0.1, 152.0),
+    t_fl=st.floats(0.3, 2.0),
+    w=st.floats(50.0, 300.0),
+)
+def test_ic_physical(th, t_fl, w):
+    d = dataclasses.replace(DEV, theta_sh=th, t_fl_nm=t_fl, w_sot_nm=w)
+    ic = dtco.critical_current(d)
+    # positive and bounded: even the worst corner (theta=0.1, thick FL,
+    # 300 nm channel) stays in the tens-of-mA regime
+    assert 0 < ic < 5e-2
+
+
+@settings(max_examples=60, deadline=None)
+@given(d_mtj=st.floats(20.0, 120.0), t_fl=st.floats(0.3, 2.0))
+def test_retention_monotone_in_volume(d_mtj, t_fl):
+    small = dataclasses.replace(DEV, d_mtj_nm=d_mtj, t_fl_nm=t_fl)
+    big = dataclasses.replace(DEV, d_mtj_nm=d_mtj * 1.2, t_fl_nm=t_fl)
+    assert dtco.retention_time_s(big) >= dtco.retention_time_s(small)
+
+
+def test_dtco_optimizer_meets_constraints():
+    target = dtco.DTCOTarget(
+        read_bw_bytes_per_cycle=4096.0,
+        write_bw_bytes_per_cycle=1024.0,
+        data_lifetime_s=10.0,
+    )
+    res = dtco.optimize(target)
+    assert res.retention_s >= target.data_lifetime_s
+    assert res.read_bus_bits > 0 and res.write_bus_bits > 0
+    assert res.ppa.write_latency_s < 4e-9
+    # bus sized to meet demand: bits/cycle deliverable >= demand
+    assert res.read_bus_bits * res.bits_per_bank_cycle_read >= 4096 * 8 * 0.99

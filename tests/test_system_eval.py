@@ -1,0 +1,99 @@
+"""System-level PPA evaluation (paper Figs. 9-12, 18, 19) + STCO loop."""
+
+import pytest
+
+from repro.core.evaluate import compare_technologies, geomean, improvement_table
+from repro.core.memory_system import glb_array, sot_array_from_device
+from repro.core.stco import dram_access_curve, knee_capacity, run_stco
+from repro.core import dtco
+from repro.core.workload import cv_model_zoo, nlp_model_zoo
+
+
+CV = cv_model_zoo()
+NLP = nlp_model_zoo()
+
+
+def _geo(tab, key):
+    return geomean(v[key] for v in tab.values())
+
+
+def test_fig18_cv_inference_ratios():
+    """Paper: SOT 5x energy / 2x latency; DTCO-opt 7x / 8x (64 MB, inf)."""
+    tab = improvement_table(CV, 16, 64.0, "inference")
+    assert 3.0 <= _geo(tab, "sot_energy_x") <= 7.0
+    assert 1.3 <= _geo(tab, "sot_latency_x") <= 3.5
+    assert 4.5 <= _geo(tab, "sot_opt_energy_x") <= 9.0
+    assert 5.0 <= _geo(tab, "sot_opt_latency_x") <= 11.0
+
+
+def test_fig18_cv_training_ratios():
+    """Paper: SOT 6x/2x; DTCO-opt 8x/9x (256 MB, training)."""
+    tab = improvement_table(CV, 16, 256.0, "training")
+    assert 4.0 <= _geo(tab, "sot_energy_x") <= 10.0
+    assert _geo(tab, "sot_opt_energy_x") >= 6.0
+    assert _geo(tab, "sot_opt_latency_x") >= 6.0
+
+
+def test_fig18_nlp_training_ratios():
+    """Paper: SOT 6x/2.5x; DTCO-opt 8x/4.5x (256 MB, training)."""
+    tab = improvement_table(NLP, 16, 256.0, "training")
+    assert 4.0 <= _geo(tab, "sot_energy_x") <= 9.0
+    assert 5.5 <= _geo(tab, "sot_opt_energy_x") <= 11.0
+    assert _geo(tab, "sot_opt_latency_x") >= 1.5
+
+
+def test_sot_always_beats_sram_at_large_capacity():
+    for wl in list(CV.values())[:4]:
+        m = compare_technologies(wl, 16, 256.0, "training")
+        assert m["sot"].energy_j < m["sram"].energy_j
+        assert m["sot_opt"].energy_j < m["sot"].energy_j
+
+
+def test_leakage_dominates_sram_energy_reduction():
+    """Paper: >50% of the energy reduction comes from leakage."""
+    wl = CV["resnet50"]
+    m = compare_technologies(wl, 16, 64.0, "inference")
+    saved = m["sram"].energy_j - m["sot_opt"].energy_j
+    assert m["sram"].leakage_energy_j / saved > 0.4
+
+
+def test_fig19_area_ratios():
+    """SOT-opt ~0.52-0.54x SRAM area at iso-capacity."""
+    for cap in (64.0, 256.0):
+        sram = glb_array("sram", cap).area_mm2
+        sot_opt = glb_array("sot_opt", cap).area_mm2
+        assert 0.45 <= sot_opt / sram <= 0.60
+        sot = glb_array("sot", cap).area_mm2
+        assert sot_opt <= sot <= sram
+
+
+def test_sram_faster_at_small_capacity():
+    """Paper: 'At smaller capacity, SRAM is way faster than SOT-MRAM'."""
+    s2, m2 = glb_array("sram", 2.0), glb_array("sot", 2.0)
+    assert s2.read_latency_ns < m2.read_latency_ns
+    s256, m256 = glb_array("sram", 256.0), glb_array("sot", 256.0)
+    assert m256.read_latency_ns < s256.read_latency_ns  # crossover
+
+
+def test_knee_capacity_cv_vs_training():
+    """Training knees at >= the inference knee (paper: 64 vs 256 MB)."""
+    wl = CV["resnet101"]
+    inf = knee_capacity(dram_access_curve(wl, 16, "inference"))
+    trn = knee_capacity(dram_access_curve(wl, 16, "training"))
+    assert trn >= inf
+
+
+def test_stco_closed_loop():
+    res = run_stco(CV["resnet50"], batch=16, mode="inference")
+    assert res.chosen_capacity_mb >= 8
+    assert res.dtco.retention_s >= 10.0
+    assert len(res.pareto) >= 1
+    # every pareto point must be non-dominated (spot-check energy ordering)
+    energies = [p.metrics.energy_j for p in res.pareto]
+    assert min(energies) > 0
+
+
+def test_dtco_device_array_consistency():
+    arr = sot_array_from_device(64.0, dtco.SOTDevice())
+    base = glb_array("sot_opt", 64.0)
+    assert 0.2 < arr.read_latency_ns / base.read_latency_ns < 5.0
