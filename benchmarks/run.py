@@ -25,6 +25,7 @@ from benchmarks import (
     fig18_system_ppa,
     fig19_area,
     roofline,
+    sim_vs_analytic,
     tab07_bitcell_power,
 )
 from benchmarks.common import rows_to_csv, timed
@@ -65,6 +66,11 @@ def _derive(name: str, rows: list[dict]) -> str:
         if name == "fig19_area":
             r64 = [r for r in rows if r["capacity_mb"] == 64.0]
             return f"area_ratio_64MB={r64[0]['sot_opt_ratio']}(paper:0.54)"
+        if name == "sim_vs_analytic":
+            worst = max(
+                max(r["latency_rel_err_pct"], r["energy_rel_err_pct"]) for r in rows
+            )
+            return f"cells={len(rows)},worst_rel_err_pct={worst}(tol:15)"
         if name == "roofline":
             if "note" in rows[0]:
                 return rows[0]["note"]
@@ -93,21 +99,39 @@ BENCHMARKS = [
     ("fig18_system_ppa", fig18_system_ppa.run),
     ("fig19_area", fig19_area.run),
     ("roofline", roofline.run),
+    ("sim_vs_analytic", sim_vs_analytic.run),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="print detail tables")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run only benchmarks whose name contains this substring")
     args = ap.parse_args()
+
+    selected = [
+        (name, fn)
+        for name, fn in BENCHMARKS
+        if not args.only or args.only in name
+    ]
+    if not selected:
+        print(f"no benchmark matches --only {args.only!r}", file=sys.stderr)
+        sys.exit(2)
 
     print("name,us_per_call,derived")
     details = []
-    for name, fn in BENCHMARKS:
-        if args.only and args.only not in name:
+    failures = []
+    for name, fn in selected:
+        try:
+            rows, us = timed(fn)
+        except Exception as e:
+            failures.append((name, e))
+            # Keep the headline CSV 3-column: strip commas/newlines from the
+            # message (full detail goes to stderr below).
+            msg = str(e).split("\n", 1)[0].replace(",", ";")
+            print(f"{name},FAILED,{type(e).__name__}:{msg}")
             continue
-        rows, us = timed(fn)
         base = name.split("_inf")[0].split("_train")[0] if name.startswith("fig09") else name
         print(f"{name},{us:.0f},{_derive(base, rows)}")
         details.append((name, rows))
@@ -115,6 +139,10 @@ def main() -> None:
         for name, rows in details:
             print(f"\n## {name}")
             print(rows_to_csv(rows))
+    if failures:
+        for name, e in failures:
+            print(f"FAILED {name}: {type(e).__name__}: {e}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,49 @@
+"""Simulated vs analytic memory-system latency/energy across GLB capacity.
+
+Sweeps GLB capacity for a CV-training and an NLP-training workload, overlays
+the trace-driven simulator (repro.sim) on the closed-form evaluate_system
+curves, and reports the congestion metrics only the simulator can see
+(bank-conflict rate, p99 access latency).  The rel-err columns are the
+cross-validation evidence that the event-level replay reproduces the paper's
+Fig. 18 operating points.
+"""
+
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import cv_model_zoo, nlp_model_zoo
+from repro.sim import cross_validate
+
+CAPACITIES_MB = (16.0, 32.0, 64.0, 128.0, 256.0)
+TECHS = ("sram", "sot_opt")
+
+
+def run() -> list[dict]:
+    cases = [
+        ("cv", cv_model_zoo()["resnet50"], "training", 16384),
+        ("nlp", nlp_model_zoo()["bert"], "training", 131072),
+    ]
+    rows = []
+    for domain, wl, mode, tile in cases:
+        for cap in CAPACITIES_MB:
+            for tech in TECHS:
+                system = HybridMemorySystem(glb=glb_array(tech, cap))
+                r = cross_validate(wl, 16, system, mode, tile_bytes=tile)
+                rows.append(
+                    {
+                        "domain": domain,
+                        "model": wl.name,
+                        "mode": mode,
+                        "tech": tech,
+                        "capacity_mb": cap,
+                        "analytic_latency_ms": round(r["analytic_latency_s"] * 1e3, 4),
+                        "sim_latency_ms": round(r["sim_latency_s"] * 1e3, 4),
+                        "latency_rel_err_pct": round(r["latency_rel_err"] * 100, 2),
+                        "analytic_energy_mj": round(r["analytic_energy_j"] * 1e3, 4),
+                        "sim_energy_mj": round(r["sim_energy_j"] * 1e3, 4),
+                        "energy_rel_err_pct": round(r["energy_rel_err"] * 100, 2),
+                        "bank_conflict_pct": round(r["bank_conflict_rate"] * 100, 1),
+                        "p99_latency_ns": round(r["p99_latency_ns"], 0),
+                        "mean_queue_depth": round(r["mean_queue_depth"], 2),
+                        "n_events": r["n_events"],
+                    }
+                )
+    return rows

@@ -87,15 +87,21 @@ class AccessCounts:
         return self.rd_glb + self.wr_glb
 
 
-def inference_access_counts(
+def inference_layer_counts(
     workload: Workload, batch: int, mem: MemoryParams, d_w: int = 4
-) -> AccessCounts:
-    """Algorithm 1."""
+) -> list[AccessCounts]:
+    """Algorithm 1, reported per layer (summing the list gives the totals).
+
+    The per-layer breakdown is what ``repro.sim`` lowers into timed event
+    streams; ``inference_access_counts`` keeps the aggregate API.
+    """
     sizes = workload.entity_sizes_mb(batch, d_w)
     glb = mem.glb_mb
-    acc = AccessCounts()
+    per_layer: list[AccessCounts] = []
     n = len(sizes)
     for i, (I, O, W) in enumerate(sizes):
+        acc = AccessCounts()
+        per_layer.append(acc)
         first, last = i == 0, i == n - 1
         # --- GLB (lines 2, 4, 11) ---
         acc.rd_glb += I / mem.mbpa_glb
@@ -127,20 +133,29 @@ def inference_access_counts(
             acc.wr_dram += O / mem.mbpa_dram
         elif O > glb:
             acc.wr_dram += (O - glb) / mem.mbpa_dram
-    return acc
+    return per_layer
 
 
-def training_access_counts(
+def inference_access_counts(
     workload: Workload, batch: int, mem: MemoryParams, d_w: int = 4
 ) -> AccessCounts:
-    """Algorithm 2.  Gradient entities mirror forward entity sizes
-    (GI=I, GO=O, GW=W), per the computational graph of Fig. 6."""
+    """Algorithm 1."""
+    return sum(inference_layer_counts(workload, batch, mem, d_w), AccessCounts())
+
+
+def training_layer_counts(
+    workload: Workload, batch: int, mem: MemoryParams, d_w: int = 4
+) -> list[AccessCounts]:
+    """Algorithm 2, reported per layer.  Gradient entities mirror forward
+    entity sizes (GI=I, GO=O, GW=W), per the computational graph of Fig. 6."""
     sizes = workload.entity_sizes_mb(batch, d_w)
     glb = mem.glb_mb
-    acc = AccessCounts()
+    per_layer: list[AccessCounts] = []
     n = len(sizes)
     cum_layer = 0.0
     for i, (I, O, W) in enumerate(sizes):
+        acc = AccessCounts()
+        per_layer.append(acc)
         first, last = i == 0, i == n - 1
         GI, GO, GW = I, O, W
         layer_f = I + O + W
@@ -182,7 +197,28 @@ def training_access_counts(
                 acc.rd_dram_w += spill * mem.prefetch_hidden_frac
         # Updated weights always write back (line 39).
         acc.wr_dram_w += W / mem.mbpa_dram
-    return acc
+    return per_layer
+
+
+def training_access_counts(
+    workload: Workload, batch: int, mem: MemoryParams, d_w: int = 4
+) -> AccessCounts:
+    """Algorithm 2 aggregate totals."""
+    return sum(training_layer_counts(workload, batch, mem, d_w), AccessCounts())
+
+
+def per_layer_access_counts(
+    workload: Workload,
+    batch: int,
+    mem: MemoryParams,
+    mode: str = "inference",
+    d_w: int = 4,
+) -> list[AccessCounts]:
+    if mode == "inference":
+        return inference_layer_counts(workload, batch, mem, d_w)
+    if mode == "training":
+        return training_layer_counts(workload, batch, mem, d_w)
+    raise ValueError(f"unknown mode {mode!r}")
 
 
 def access_counts(
@@ -192,11 +228,9 @@ def access_counts(
     mode: str = "inference",
     d_w: int = 4,
 ) -> AccessCounts:
-    if mode == "inference":
-        return inference_access_counts(workload, batch, mem, d_w)
-    if mode == "training":
-        return training_access_counts(workload, batch, mem, d_w)
-    raise ValueError(f"unknown mode {mode!r}")
+    return sum(
+        per_layer_access_counts(workload, batch, mem, mode, d_w), AccessCounts()
+    )
 
 
 def dram_reduction_pct(

@@ -1,0 +1,147 @@
+"""Trace-driven memory-system simulation driver.
+
+    PYTHONPATH=src python -m repro.launch.simulate --scenario cv_training \
+        --model resnet50 --tech sot_opt --glb-mb 256
+
+    PYTHONPATH=src python -m repro.launch.simulate --scenario serving \
+        --model gpt2 --tech sot_opt --glb-mb 64 --requests 64
+
+    PYTHONPATH=src python -m repro.launch.simulate --smoke
+
+Scenarios ``cv_inference``/``cv_training``/``nlp_inference``/``nlp_training``
+replay an Algorithm-1/2 schedule and cross-validate against the analytic
+``evaluate_system`` model; ``serving`` replays an open-loop LLM prefill +
+decode KV-cache trace that the analytic model cannot express.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import NLP_TABLE_V, cv_model_zoo, nlp_model_zoo
+from repro.sim import (
+    ServingConfig,
+    SimConfig,
+    cross_validate,
+    serving_trace,
+    simulate_trace,
+    summarize,
+)
+
+WORKLOAD_SCENARIOS = {
+    "cv_inference": ("cv", "inference"),
+    "cv_training": ("cv", "training"),
+    "nlp_inference": ("nlp", "inference"),
+    "nlp_training": ("nlp", "training"),
+}
+
+
+def run_workload_scenario(args) -> int:
+    domain, mode = WORKLOAD_SCENARIOS[args.scenario]
+    zoo = cv_model_zoo() if domain == "cv" else nlp_model_zoo()
+    if args.model not in zoo:
+        print(f"unknown {domain} model {args.model!r}; have {sorted(zoo)}")
+        return 2
+    system = HybridMemorySystem(glb=glb_array(args.tech, args.glb_mb))
+    t0 = time.time()
+    window = args.coalesce_window_ns if args.coalesce_window_ns is not None else 0.0
+    r = cross_validate(
+        zoo[args.model], args.batch, system, mode, tile_bytes=args.tile_bytes,
+        sim_config=SimConfig(coalesce_window_ns=window, backend=args.backend),
+    )
+    dt = time.time() - t0
+    print(f"# {args.scenario} {args.model} {args.tech}@{args.glb_mb}MB "
+          f"batch={args.batch} ({r['n_events']} events, {dt:.1f}s)")
+    print(summarize(r["sim"]))
+    print(f"analytic latency     : {r['analytic_latency_s'] * 1e3:.3f} ms "
+          f"(rel err {r['latency_rel_err'] * 100:.2f}%)")
+    print(f"analytic energy      : {r['analytic_energy_j'] * 1e3:.3f} mJ "
+          f"(rel err {r['energy_rel_err'] * 100:.2f}%)")
+    tol = args.tolerance
+    if r["latency_rel_err"] > tol or r["energy_rel_err"] > tol:
+        print(f"FAIL: cross-validation outside {tol * 100:.0f}% tolerance")
+        return 1
+    print("cross-validation OK")
+    return 0
+
+
+def run_serving_scenario(args) -> int:
+    specs = {s.name: s for s in NLP_TABLE_V}
+    if args.model not in specs:
+        print(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
+        return 2
+    system = HybridMemorySystem(glb=glb_array(args.tech, args.glb_mb))
+    cfg = ServingConfig(
+        n_requests=args.requests,
+        arrival_rate_rps=args.arrival_rate,
+        prompt_len=args.prompt_len,
+        decode_len=args.decode_len,
+        seed=args.seed,
+    )
+    t0 = time.time()
+    trace = serving_trace(system, specs[args.model], cfg)
+    window = (args.coalesce_window_ns if args.coalesce_window_ns is not None
+              else 4 * trace.meta["token_interval_ns"])
+    result = simulate_trace(trace, SimConfig(coalesce_window_ns=window,
+                                             backend=args.backend))
+    dt = time.time() - t0
+    print(f"# serving {args.model} {args.tech}@{args.glb_mb}MB "
+          f"{args.requests} reqs @ {args.arrival_rate}/s "
+          f"({len(trace)} events, {dt:.1f}s)")
+    print(f"token interval       : {trace.meta['token_interval_ns'] / 1e3:.1f} us "
+          f"(kv spill frac {trace.meta['kv_spill_frac']:.2f})")
+    print(summarize(result))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="cv_training",
+                    choices=[*WORKLOAD_SCENARIOS, "serving"])
+    ap.add_argument("--model", default=None,
+                    help="workload name (default: resnet50 / bert / gpt2)")
+    ap.add_argument("--tech", default="sot_opt", choices=["sram", "sot", "sot_opt"])
+    ap.add_argument("--glb-mb", type=float, default=256.0)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--tile-bytes", type=int, default=16384)
+    ap.add_argument("--tolerance", type=float, default=0.15)
+    ap.add_argument("--coalesce-window-ns", type=float, default=None,
+                    help="write-combining window; 0 disables "
+                         "(serving default: 4x token interval)")
+    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"])
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--arrival-rate", type=float, default=100.0)
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--decode-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast end-to-end check: tiny CV replay + tiny serving trace")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        rc = 0
+        for scenario, model, glb in (("cv_training", "resnet18", 64.0),
+                                     ("serving", "gpt2", 64.0)):
+            sub = argparse.Namespace(**vars(args))
+            sub.scenario, sub.model, sub.glb_mb = scenario, model, glb
+            sub.tile_bytes = 65536
+            sub.requests, sub.decode_len = 8, 32
+            rc |= (run_serving_scenario(sub) if scenario == "serving"
+                   else run_workload_scenario(sub))
+            print()
+        print("smoke OK" if rc == 0 else "smoke FAILED")
+        return rc
+
+    if args.model is None:
+        args.model = {"cv": "resnet50", "nlp": "bert"}.get(
+            args.scenario.split("_")[0], "gpt2")
+    if args.scenario == "serving":
+        return run_serving_scenario(args)
+    return run_workload_scenario(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

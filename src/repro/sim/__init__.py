@@ -1,0 +1,46 @@
+"""Trace-driven, event-level simulator of the hybrid GLB+DRAM memory system.
+
+Complements the closed-form ``repro.core.evaluate`` model with a dynamic
+layer: per-bank FIFO queues, asymmetric SOT read/write service times, a
+write-coalescing buffer, double-buffered DRAM prefetch channels, and
+congestion metrics (bank-conflict rate, queue occupancy, p50/p99 access
+latency).  See ``trace.py`` for generators, ``engine.py`` for the vectorized
+replay loop, ``validate.py`` for cross-validation against the analytic model.
+"""
+
+from repro.sim.engine import KindStats, SimConfig, SimResult, simulate_trace
+from repro.sim.trace import (
+    EXPOSED_KINDS,
+    KIND_NAMES,
+    ServingConfig,
+    Trace,
+    TraceBuilder,
+    lower_workload,
+    serving_trace,
+)
+from repro.sim.validate import (
+    FIG18_CONFIGS,
+    check_tolerance,
+    cross_validate,
+    fig18_cross_validation,
+    summarize,
+)
+
+__all__ = [
+    "EXPOSED_KINDS",
+    "FIG18_CONFIGS",
+    "KIND_NAMES",
+    "KindStats",
+    "ServingConfig",
+    "SimConfig",
+    "SimResult",
+    "Trace",
+    "TraceBuilder",
+    "check_tolerance",
+    "cross_validate",
+    "fig18_cross_validation",
+    "lower_workload",
+    "serving_trace",
+    "simulate_trace",
+    "summarize",
+]

@@ -1,0 +1,246 @@
+"""Vectorized event-level replay of a memory-system trace.
+
+The core recurrence is per-resource FIFO service:
+
+    start_i  = max(t_issue_i, finish_{i-1})        (same bank, issue order)
+    finish_i = start_i + service_i
+
+Rather than a Python per-event loop, the engine sorts events by
+``(resource, t_issue)`` once and solves the recurrence in closed form:
+within a bank segment, ``finish_i = S_i + max_{j<=i}(t_j - S_{j-1})`` where
+``S`` is the in-segment cumulative service.  The running max is a single
+``cummax`` over the whole array using a per-segment offset large enough that
+earlier segments can never win — O(N log N) total, millions of events per
+second.  The same offset trick turns per-bank queue-depth measurement into
+one global ``searchsorted``.
+
+A write-coalescing pre-pass merges repeated writes to the same ``line``
+within a time window (the KV-append pattern in serving traces), modelling a
+simple write-combining buffer in front of the banks.
+
+``backend="jax"`` runs the scan with ``jax.lax.cummax`` instead of numpy —
+same math, useful for device offload of very large traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sim.trace import (
+    EXPOSED_KINDS,
+    KIND_DRAM_RD,
+    KIND_DRAM_WR,
+    KIND_GLB_WR,
+    KIND_NAMES,
+    KIND_PREFETCH_RD,
+    KIND_PREFETCH_WR,
+    Trace,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    coalesce_window_ns: float = 0.0  # 0 disables the write-combining buffer
+    backend: str = "numpy"  # "numpy" | "jax"
+
+
+@dataclasses.dataclass(frozen=True)
+class KindStats:
+    n_events: int
+    busy_ns: float
+    mean_latency_ns: float
+    p50_latency_ns: float
+    p99_latency_ns: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Replay outcome: system metrics + congestion statistics."""
+
+    # -- headline (comparable to evaluate_system) --
+    latency_s: float  # exposed-path makespan (memory-system latency)
+    runtime_s: float  # max(compute floor, exposed, hidden stream)
+    energy_j: float
+    dram_energy_j: float
+    glb_energy_j: float
+    leakage_energy_j: float
+    hidden_stream_s: float
+    compute_time_s: float
+    # -- congestion metrics the analytic model cannot see --
+    bank_conflict_rate: float  # fraction of events that waited in a queue
+    mean_wait_ns: float
+    p50_latency_ns: float  # wait + service, exposed events
+    p99_latency_ns: float
+    mean_queue_depth: float
+    max_queue_depth: int
+    glb_utilization: float  # busy / (banks * makespan)
+    dram_utilization: float
+    # -- bookkeeping --
+    n_events: int
+    n_simulated: int  # after coalescing
+    coalesced_writes: int
+    coalesced_energy_pj: float
+    per_kind: dict[str, KindStats]
+
+
+def _cummax(x: np.ndarray, backend: str) -> np.ndarray:
+    if backend == "jax":
+        import jax
+        from jax.experimental import enable_x64
+
+        # The segment-offset trick needs float64: offsets reach ~1e11 ns and
+        # float32 resolution there is ~10 us.
+        with enable_x64():
+            return np.asarray(jax.lax.cummax(jax.numpy.asarray(x, jax.numpy.float64)))
+    return np.maximum.accumulate(x)
+
+
+def _coalesce_writes(trace: Trace, window_ns: float):
+    """Merge writes to the same line within one window bucket.
+
+    Returns (keep_mask, n_dropped, dropped_energy_pj).  The first write of
+    each (line, bucket) group is kept (one physical write-back); later ones
+    are absorbed by the combining buffer.
+    """
+    is_write = (
+        ((trace.kind == KIND_GLB_WR) | (trace.kind == KIND_DRAM_WR) | (trace.kind == KIND_PREFETCH_WR))
+        & (trace.line >= 0)
+    )
+    idx = np.flatnonzero(is_write)
+    if idx.size == 0:
+        return np.ones(len(trace), bool), 0, 0.0
+    bucket = (trace.t_issue_ns[idx] // window_ns).astype(np.int64)
+    line = trace.line[idx]
+    order = np.lexsort((bucket, line))
+    ls, bs = line[order], bucket[order]
+    dup = np.zeros(idx.size, bool)
+    dup[1:] = (ls[1:] == ls[:-1]) & (bs[1:] == bs[:-1])
+    keep = np.ones(len(trace), bool)
+    dropped = idx[order][dup]
+    keep[dropped] = False
+    return keep, int(dropped.size), float(trace.energy_pj[dropped].sum())
+
+
+def simulate_trace(trace: Trace, config: SimConfig = SimConfig()) -> SimResult:
+    n_total = len(trace)
+    t_issue, resource = trace.t_issue_ns, trace.resource
+    service, energy, kind = trace.service_ns, trace.energy_pj, trace.kind
+
+    coalesced, coalesced_e = 0, 0.0
+    if config.coalesce_window_ns > 0 and n_total:
+        keep, coalesced, coalesced_e = _coalesce_writes(trace, config.coalesce_window_ns)
+        t_issue, resource = t_issue[keep], resource[keep]
+        service, energy, kind = service[keep], energy[keep], kind[keep]
+    n = t_issue.shape[0]
+
+    if n == 0:
+        empty = KindStats(0, 0.0, 0.0, 0.0, 0.0)
+        leak = trace.leakage_w * trace.compute_time_s
+        return SimResult(
+            latency_s=0.0, runtime_s=trace.compute_time_s, energy_j=leak,
+            dram_energy_j=0.0, glb_energy_j=0.0, leakage_energy_j=leak,
+            hidden_stream_s=0.0, compute_time_s=trace.compute_time_s,
+            bank_conflict_rate=0.0, mean_wait_ns=0.0, p50_latency_ns=0.0,
+            p99_latency_ns=0.0, mean_queue_depth=0.0, max_queue_depth=0,
+            glb_utilization=0.0, dram_utilization=0.0, n_events=n_total,
+            n_simulated=0, coalesced_writes=coalesced,
+            coalesced_energy_pj=coalesced_e, per_kind={"all": empty},
+        )
+
+    # --- sort by (resource, issue time): per-bank FIFO order ---------------
+    order = np.lexsort((t_issue, resource))
+    res_s = resource[order]
+    t_s = t_issue[order]
+    svc_s = service[order]
+    kind_s = kind[order]
+
+    # --- segmented max-plus scan -------------------------------------------
+    new_seg = np.empty(n, bool)
+    new_seg[0] = True
+    new_seg[1:] = res_s[1:] != res_s[:-1]
+    seg_id = np.cumsum(new_seg) - 1
+    cs = np.cumsum(svc_s)
+    seg_first = np.flatnonzero(new_seg)
+    seg_len = np.diff(np.append(seg_first, n))
+    seg_base = np.repeat(cs[seg_first] - svc_s[seg_first], seg_len)
+    s_local = cs - seg_base  # inclusive in-segment cumulative service
+    v = t_s - (s_local - svc_s)
+    big = float(v.max() - v.min()) + 1.0
+    running_max = _cummax(v + seg_id * big, config.backend) - seg_id * big
+    finish = s_local + running_max
+    start = finish - svc_s
+    wait = start - t_s
+
+    # --- queue depth: events in flight (same bank) at each issue -----------
+    big2 = float(max(finish.max(), t_s.max()) - min(finish.min(), t_s.min())) + 1.0
+    finish_aug = finish + seg_id * big2
+    depth = np.arange(n) - np.searchsorted(finish_aug, t_s + seg_id * big2, side="left")
+
+    # --- metrics ------------------------------------------------------------
+    exposed = np.isin(kind_s, EXPOSED_KINDS)
+    hidden = ~exposed
+    latency_ns = float(finish[exposed].max() - t_s[exposed].min()) if exposed.any() else 0.0
+    hidden_ns = float(finish[hidden].max() - t_s[hidden].min()) if hidden.any() else 0.0
+    runtime_s = max(trace.compute_time_s, latency_ns * 1e-9, hidden_ns * 1e-9)
+
+    is_dram_kind = (kind == KIND_DRAM_RD) | (kind == KIND_DRAM_WR) | (
+        kind == KIND_PREFETCH_RD) | (kind == KIND_PREFETCH_WR)
+    dram_e = float(energy[is_dram_kind].sum()) * 1e-12
+    glb_e = float(energy[~is_dram_kind].sum()) * 1e-12
+    leak_e = trace.leakage_w * runtime_s
+
+    total_lat = wait + svc_s
+    # p50/p99 are exposed-path metrics; a hidden-only trace reports 0 (like
+    # latency_s) rather than silently switching population.
+    exp_lat = total_lat[exposed] if exposed.any() else np.zeros(1)
+    # Conflict threshold: the closed-form scan carries ~1e-4 ns float64
+    # rounding at 1e10-ns time magnitudes; 1e-3 ns is still far below any
+    # real service time, so only genuine queueing counts as a conflict.
+    eps = 1e-3
+    n_glb = trace.n_glb_banks
+    glb_mask = res_s < n_glb
+    dram_mask = (res_s >= n_glb) & (res_s < n_glb + trace.n_dram_channels)
+    glb_busy = float(svc_s[glb_mask].sum())
+    dram_busy = float(svc_s[dram_mask].sum())
+
+    per_kind: dict[str, KindStats] = {}
+    for kv, name in KIND_NAMES.items():
+        m = kind_s == kv
+        if not m.any():
+            continue
+        lat = total_lat[m]
+        per_kind[name] = KindStats(
+            n_events=int(m.sum()),
+            busy_ns=float(svc_s[m].sum()),
+            mean_latency_ns=float(lat.mean()),
+            p50_latency_ns=float(np.percentile(lat, 50)),
+            p99_latency_ns=float(np.percentile(lat, 99)),
+        )
+
+    return SimResult(
+        latency_s=latency_ns * 1e-9,
+        runtime_s=runtime_s,
+        energy_j=dram_e + glb_e + leak_e,
+        dram_energy_j=dram_e,
+        glb_energy_j=glb_e,
+        leakage_energy_j=leak_e,
+        hidden_stream_s=hidden_ns * 1e-9,
+        compute_time_s=trace.compute_time_s,
+        bank_conflict_rate=float((wait > eps).mean()),
+        mean_wait_ns=float(wait.mean()),
+        p50_latency_ns=float(np.percentile(exp_lat, 50)),
+        p99_latency_ns=float(np.percentile(exp_lat, 99)),
+        mean_queue_depth=float(depth.mean()),
+        max_queue_depth=int(depth.max()),
+        glb_utilization=glb_busy / (n_glb * latency_ns) if latency_ns > 0 else 0.0,
+        dram_utilization=(
+            dram_busy / (trace.n_dram_channels * latency_ns) if latency_ns > 0 else 0.0
+        ),
+        n_events=n_total,
+        n_simulated=int(n),
+        coalesced_writes=coalesced,
+        coalesced_energy_pj=coalesced_e,
+        per_kind=per_kind,
+    )

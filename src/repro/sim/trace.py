@@ -1,0 +1,469 @@
+"""Trace generation: lower workloads and serving scenarios to event streams.
+
+A trace is a struct-of-arrays list of *tile-granular* memory events.  One
+event is one contiguous burst (default 4 KB) against a single resource — a
+GLB bank, a DRAM channel, or a DRAM prefetch channel (the double-buffered
+weight path of paper Fig. 5).  Tile granularity keeps event counts tractable
+(a ResNet-50 training pass is ~10^7 GLB accesses but only ~10^5 4 KB tiles)
+while preserving bank-level queueing behaviour.
+
+Two families of generators:
+
+* :func:`lower_workload` — lowers a ``Workload`` through the per-layer
+  Algorithm-1/2 access counts into a paced schedule whose analytic makespan
+  equals ``evaluate_system``'s memory latency.  Replaying it through the
+  engine cross-validates the closed-form model (and exposes the bank
+  conflicts the closed form assumes away).
+* :func:`serving_trace` — an LLM serving scenario (Poisson request arrivals,
+  prefill bursts, per-token decode KV-cache traffic) that the analytic model
+  cannot express at all: KV reads grow with context length, KV appends hit
+  the same lines repeatedly (write-coalescing fodder), and bursty arrivals
+  pile up on banks.
+
+Issue times are *earliest-start* times; the engine resolves the actual start
+per bank queue.  All times are in nanoseconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.access_counts import MemoryParams, per_layer_access_counts
+from repro.core.bandwidth import ArrayConfig
+from repro.core.memory_system import HybridMemorySystem
+from repro.core.workload import NLPModelSpec, Workload
+
+MB = 1024 * 1024
+
+# Event kinds.
+KIND_GLB_RD = 0
+KIND_GLB_WR = 1
+KIND_DRAM_RD = 2
+KIND_DRAM_WR = 3
+KIND_PREFETCH_RD = 4  # latency-hidden weight/gradient stream
+KIND_PREFETCH_WR = 5
+
+KIND_NAMES = {
+    KIND_GLB_RD: "glb_rd",
+    KIND_GLB_WR: "glb_wr",
+    KIND_DRAM_RD: "dram_rd",
+    KIND_DRAM_WR: "dram_wr",
+    KIND_PREFETCH_RD: "prefetch_rd",
+    KIND_PREFETCH_WR: "prefetch_wr",
+}
+
+EXPOSED_KINDS = (KIND_GLB_RD, KIND_GLB_WR, KIND_DRAM_RD, KIND_DRAM_WR)
+
+
+@dataclasses.dataclass
+class Trace:
+    """Struct-of-arrays event stream plus the hardware it targets."""
+
+    t_issue_ns: np.ndarray  # float64 — earliest start time
+    resource: np.ndarray  # int32 — bank/channel id (see resource map below)
+    service_ns: np.ndarray  # float64 — busy time on the resource
+    energy_pj: np.ndarray  # float64 — dynamic energy of the burst
+    kind: np.ndarray  # int8 — KIND_*
+    line: np.ndarray  # int64 — coalescing key; -1 = never coalesce
+    # Resource map: [0, n_glb_banks) GLB banks, then n_dram_channels DRAM
+    # channels, then n_prefetch_channels prefetch channels.
+    n_glb_banks: int
+    n_dram_channels: int
+    n_prefetch_channels: int
+    compute_time_s: float = 0.0  # PE-array floor (runtime = max(compute, mem))
+    leakage_w: float = 0.0  # GLB leakage burning for the whole runtime
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return int(self.t_issue_ns.shape[0])
+
+    @property
+    def n_resources(self) -> int:
+        return self.n_glb_banks + self.n_dram_channels + self.n_prefetch_channels
+
+
+class TraceBuilder:
+    """Accumulates event blocks and finalizes them into one `Trace`."""
+
+    def __init__(
+        self,
+        system: HybridMemorySystem,
+        n_dram_channels: int = 8,
+        n_prefetch_channels: int = 4,
+    ):
+        self.system = system
+        self.glb = system.glb
+        self.dram = system.dram
+        self.n_glb_banks = max(1, int(self.glb.banks))
+        self.n_dram_channels = n_dram_channels
+        self.n_prefetch_channels = n_prefetch_channels
+        self._chunks: list[tuple[np.ndarray, ...]] = []
+        self._line_counter = 0
+        self._rr_offset = 0  # rotates bank assignment across blocks
+
+    # -- resource id helpers -------------------------------------------------
+    def dram_resource(self, ch: np.ndarray | int):
+        return self.n_glb_banks + ch
+
+    def prefetch_resource(self, ch: np.ndarray | int):
+        return self.n_glb_banks + self.n_dram_channels + ch
+
+    def fresh_lines(self, n: int) -> np.ndarray:
+        out = np.arange(self._line_counter, self._line_counter + n, dtype=np.int64)
+        self._line_counter += n
+        return out
+
+    def add(self, t_issue, resource, service, energy, kind, line=None) -> None:
+        t_issue = np.asarray(t_issue, dtype=np.float64).ravel()
+        n = t_issue.shape[0]
+        if n == 0:
+            return
+        resource = np.broadcast_to(np.asarray(resource, np.int32), (n,))
+        service = np.broadcast_to(np.asarray(service, np.float64), (n,))
+        energy = np.broadcast_to(np.asarray(energy, np.float64), (n,))
+        kind_a = np.broadcast_to(np.asarray(kind, np.int8), (n,))
+        if line is None:
+            line_a = self.fresh_lines(n)
+        else:
+            line_a = np.broadcast_to(np.asarray(line, np.int64), (n,))
+        self._chunks.append(
+            tuple(np.ascontiguousarray(a) for a in (t_issue, resource, service, energy, kind_a, line_a))
+        )
+
+    def add_paced_block(
+        self,
+        kind: int,
+        n_accesses: float,
+        t_access_ns: float,
+        e_access_pj: float,
+        start_ns: float,
+        accesses_per_tile: int,
+        pool_size: int,
+        pool_base: int = 0,
+    ) -> float:
+        """Emit one block of tiles paced at the pool's aggregate service rate.
+
+        Tiles are striped round-robin over ``pool_size`` resources starting at
+        ``pool_base`` and issued with spacing ``service/pool`` so each resource
+        sees back-to-back arrivals; the block's makespan therefore equals the
+        analytic ``n_accesses * t_access / pool_size``.  Returns the block's
+        analytic end time.  Totals (service, energy) are preserved exactly by
+        spreading the remainder across tiles.
+        """
+        if n_accesses <= 0:
+            return start_ns
+        n_tiles = max(1, int(math.ceil(n_accesses / accesses_per_tile)))
+        service_each = n_accesses * t_access_ns / n_tiles
+        energy_each = n_accesses * e_access_pj / n_tiles
+        duration = n_accesses * t_access_ns / pool_size
+        j = np.arange(n_tiles)
+        resource = pool_base + (self._rr_offset + j) % pool_size
+        t_issue = start_ns + j * (duration / n_tiles)
+        self._rr_offset = (self._rr_offset + n_tiles) % max(pool_size, 1)
+        self.add(t_issue, resource, service_each, energy_each, kind)
+        return start_ns + duration
+
+    def build(self, compute_time_s: float = 0.0, meta: dict | None = None) -> Trace:
+        if self._chunks:
+            cols = [np.concatenate([c[i] for c in self._chunks]) for i in range(6)]
+        else:
+            cols = [
+                np.empty(0, dt)
+                for dt in (np.float64, np.int32, np.float64, np.float64, np.int8, np.int64)
+            ]
+        return Trace(
+            t_issue_ns=cols[0],
+            resource=cols[1].astype(np.int32),
+            service_ns=cols[2],
+            energy_pj=cols[3],
+            kind=cols[4].astype(np.int8),
+            line=cols[5],
+            n_glb_banks=self.n_glb_banks,
+            n_dram_channels=self.n_dram_channels,
+            n_prefetch_channels=self.n_prefetch_channels,
+            compute_time_s=compute_time_s,
+            leakage_w=self.glb.leakage_w,
+            meta=meta or {},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Workload lowering (cross-validates the analytic model)
+# ---------------------------------------------------------------------------
+
+
+def lower_workload(
+    workload: Workload,
+    batch: int,
+    system: HybridMemorySystem,
+    mode: str = "inference",
+    d_w: int = 4,
+    mem: MemoryParams | None = None,
+    arr: ArrayConfig | None = None,
+    tile_bytes: int = 4096,
+    n_dram_channels: int = 8,
+    n_prefetch_channels: int = 4,
+) -> Trace:
+    """Lower a `Workload` into a tile-granular event schedule.
+
+    Per layer, exposed DRAM traffic is issued first (paced at aggregate HBM
+    bandwidth across channels), then GLB traffic (paced at aggregate bank
+    service rate); latency-hidden weight/gradient streams ride the prefetch
+    channels on their own cursor.  Summed over layers the analytic makespan of
+    this schedule equals ``evaluate_system``'s ``latency_s``, so the simulated
+    makespan isolates dynamic effects (conflicts, queueing) from the model.
+    """
+    arr = arr or ArrayConfig()
+    mem = mem or MemoryParams(glb_mb=system.glb.capacity_mb)
+    per_layer = per_layer_access_counts(workload, batch, mem, mode, d_w)
+
+    b = TraceBuilder(system, n_dram_channels, n_prefetch_channels)
+    glb, dram = system.glb, system.dram
+    glb_tile_acc = max(1, tile_bytes // int(mem.mbpa_glb * MB))  # GLB accesses/tile
+    dram_tile_acc = max(1, tile_bytes // dram.access_bytes)
+    # Per-channel service time of one DRAM access at full-stack bandwidth.
+    t_dram_acc_ns = dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
+    t_dram_acc_ch_ns = t_dram_acc_ns * b.n_dram_channels  # per-channel burst time
+    t_pref_acc_ch_ns = t_dram_acc_ns * b.n_prefetch_channels
+    e_dram_pj = dram.energy_pj_per_access()
+
+    cursor = 0.0  # exposed-path schedule
+    pref_cursor = 0.0  # hidden weight-stream schedule
+    for acc in per_layer:
+        # Exposed DRAM phase (activation/gradient spills).
+        cursor = b.add_paced_block(
+            KIND_DRAM_RD, acc.rd_dram, t_dram_acc_ch_ns, e_dram_pj, cursor,
+            dram_tile_acc, b.n_dram_channels, b.dram_resource(0),
+        )
+        cursor = b.add_paced_block(
+            KIND_DRAM_WR, acc.wr_dram, t_dram_acc_ch_ns, e_dram_pj, cursor,
+            dram_tile_acc, b.n_dram_channels, b.dram_resource(0),
+        )
+        # GLB phase: reads then writes, striped over all banks.
+        cursor = b.add_paced_block(
+            KIND_GLB_RD, acc.rd_glb, glb.read_latency_ns,
+            glb.read_energy_pj_per_access, cursor, glb_tile_acc, b.n_glb_banks,
+        )
+        cursor = b.add_paced_block(
+            KIND_GLB_WR, acc.wr_glb, glb.write_latency_ns,
+            glb.write_energy_pj_per_access, cursor, glb_tile_acc, b.n_glb_banks,
+        )
+        # Hidden weight/gradient stream on the prefetch channels.
+        pref_cursor = b.add_paced_block(
+            KIND_PREFETCH_RD, acc.rd_dram_w, t_pref_acc_ch_ns, e_dram_pj,
+            pref_cursor, dram_tile_acc, b.n_prefetch_channels, b.prefetch_resource(0),
+        )
+        pref_cursor = b.add_paced_block(
+            KIND_PREFETCH_WR, acc.wr_dram_w, t_pref_acc_ch_ns, e_dram_pj,
+            pref_cursor, dram_tile_acc, b.n_prefetch_channels, b.prefetch_resource(0),
+        )
+
+    mac_mult = 3.0 if mode == "training" else 1.0
+    t_compute = mac_mult * workload.total_macs(batch) / arr.peak_ops_per_sec
+    return b.build(
+        compute_time_s=t_compute,
+        meta={
+            "workload": workload.name,
+            "mode": mode,
+            "batch": batch,
+            "technology": glb.technology,
+            "glb_mb": glb.capacity_mb,
+            "analytic_end_ns": cursor,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# LLM serving scenario (prefill + decode KV-cache traffic)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Open-loop LLM serving trace parameters.
+
+    Requests arrive as a Poisson process at ``arrival_rate_rps``; each brings
+    a prompt (prefill burst) and then decodes ``decode_len``-ish tokens at a
+    fixed ``token_interval_ns`` (open-loop: the trace asks the memory system
+    to keep this pace, the simulator reports whether it can).  KV-cache lives
+    in the GLB; when the aggregate KV footprint exceeds capacity the overflow
+    fraction of KV reads spills to DRAM (exposed latency).
+    """
+
+    n_requests: int = 32
+    arrival_rate_rps: float = 100.0
+    prompt_len: int = 256
+    decode_len: int = 128
+    d_w: int = 2  # serving runs fp16/bf16
+    token_interval_ns: float | None = None  # default: weight-stream bound
+    kv_stripes: int = 8  # banks a single KV read burst stripes over
+    seed: int = 0
+
+
+def _spec_weight_bytes(spec: NLPModelSpec, d_w: int) -> float:
+    n_layers = spec.enc_layers + spec.dec_layers
+    per_layer = (4 * spec.d_model**2 + 2 * spec.d_model * spec.d_ff) * d_w
+    total = n_layers * per_layer + spec.vocab * spec.d_model * d_w
+    if spec.enc_layers and spec.dec_layers:
+        # Decoder cross-attention blocks (xq/xk/xv/xo), cf.
+        # workload.transformer_block_layers.
+        total += spec.dec_layers * 4 * spec.d_model**2 * d_w
+    return total
+
+
+def serving_trace(
+    system: HybridMemorySystem,
+    spec: NLPModelSpec,
+    cfg: ServingConfig = ServingConfig(),
+    n_dram_channels: int = 8,
+    n_prefetch_channels: int = 4,
+) -> Trace:
+    """Generate a prefill+decode serving trace (fully vectorized).
+
+    Per decode token and transformer layer the trace emits: KV-cache read
+    stripes whose size grows with context length, a KV append write to a
+    stable per-(request, layer) line (coalescing target), an activation
+    read/write pair, and a hidden weight-stream burst on the prefetch
+    channels.  Prefill emits per-layer activation + KV-write bursts at
+    request arrival.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    b = TraceBuilder(system, n_dram_channels, n_prefetch_channels)
+    glb, dram = system.glb, system.dram
+    n_layers = max(1, spec.enc_layers + spec.dec_layers)
+    d = spec.d_model
+    kv_token_bytes = 2 * d * cfg.d_w  # K + V per token per layer
+    glb_acc_bytes = int(MB * MemoryParams().mbpa_glb)  # 256 B GLB bus
+    t_dram_acc_ns = dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
+    t_dram_acc_ch_ns = t_dram_acc_ns * n_dram_channels
+    e_dram_pj = dram.energy_pj_per_access()
+
+    # --- request-level draws -------------------------------------------------
+    R = cfg.n_requests
+    arrivals_ns = np.cumsum(rng.exponential(1e9 / cfg.arrival_rate_rps, R))
+    prompts = np.maximum(8, rng.poisson(cfg.prompt_len, R)).astype(np.int64)
+    decodes = np.maximum(4, rng.poisson(cfg.decode_len, R)).astype(np.int64)
+    Kmax = int(decodes.max())
+
+    weight_bytes = _spec_weight_bytes(spec, cfg.d_w)
+    t_weight_stream_ns = weight_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
+    # Default decode cadence: one global step per weight stream plus 15%
+    # headroom — continuous batching shares the stream across all requests
+    # decoding in the same step.
+    if cfg.token_interval_ns is not None:
+        if cfg.token_interval_ns <= 0:
+            raise ValueError("token_interval_ns must be positive")
+        token_interval = cfg.token_interval_ns
+    else:
+        token_interval = max(1.15 * t_weight_stream_ns, 1e3)
+    # Prefill time estimate: stream weights once + quadratic attention floor.
+    prefill_ns = t_weight_stream_ns * (1.0 + prompts / 2048.0)
+
+    # --- KV spill fraction ---------------------------------------------------
+    # Steady-state *concurrent* KV footprint vs GLB capacity; the overflow
+    # fraction of KV reads goes to DRAM.  (A fraction, not a per-line
+    # placement — documented approximation.)
+    mean_ctx = float(np.mean(prompts + decodes / 2))
+    mean_req_dur_ns = float(np.mean(prefill_ns)) + float(np.mean(decodes)) * token_interval
+    concurrency = min(float(R), cfg.arrival_rate_rps * mean_req_dur_ns * 1e-9)
+    kv_footprint = max(1.0, concurrency) * n_layers * kv_token_bytes * mean_ctx
+    glb_bytes = glb.capacity_mb * MB
+    spill_frac = max(0.0, 1.0 - glb_bytes / max(kv_footprint, 1.0))
+
+    # --- prefill bursts ------------------------------------------------------
+    # Per (request, layer): activation traffic ~6*P*d reads + ~2*P*d writes
+    # against GLB, KV write of P tokens, hidden weight stream slice.
+    r_idx = np.repeat(np.arange(R), n_layers)
+    l_idx = np.tile(np.arange(n_layers), R)
+    t_pref = arrivals_ns[r_idx] + prefill_ns[r_idx] * (l_idx / n_layers)
+    p_toks = prompts[r_idx]
+    act_rd_acc = 6.0 * p_toks * d * cfg.d_w / glb_acc_bytes
+    act_wr_acc = (2.0 * p_toks * d * cfg.d_w + p_toks * kv_token_bytes) / glb_acc_bytes
+    bank = (r_idx * 131 + l_idx * 17) % b.n_glb_banks
+    b.add(t_pref, bank, act_rd_acc * glb.read_latency_ns,
+          act_rd_acc * glb.read_energy_pj_per_access, KIND_GLB_RD)
+    b.add(t_pref, (bank + 1) % b.n_glb_banks, act_wr_acc * glb.write_latency_ns,
+          act_wr_acc * glb.write_energy_pj_per_access, KIND_GLB_WR)
+    pref_acc = weight_bytes / n_layers / dram.access_bytes
+    b.add(t_pref, b.prefetch_resource(l_idx % b.n_prefetch_channels),
+          pref_acc * t_dram_acc_ns * b.n_prefetch_channels,
+          pref_acc * e_dram_pj, KIND_PREFETCH_RD)
+
+    # --- decode traffic (vectorized over request x token x layer) -----------
+    # Tokens land on a global step grid (continuous batching): request r's
+    # k-th token fires at step0_r + k, where step0 is its first step after
+    # prefill completes.
+    k = np.arange(Kmax)
+    valid = k[None, :] < decodes[:, None]  # (R, Kmax)
+    rr, kk = np.nonzero(valid)
+    step0 = np.ceil((arrivals_ns + prefill_ns) / token_interval).astype(np.int64) + 1
+    steps = step0[rr] + kk
+    t_tok = steps * token_interval
+    ctx = prompts[rr] + kk  # context length at this token
+    n_tok = rr.shape[0]
+
+    # KV read stripes: (token, layer, stripe) — grows with context.
+    S = cfg.kv_stripes
+    kv_acc_total = ctx * kv_token_bytes / glb_acc_bytes  # per layer
+    tl_r = np.repeat(rr, n_layers * S)
+    tl_t = np.repeat(t_tok, n_layers * S)
+    tl_l = np.tile(np.repeat(np.arange(n_layers), S), n_tok)
+    tl_s = np.tile(np.arange(S), n_tok * n_layers)
+    tl_acc = np.repeat(kv_acc_total, n_layers * S) / S
+    stripe_bank = (tl_r * 131 + tl_l * 17 + tl_s * 7919) % b.n_glb_banks
+    spilled = rng.random(tl_acc.shape[0]) < spill_frac
+    # GLB-resident KV reads.
+    g = ~spilled
+    b.add(tl_t[g], stripe_bank[g], tl_acc[g] * glb.read_latency_ns,
+          tl_acc[g] * glb.read_energy_pj_per_access, KIND_GLB_RD)
+    # Spilled KV reads hit DRAM (exposed!) — 64 B bursts, channel-striped.
+    sp_acc = tl_acc[spilled] * glb_acc_bytes / dram.access_bytes
+    b.add(tl_t[spilled], b.dram_resource(stripe_bank[spilled] % b.n_dram_channels),
+          sp_acc * t_dram_acc_ch_ns, sp_acc * e_dram_pj, KIND_DRAM_RD)
+
+    # KV append writes: stable line per (request, layer) -> coalescible.
+    w_r = np.repeat(rr, n_layers)
+    w_t = np.repeat(t_tok, n_layers)
+    w_l = np.tile(np.arange(n_layers), n_tok)
+    w_acc = max(1.0, kv_token_bytes / glb_acc_bytes)
+    kv_line_base = b.fresh_lines(R * n_layers)[0] if R * n_layers else 0
+    kv_line = kv_line_base + (w_r * n_layers + w_l).astype(np.int64)
+    b.add(w_t, (w_r * 131 + w_l * 17) % b.n_glb_banks,
+          w_acc * glb.write_latency_ns, w_acc * glb.write_energy_pj_per_access,
+          KIND_GLB_WR, line=kv_line)
+
+    # Activation read+write per (token, layer).
+    act_acc = max(1.0, 2.0 * d * cfg.d_w / glb_acc_bytes)
+    b.add(w_t, (w_r * 131 + w_l * 17 + 3) % b.n_glb_banks,
+          act_acc * glb.read_latency_ns, act_acc * glb.read_energy_pj_per_access,
+          KIND_GLB_RD)
+    b.add(w_t, (w_r * 131 + w_l * 17 + 5) % b.n_glb_banks,
+          act_acc * glb.write_latency_ns, act_acc * glb.write_energy_pj_per_access,
+          KIND_GLB_WR)
+
+    # Hidden weight stream: ONE stream per global decode step, shared by all
+    # requests decoding in that step (continuous batching), striped per layer
+    # over the prefetch channels.
+    uniq_steps = np.unique(steps)
+    dec_pref_acc = weight_bytes / n_layers / dram.access_bytes
+    u_t = np.repeat(uniq_steps * token_interval, n_layers)
+    u_l = np.tile(np.arange(n_layers), uniq_steps.shape[0])
+    b.add(u_t, b.prefetch_resource(u_l % b.n_prefetch_channels),
+          dec_pref_acc * t_dram_acc_ns * b.n_prefetch_channels,
+          dec_pref_acc * e_dram_pj, KIND_PREFETCH_RD)
+
+    return b.build(
+        compute_time_s=0.0,
+        meta={
+            "scenario": "serving",
+            "model": spec.name,
+            "n_requests": R,
+            "token_interval_ns": token_interval,
+            "kv_spill_frac": spill_frac,
+            "technology": glb.technology,
+            "glb_mb": glb.capacity_mb,
+        },
+    )

@@ -1,0 +1,131 @@
+"""Cross-validation: trace-driven replay vs the closed-form system model.
+
+``evaluate_system`` (paper Section V-E) assumes perfect bank-level
+parallelism and fully-hidden weight streaming.  :func:`cross_validate`
+lowers the same workload/GLB configuration to an event trace, replays it,
+and reports simulated vs analytic latency/energy plus the congestion
+metrics only the simulator can see.  The Fig. 18 configurations are bundled
+as :func:`fig18_cross_validation` for tests and the CLI.
+"""
+
+from __future__ import annotations
+
+from repro.core.bandwidth import ArrayConfig
+from repro.core.evaluate import evaluate_system
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import Workload, cv_model_zoo, nlp_model_zoo
+from repro.sim.engine import SimConfig, SimResult, simulate_trace
+from repro.sim.trace import lower_workload
+
+
+def cross_validate(
+    workload: Workload,
+    batch: int,
+    system: HybridMemorySystem,
+    mode: str = "inference",
+    d_w: int = 4,
+    tile_bytes: int = 4096,
+    arr: ArrayConfig | None = None,
+    sim_config: SimConfig = SimConfig(),
+) -> dict:
+    """Replay one configuration and compare against ``evaluate_system``."""
+    analytic = evaluate_system(workload, batch, system, mode, d_w, arr)
+    trace = lower_workload(
+        workload, batch, system, mode, d_w, arr=arr, tile_bytes=tile_bytes
+    )
+    sim = simulate_trace(trace, sim_config)
+    lat_err = _rel_err(sim.latency_s, analytic.latency_s)
+    e_err = _rel_err(sim.energy_j, analytic.energy_j)
+    return {
+        "workload": workload.name,
+        "mode": mode,
+        "technology": system.glb.technology,
+        "glb_mb": system.glb.capacity_mb,
+        "n_events": sim.n_simulated,
+        "sim_latency_s": sim.latency_s,
+        "analytic_latency_s": analytic.latency_s,
+        "latency_rel_err": lat_err,
+        "sim_energy_j": sim.energy_j,
+        "analytic_energy_j": analytic.energy_j,
+        "energy_rel_err": e_err,
+        "bank_conflict_rate": sim.bank_conflict_rate,
+        "p50_latency_ns": sim.p50_latency_ns,
+        "p99_latency_ns": sim.p99_latency_ns,
+        "mean_queue_depth": sim.mean_queue_depth,
+        "glb_utilization": sim.glb_utilization,
+        "sim": sim,
+        "analytic": analytic,
+    }
+
+
+def _rel_err(sim: float, ref: float) -> float:
+    return abs(sim - ref) / ref if ref > 0 else 0.0
+
+
+# The acceptance configurations: Fig. 18 training quadrants.
+FIG18_CONFIGS = (
+    ("cv", "resnet50", "training", 256.0),
+    ("cv", "resnet50", "training", 64.0),
+    ("nlp", "bert", "training", 256.0),
+    ("nlp", "gpt2", "training", 256.0),
+)
+
+
+# Per-domain tile granularity: NLP working sets are ~30x larger, so coarser
+# tiles keep event counts (and runtime) tractable at the same accuracy.
+_DOMAIN_TILE_BYTES = {"cv": 16384, "nlp": 131072}
+
+
+def fig18_cross_validation(
+    batch: int = 16,
+    technologies: tuple[str, ...] = ("sram", "sot", "sot_opt"),
+    tile_bytes: int | None = None,
+    configs=FIG18_CONFIGS,
+) -> list[dict]:
+    """Cross-validate the simulator on the Fig. 18 training configurations."""
+    zoos = {"cv": cv_model_zoo(), "nlp": nlp_model_zoo()}
+    rows = []
+    for domain, model, mode, cap in configs:
+        wl = zoos[domain][model]
+        tile = tile_bytes or _DOMAIN_TILE_BYTES[domain]
+        for tech in technologies:
+            system = HybridMemorySystem(glb=glb_array(tech, cap))
+            r = cross_validate(wl, batch, system, mode, tile_bytes=tile)
+            r["domain"] = domain
+            rows.append(r)
+    return rows
+
+
+def check_tolerance(rows: list[dict], tol: float = 0.15) -> list[str]:
+    """Return human-readable violations (empty list == all within tol)."""
+    bad = []
+    for r in rows:
+        for key in ("latency_rel_err", "energy_rel_err"):
+            if r[key] > tol:
+                bad.append(
+                    f"{r['workload']}/{r['mode']}/{r['technology']}@{r['glb_mb']}MB "
+                    f"{key}={r[key]:.3f} > {tol}"
+                )
+    return bad
+
+
+def summarize(result: SimResult) -> str:
+    """Multi-line human-readable dump of a SimResult."""
+    lines = [
+        f"events simulated     : {result.n_simulated} (of {result.n_events}, "
+        f"{result.coalesced_writes} writes coalesced)",
+        f"memory latency       : {result.latency_s * 1e3:.3f} ms",
+        f"runtime              : {result.runtime_s * 1e3:.3f} ms "
+        f"(compute floor {result.compute_time_s * 1e3:.3f} ms, "
+        f"hidden stream {result.hidden_stream_s * 1e3:.3f} ms)",
+        f"energy               : {result.energy_j * 1e3:.3f} mJ "
+        f"(dram {result.dram_energy_j * 1e3:.3f}, glb {result.glb_energy_j * 1e3:.3f}, "
+        f"leak {result.leakage_energy_j * 1e3:.3f})",
+        f"bank conflict rate   : {result.bank_conflict_rate * 100:.2f}%",
+        f"access latency p50/p99: {result.p50_latency_ns:.0f} / "
+        f"{result.p99_latency_ns:.0f} ns",
+        f"queue depth mean/max : {result.mean_queue_depth:.2f} / {result.max_queue_depth}",
+        f"utilization glb/dram : {result.glb_utilization * 100:.1f}% / "
+        f"{result.dram_utilization * 100:.1f}%",
+    ]
+    return "\n".join(lines)

@@ -4,6 +4,8 @@ import sys
 # Tests run single-device CPU (the dry-run, and only the dry-run, forces 512
 # host devices — in its own process).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Make the optional-hypothesis shim importable as `_hypothesis_compat`.
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax
 

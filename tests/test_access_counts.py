@@ -1,7 +1,7 @@
 """Algorithms 1 & 2: invariants + paper-claimed behaviours."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.access_counts import (
     MemoryParams,
