@@ -1,0 +1,93 @@
+"""repro.dse batched sweep vs the scalar STCO loop (speedup evidence).
+
+Runs the full capacity x technology x batch grid for representative CV and
+NLP workloads through both engines, checks they produce identical design
+points, and reports the wall-clock speedup plus the Pareto/knee summary.
+The ISSUE-2 acceptance bar is >= 10x on the full grid.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.stco import (
+    CAPACITY_GRID_MB,
+    TECHNOLOGY_GRID,
+    grid_points_scalar,
+    knee_capacity,
+)
+from repro.core.workload import cv_model_zoo, nlp_model_zoo
+from repro.dse import GridSpec, evaluate_workload_grid, knee_index, pareto_indices
+
+FULL_CASES = (
+    ("cv", "resnet50", "inference"),
+    ("cv", "densenet121", "training"),
+    ("nlp", "bert", "training"),
+    ("nlp", "gpt2", "inference"),
+)
+SMOKE_CASES = (("cv", "resnet50", "inference"), ("nlp", "bert", "training"))
+BATCHES = (4, 16)
+
+
+def run(smoke: bool = False) -> list[dict]:
+    zoos = {"cv": cv_model_zoo(), "nlp": nlp_model_zoo()}
+    cases = SMOKE_CASES if smoke else FULL_CASES
+    # Warm both paths once so import overhead doesn't pollute timing.
+    warm = zoos["cv"]["alexnet"]
+    evaluate_workload_grid(warm, GridSpec(batches=BATCHES), backend="numpy")
+    grid_points_scalar(warm, BATCHES[0], "inference", 4)
+
+    rows = []
+    for domain, model, mode in cases:
+        wl = zoos[domain][model]
+        spec = GridSpec(
+            capacities_mb=CAPACITY_GRID_MB,
+            technologies=TECHNOLOGY_GRID,
+            batches=BATCHES,
+            modes=(mode,),
+        )
+        t0 = time.perf_counter()
+        grid = evaluate_workload_grid(wl, spec, backend="numpy")
+        t_vec = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        scalar_points = [
+            p
+            for batch in BATCHES
+            for p in grid_points_scalar(wl, batch, mode, 4)
+        ]
+        t_scalar = time.perf_counter() - t0
+
+        # Equivalence spot-check on the headline objective.
+        mismatch = 0
+        i = 0
+        for batch in BATCHES:
+            for tech in TECHNOLOGY_GRID:
+                for cap in CAPACITY_GRID_MB:
+                    if scalar_points[i].metrics.energy_j != grid.point(
+                        mode, tech, batch, cap
+                    ).energy_j:
+                        mismatch += 1
+                    i += 1
+
+        curve = grid.dram_curve(mode, 16)
+        objs, labels = grid.objective_arrays(mode, 16)
+        front = pareto_indices(objs)
+        knee = labels[knee_index(objs, front)]
+        rows.append(
+            {
+                "domain": domain,
+                "model": model,
+                "mode": mode,
+                "grid_points": len(BATCHES) * len(TECHNOLOGY_GRID) * len(CAPACITY_GRID_MB),
+                "scalar_ms": round(t_scalar * 1e3, 2),
+                "vectorized_ms": round(t_vec * 1e3, 2),
+                "speedup_x": round(t_scalar / t_vec, 1),
+                "bit_mismatches": mismatch,
+                "knee_capacity_mb": knee_capacity(curve),
+                "pareto_points": len(front),
+                "knee_tech": knee[0],
+                "knee_cap_mb": knee[1],
+            }
+        )
+    return rows

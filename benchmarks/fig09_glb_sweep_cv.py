@@ -1,32 +1,42 @@
 """Paper Fig. 9: impact of GLB size on DRAM accesses / speedup / energy for
-CV models (baseline 2 MB GLB, batch 16)."""
+CV models (baseline 2 MB GLB, batch 16).
 
-from repro.core.access_counts import dram_reduction_pct
-from repro.core.evaluate import evaluate_system
-from repro.core.memory_system import HybridMemorySystem, glb_array
+Runs through the batched ``repro.dse`` path: one grid evaluation per model
+covers the baseline and every swept capacity at once.
+"""
+
 from repro.core.workload import cv_model_zoo
+from repro.dse import GridSpec, evaluate_workload_grid
 
+BASELINE_MB = 2.0
 CAPS = (4, 8, 16, 32, 64, 128, 256)
 
 
-def run(mode="inference", batch=16) -> list[dict]:
+def run(mode="inference", batch=16, zoo=None) -> list[dict]:
     rows = []
-    for name, wl in cv_model_zoo().items():
-        base = evaluate_system(
-            wl, batch, HybridMemorySystem(glb=glb_array("sram", 2.0)), mode
-        )
+    spec = GridSpec(
+        capacities_mb=(BASELINE_MB, *CAPS),
+        technologies=("sram",),
+        batches=(batch,),
+        modes=(mode,),
+    )
+    for name, wl in (zoo or cv_model_zoo()).items():
+        grid = evaluate_workload_grid(wl, spec, backend="numpy")
+        base = grid.point(mode, "sram", batch, BASELINE_MB)
+        base_dram = base.counts.dram_total
         for cap in CAPS:
-            m = evaluate_system(
-                wl, batch, HybridMemorySystem(glb=glb_array("sram", cap)), mode
+            m = grid.point(mode, "sram", batch, cap)
+            reduction = (
+                100.0 * (base_dram - m.counts.dram_total) / base_dram
+                if base_dram > 0
+                else 0.0
             )
             rows.append(
                 {
                     "model": name,
                     "mode": mode,
                     "glb_mb": cap,
-                    "dram_reduction_pct": round(
-                        dram_reduction_pct(wl, batch, cap, 2.0, mode), 1
-                    ),
+                    "dram_reduction_pct": round(reduction, 1),
                     "speedup_x": round(base.latency_s / m.latency_s, 2),
                     "energy_saving_x": round(base.energy_j / m.energy_j, 2),
                 }

@@ -1,32 +1,8 @@
-"""Paper Fig. 11: GLB-size sweep for NLP models."""
+"""Paper Fig. 11: GLB-size sweep for NLP models (batched repro.dse path)."""
 
-from benchmarks.fig09_glb_sweep_cv import CAPS
-from repro.core.access_counts import dram_reduction_pct
-from repro.core.evaluate import evaluate_system
-from repro.core.memory_system import HybridMemorySystem, glb_array
+from benchmarks.fig09_glb_sweep_cv import run as _run_glb_sweep
 from repro.core.workload import nlp_model_zoo
 
 
 def run(mode="inference", batch=16) -> list[dict]:
-    rows = []
-    for name, wl in nlp_model_zoo().items():
-        base = evaluate_system(
-            wl, batch, HybridMemorySystem(glb=glb_array("sram", 2.0)), mode
-        )
-        for cap in CAPS:
-            m = evaluate_system(
-                wl, batch, HybridMemorySystem(glb=glb_array("sram", cap)), mode
-            )
-            rows.append(
-                {
-                    "model": name,
-                    "mode": mode,
-                    "glb_mb": cap,
-                    "dram_reduction_pct": round(
-                        dram_reduction_pct(wl, batch, cap, 2.0, mode), 1
-                    ),
-                    "speedup_x": round(base.latency_s / m.latency_s, 2),
-                    "energy_saving_x": round(base.energy_j / m.energy_j, 2),
-                }
-            )
-    return rows
+    return _run_glb_sweep(mode=mode, batch=batch, zoo=nlp_model_zoo())

@@ -1,8 +1,14 @@
 """Paper Fig. 18: system-level energy/latency of SOT and DTCO-opt SOT vs
-SRAM at iso-capacity — the paper's headline table."""
+SRAM at iso-capacity — the paper's headline table.
 
-from repro.core.evaluate import geomean, improvement_table
+Runs through the batched ``repro.dse`` path: one grid evaluation per model
+covers all three technologies at the quadrant's capacity (bit-compatible
+with the scalar ``improvement_table``; see tests/test_dse_equivalence.py).
+"""
+
+from repro.core.evaluate import geomean, improvement_ratios
 from repro.core.workload import cv_model_zoo, nlp_model_zoo
+from repro.dse import GridSpec, evaluate_workload_grid
 
 QUADRANTS = [
     ("cv", "inference", 64.0, {"sot": (5, 2), "sot_opt": (7, 8)}),
@@ -12,11 +18,34 @@ QUADRANTS = [
 ]
 
 
+def improvement_table_batched(
+    workloads, batch: int, capacity_mb: float, mode: str, d_w: int = 4
+) -> dict[str, dict[str, float]]:
+    """Batched equivalent of ``repro.core.evaluate.improvement_table``."""
+    spec = GridSpec(
+        capacities_mb=(capacity_mb,),
+        technologies=("sram", "sot", "sot_opt"),
+        batches=(batch,),
+        modes=(mode,),
+        d_w=d_w,
+    )
+    table: dict[str, dict[str, float]] = {}
+    for name, wl in workloads.items():
+        grid = evaluate_workload_grid(wl, spec, backend="numpy")
+        table[name] = improvement_ratios(
+            {
+                tech: grid.point(mode, tech, batch, capacity_mb)
+                for tech in spec.technologies
+            }
+        )
+    return table
+
+
 def run() -> list[dict]:
     zoos = {"cv": cv_model_zoo(), "nlp": nlp_model_zoo()}
     rows = []
     for domain, mode, cap, paper in QUADRANTS:
-        tab = improvement_table(zoos[domain], 16, cap, mode)
+        tab = improvement_table_batched(zoos[domain], 16, cap, mode)
         for tech in ("sot", "sot_opt"):
             e = geomean(v[f"{tech}_energy_x"] for v in tab.values())
             l = geomean(v[f"{tech}_latency_x"] for v in tab.values())
@@ -39,7 +68,7 @@ def run_per_model() -> list[dict]:
     zoos = {"cv": cv_model_zoo(), "nlp": nlp_model_zoo()}
     rows = []
     for domain, mode, cap, _ in QUADRANTS:
-        tab = improvement_table(zoos[domain], 16, cap, mode)
+        tab = improvement_table_batched(zoos[domain], 16, cap, mode)
         for model, v in tab.items():
             rows.append(
                 {"domain": domain, "mode": mode, "model": model, **{k: round(x, 2) for k, x in v.items()}}

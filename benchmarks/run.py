@@ -1,9 +1,10 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV (one line per benchmark) followed by
-per-benchmark detail tables.
+per-benchmark detail tables.  ``--smoke`` shrinks the expensive benchmarks
+(``sim_vs_analytic``, ``explore``) so the whole harness stays CI-friendly.
 """
 
 from __future__ import annotations
@@ -12,6 +13,7 @@ import argparse
 import sys
 
 from benchmarks import (
+    explore,
     fig07_bandwidth_cv,
     fig08_bandwidth_nlp,
     fig09_glb_sweep_cv,
@@ -29,6 +31,9 @@ from benchmarks import (
     tab07_bitcell_power,
 )
 from benchmarks.common import rows_to_csv, timed
+
+# Benchmarks whose run() accepts a ``smoke`` flag.
+SMOKE_AWARE = {"sim_vs_analytic", "explore"}
 
 
 def _derive(name: str, rows: list[dict]) -> str:
@@ -71,6 +76,10 @@ def _derive(name: str, rows: list[dict]) -> str:
                 max(r["latency_rel_err_pct"], r["energy_rel_err_pct"]) for r in rows
             )
             return f"cells={len(rows)},worst_rel_err_pct={worst}(tol:15)"
+        if name == "explore":
+            worst = min(r["speedup_x"] for r in rows)
+            bits = sum(r["bit_mismatches"] for r in rows)
+            return f"cases={len(rows)},min_speedup_x={worst}(req:10),bit_mismatches={bits}"
         if name == "roofline":
             if "note" in rows[0]:
                 return rows[0]["note"]
@@ -100,6 +109,7 @@ BENCHMARKS = [
     ("fig19_area", fig19_area.run),
     ("roofline", roofline.run),
     ("sim_vs_analytic", sim_vs_analytic.run),
+    ("explore", explore.run),
 ]
 
 
@@ -108,6 +118,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="print detail tables")
     ap.add_argument("--only", default=None,
                     help="run only benchmarks whose name contains this substring")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the expensive benchmarks for CI")
     args = ap.parse_args()
 
     selected = [
@@ -124,7 +136,10 @@ def main() -> None:
     failures = []
     for name, fn in selected:
         try:
-            rows, us = timed(fn)
+            if args.smoke and name in SMOKE_AWARE:
+                rows, us = timed(fn, smoke=True)
+            else:
+                rows, us = timed(fn)
         except Exception as e:
             failures.append((name, e))
             # Keep the headline CSV 3-column: strip commas/newlines from the

@@ -14,16 +14,20 @@ from repro.sim import cross_validate
 
 CAPACITIES_MB = (16.0, 32.0, 64.0, 128.0, 256.0)
 TECHS = ("sram", "sot_opt")
+# --smoke: one CV case, two capacities, coarse tiles — keeps CI under a minute.
+SMOKE_CAPACITIES_MB = (32.0, 64.0)
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     cases = [
-        ("cv", cv_model_zoo()["resnet50"], "training", 16384),
-        ("nlp", nlp_model_zoo()["bert"], "training", 131072),
+        ("cv", cv_model_zoo()["resnet18" if smoke else "resnet50"], "training",
+         65536 if smoke else 16384),
     ]
+    if not smoke:
+        cases.append(("nlp", nlp_model_zoo()["bert"], "training", 131072))
     rows = []
     for domain, wl, mode, tile in cases:
-        for cap in CAPACITIES_MB:
+        for cap in SMOKE_CAPACITIES_MB if smoke else CAPACITIES_MB:
             for tech in TECHS:
                 system = HybridMemorySystem(glb=glb_array(tech, cap))
                 r = cross_validate(wl, 16, system, mode, tile_bytes=tile)

@@ -36,7 +36,10 @@ def main():
     wl = Workload(cfg.name, tuple(layers), "lm")
     bw = workload_peak_bw(wl, ArrayConfig())
     curve = dram_access_curve(wl, shape.global_batch, "training", d_w=2)
-    knee = knee_capacity(curve)
+    # "cliff" (the default) picks the capacity completing the largest DRAM
+    # reduction; the legacy "threshold" rule knees prematurely on training
+    # curves whose head is dominated by capacity-independent weight traffic.
+    knee = knee_capacity(curve, strategy="cliff")
     print(f"{cfg.name} @ {shape.name}: peak BW rd {bw['read_bytes_per_cycle']:.0f} "
           f"/ wr {bw['write_bytes_per_cycle']:.0f} B/cycle; GLB knee {knee} MB")
 

@@ -54,6 +54,13 @@ def evaluate_system(
     arr: ArrayConfig | None = None,
     mem_params: MemoryParams | None = None,
 ) -> SystemMetrics:
+    """Closed-form system PPA of one design point.
+
+    The batched path in ``repro.dse.grid`` mirrors these formulas
+    operand-for-operand over whole capacity/technology grids, so the two
+    stay bit-compatible (tests/test_dse_equivalence.py) — change them in
+    lockstep.
+    """
     arr = arr or ArrayConfig()
     mem = mem_params or MemoryParams(glb_mb=system.glb.capacity_mb)
     counts = access_counts(workload, batch, mem, mode, d_w)
@@ -114,6 +121,16 @@ def compare_technologies(
     return out
 
 
+def improvement_ratios(m: dict[str, SystemMetrics]) -> dict[str, float]:
+    """Fig. 18 ratio keys from a {technology: SystemMetrics} mapping."""
+    return {
+        "sot_energy_x": m["sram"].energy_j / m["sot"].energy_j,
+        "sot_latency_x": m["sram"].latency_s / m["sot"].latency_s,
+        "sot_opt_energy_x": m["sram"].energy_j / m["sot_opt"].energy_j,
+        "sot_opt_latency_x": m["sram"].latency_s / m["sot_opt"].latency_s,
+    }
+
+
 def improvement_table(
     workloads: dict[str, Workload],
     batch: int,
@@ -122,16 +139,12 @@ def improvement_table(
     d_w: int = 4,
 ) -> dict[str, dict[str, float]]:
     """Energy/latency improvement of SOT and SOT-opt over SRAM per model."""
-    table: dict[str, dict[str, float]] = {}
-    for name, wl in workloads.items():
-        m = compare_technologies(wl, batch, capacity_mb, mode, d_w)
-        table[name] = {
-            "sot_energy_x": m["sram"].energy_j / m["sot"].energy_j,
-            "sot_latency_x": m["sram"].latency_s / m["sot"].latency_s,
-            "sot_opt_energy_x": m["sram"].energy_j / m["sot_opt"].energy_j,
-            "sot_opt_latency_x": m["sram"].latency_s / m["sot_opt"].latency_s,
-        }
-    return table
+    return {
+        name: improvement_ratios(
+            compare_technologies(wl, batch, capacity_mb, mode, d_w)
+        )
+        for name, wl in workloads.items()
+    }
 
 
 def geomean(vals) -> float:

@@ -1,0 +1,64 @@
+"""Vectorized design-space exploration over the STCO/DTCO grid (Fig. 1).
+
+One array program evaluates the full ``capacity x technology x batch x mode``
+grid of system outcomes per workload (``grid.evaluate_workload_grid``),
+replacing the per-point Python sweep in ``repro.core.stco``; an O(n log n)
+staircase sweep extracts the (energy, latency, area) Pareto frontier
+(``pareto``); the PR-1 trace-driven simulator optionally re-scores only the
+frontier with bank-conflict-aware latency (``refine``).
+
+Backends: NumPy always (and the ``backend="auto"`` default — fastest at
+STCO grid sizes); ``backend="jax"`` runs the same kernels ``jax.jit``-ted
+under ``enable_x64`` for device offload of very large grids.  Grid slices
+are bit-compatible with the scalar ``evaluate_system`` reference — see
+``tests/test_dse_equivalence.py``.
+"""
+
+from repro.dse.access import (  # noqa: F401
+    CountGrid,
+    count_grid,
+    entity_size_grid,
+    inference_count_grid,
+    training_count_grid,
+)
+from repro.dse.backend import HAVE_JAX, resolve_backend  # noqa: F401
+from repro.dse.grid import (  # noqa: F401
+    DEFAULT_CAPACITIES_MB,
+    DEFAULT_TECHNOLOGIES,
+    GridResult,
+    GridSpec,
+    MetricsGrid,
+    PPAGrid,
+    evaluate_workload_grid,
+    metrics_grid,
+)
+from repro.dse.pareto import (  # noqa: F401
+    dominates,
+    knee_index,
+    pareto_indices,
+    pareto_indices_naive,
+)
+from repro.dse.refine import refine_front  # noqa: F401
+
+__all__ = [
+    "CountGrid",
+    "DEFAULT_CAPACITIES_MB",
+    "DEFAULT_TECHNOLOGIES",
+    "GridResult",
+    "GridSpec",
+    "HAVE_JAX",
+    "MetricsGrid",
+    "PPAGrid",
+    "count_grid",
+    "dominates",
+    "entity_size_grid",
+    "evaluate_workload_grid",
+    "inference_count_grid",
+    "knee_index",
+    "metrics_grid",
+    "pareto_indices",
+    "pareto_indices_naive",
+    "refine_front",
+    "resolve_backend",
+    "training_count_grid",
+]

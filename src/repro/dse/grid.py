@@ -1,0 +1,343 @@
+"""Batched design-space evaluation: one array program per workload.
+
+``evaluate_workload_grid`` evaluates the full ``mode x technology x batch x
+capacity`` grid of ``evaluate_system`` outcomes in a handful of array
+operations (the scalar loop in ``repro.core.stco`` walked the grid point by
+point, re-running Algorithms 1/2 from scratch for every technology even
+though access counts only depend on capacity).
+
+The metric formulas mirror ``repro.core.evaluate.evaluate_system`` operand
+for operand, so a grid slice is bit-compatible with the scalar call; the
+:meth:`GridResult.point` compatibility wrapper rehydrates the scalar
+``SystemMetrics``/``AccessCounts`` dataclasses from the arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core.access_counts import AccessCounts, MemoryParams
+from repro.core.bandwidth import ArrayConfig
+from repro.core.evaluate import SystemMetrics
+from repro.core.memory_system import DRAMModel, glb_array
+from repro.core.stco import CAPACITY_GRID_MB, TECHNOLOGY_GRID
+from repro.core.workload import Workload
+from repro.dse import backend as _backend
+from repro.dse.access import CountGrid, count_grid, entity_size_grid
+
+# One canonical grid: the paper's candidate capacities/technologies, defined
+# with the STCO loop they parameterize.
+DEFAULT_CAPACITIES_MB: tuple[float, ...] = CAPACITY_GRID_MB
+DEFAULT_TECHNOLOGIES: tuple[str, ...] = TECHNOLOGY_GRID
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """The design-space grid swept by ``repro.dse`` (paper Fig. 1 outer loop)."""
+
+    capacities_mb: tuple[float, ...] = DEFAULT_CAPACITIES_MB
+    technologies: tuple[str, ...] = DEFAULT_TECHNOLOGIES
+    batches: tuple[int, ...] = (16,)
+    modes: tuple[str, ...] = ("inference", "training")
+    d_w: int = 4
+
+    @property
+    def n_points(self) -> int:
+        return (
+            len(self.capacities_mb)
+            * len(self.technologies)
+            * len(self.batches)
+            * len(self.modes)
+        )
+
+    def axes(self) -> dict[str, tuple]:
+        return {
+            "mode": tuple(self.modes),
+            "technology": tuple(self.technologies),
+            "batch": tuple(self.batches),
+            "capacity_mb": tuple(self.capacities_mb),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class PPAGrid:
+    """Array-level PPA in struct-of-arrays form, shaped ``[T, C]``."""
+
+    read_latency_ns: np.ndarray
+    write_latency_ns: np.ndarray
+    read_energy_pj: np.ndarray
+    write_energy_pj: np.ndarray
+    leakage_w: np.ndarray
+    area_mm2: np.ndarray
+    banks: np.ndarray
+
+    @classmethod
+    def build(cls, technologies, capacities_mb) -> "PPAGrid":
+        arrays = [[glb_array(t, c) for c in capacities_mb] for t in technologies]
+
+        def field(name, dtype=np.float64):
+            return np.asarray(
+                [[getattr(a, name) for a in row] for row in arrays], dtype=dtype
+            )
+
+        return cls(
+            read_latency_ns=field("read_latency_ns"),
+            write_latency_ns=field("write_latency_ns"),
+            read_energy_pj=field("read_energy_pj_per_access"),
+            write_energy_pj=field("write_energy_pj_per_access"),
+            leakage_w=field("leakage_w"),
+            area_mm2=field("area_mm2"),
+            banks=field("banks"),
+        )
+
+
+@dataclasses.dataclass
+class MetricsGrid:
+    """Struct-of-arrays ``SystemMetrics`` (counts live in a ``CountGrid``)."""
+
+    energy_j: np.ndarray
+    latency_s: np.ndarray
+    runtime_s: np.ndarray
+    dram_energy_j: np.ndarray
+    glb_energy_j: np.ndarray
+    leakage_energy_j: np.ndarray
+    dram_latency_s: np.ndarray
+    glb_latency_s: np.ndarray
+    compute_time_s: np.ndarray
+
+
+def metrics_grid(
+    counts: CountGrid,
+    ppa: PPAGrid,
+    t_compute_s,
+    dram: DRAMModel,
+    xp=np,
+) -> MetricsGrid:
+    """The ``evaluate_system`` formulas over broadcastable arrays.
+
+    ``counts`` fields broadcast against the PPA arrays (callers align axes;
+    see ``evaluate_workload_grid``); ``t_compute_s`` is the compute-time
+    floor, already including the training MAC multiplier.
+    """
+    e_dram = counts.dram_total * dram.energy_pj_per_access() * 1e-12
+    e_glb = (
+        counts.rd_glb * ppa.read_energy_pj + counts.wr_glb * ppa.write_energy_pj
+    ) * 1e-12
+
+    exposed_bytes = counts.dram_exposed * dram.access_bytes
+    hidden_bytes = counts.dram_hidden * dram.access_bytes
+    t_dram = exposed_bytes / (dram.bandwidth_gb_s * 1e9)
+    t_glb = (
+        counts.rd_glb * ppa.read_latency_ns + counts.wr_glb * ppa.write_latency_ns
+    ) * 1e-9 / ppa.banks
+    latency = t_dram + t_glb
+
+    t_weight_stream = hidden_bytes / (dram.bandwidth_gb_s * 1e9)
+    runtime = xp.maximum(xp.maximum(t_compute_s, t_weight_stream), latency)
+
+    e_leak = ppa.leakage_w * runtime
+    energy = e_dram + e_glb + e_leak  # full grid shape
+
+    def bc(x):
+        # Tech-independent terms (DRAM energy/latency, compute floor) carry a
+        # size-1 technology axis; broadcast is index-shape only, no arithmetic.
+        return xp.broadcast_to(xp.asarray(x), energy.shape)
+
+    return MetricsGrid(
+        energy_j=energy,
+        latency_s=bc(latency),
+        runtime_s=bc(runtime),
+        dram_energy_j=bc(e_dram),
+        glb_energy_j=bc(e_glb),
+        leakage_energy_j=bc(e_leak),
+        dram_latency_s=bc(t_dram),
+        glb_latency_s=bc(t_glb),
+        compute_time_s=bc(t_compute_s),
+    )
+
+
+@dataclasses.dataclass
+class GridResult:
+    """Batched evaluation of one workload over a :class:`GridSpec`.
+
+    Axis order: ``counts`` fields are ``[mode, batch, capacity]`` (access
+    counts are technology-independent); ``metrics`` fields are
+    ``[mode, technology, batch, capacity]``; ``area_mm2`` is
+    ``[technology, capacity]``.
+    """
+
+    workload: str
+    spec: GridSpec
+    counts: CountGrid
+    metrics: MetricsGrid
+    ppa: PPAGrid
+    backend: str
+
+    def _index(self, axis_values, value, label):
+        try:
+            return axis_values.index(value)
+        except ValueError:
+            raise KeyError(f"{label} {value!r} not in grid {axis_values}") from None
+
+    def counts_at(self, mode: str, batch: int, capacity_mb: float) -> AccessCounts:
+        m = self._index(list(self.spec.modes), mode, "mode")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        c = self._index(list(self.spec.capacities_mb), capacity_mb, "capacity")
+        return AccessCounts(
+            rd_dram=float(self.counts.rd_dram[m, b, c]),
+            wr_dram=float(self.counts.wr_dram[m, b, c]),
+            rd_glb=float(self.counts.rd_glb[m, b, c]),
+            wr_glb=float(self.counts.wr_glb[m, b, c]),
+            rd_dram_w=float(self.counts.rd_dram_w[m, b, c]),
+            wr_dram_w=float(self.counts.wr_dram_w[m, b, c]),
+        )
+
+    def point(
+        self, mode: str, technology: str, batch: int, capacity_mb: float
+    ) -> SystemMetrics:
+        """Compatibility wrapper: one grid point as a scalar ``SystemMetrics``."""
+        m = self._index(list(self.spec.modes), mode, "mode")
+        t = self._index(list(self.spec.technologies), technology, "technology")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        c = self._index(list(self.spec.capacities_mb), capacity_mb, "capacity")
+        g = self.metrics
+        return SystemMetrics(
+            energy_j=float(g.energy_j[m, t, b, c]),
+            latency_s=float(g.latency_s[m, t, b, c]),
+            runtime_s=float(g.runtime_s[m, t, b, c]),
+            dram_energy_j=float(g.dram_energy_j[m, t, b, c]),
+            glb_energy_j=float(g.glb_energy_j[m, t, b, c]),
+            leakage_energy_j=float(g.leakage_energy_j[m, t, b, c]),
+            dram_latency_s=float(g.dram_latency_s[m, t, b, c]),
+            glb_latency_s=float(g.glb_latency_s[m, t, b, c]),
+            compute_time_s=float(g.compute_time_s[m, t, b, c]),
+            counts=self.counts_at(mode, batch, capacity_mb),
+        )
+
+    def dram_curve(self, mode: str, batch: int) -> dict[float, float]:
+        """Total DRAM accesses vs capacity: the Fig. 9/11 reduction curve."""
+        m = self._index(list(self.spec.modes), mode, "mode")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        totals = self.counts.dram_total[m, b, :]
+        return {cap: float(t) for cap, t in zip(self.spec.capacities_mb, totals)}
+
+    def area_mm2(self, technology: str, capacity_mb: float) -> float:
+        t = self._index(list(self.spec.technologies), technology, "technology")
+        c = self._index(list(self.spec.capacities_mb), capacity_mb, "capacity")
+        return float(self.ppa.area_mm2[t, c])
+
+    def objective_arrays(self, mode: str, batch: int):
+        """(energy, latency, area) flattened over technology x capacity for one
+        (mode, batch) slice — the Pareto-extraction input.  Returns
+        ``(objs[N, 3], labels[N])`` with labels ``(technology, capacity_mb)``."""
+        m = self._index(list(self.spec.modes), mode, "mode")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        T = len(self.spec.technologies)
+        C = len(self.spec.capacities_mb)
+        energy = np.asarray(self.metrics.energy_j)[m, :, b, :].reshape(-1)
+        latency = np.asarray(self.metrics.latency_s)[m, :, b, :].reshape(-1)
+        area = np.asarray(self.ppa.area_mm2).reshape(-1)
+        labels = [
+            (tech, cap)
+            for tech in self.spec.technologies
+            for cap in self.spec.capacities_mb
+        ]
+        assert energy.shape[0] == T * C == len(labels)
+        return np.stack([energy, latency, area], axis=1), labels
+
+
+def _compute_time_grid(workload: Workload, spec: GridSpec, arr: ArrayConfig) -> np.ndarray:
+    """Compute-time floor ``[M, 1, B, 1]`` (mode- and batch-dependent only)."""
+    out = np.empty((len(spec.modes), 1, len(spec.batches), 1), dtype=np.float64)
+    for m, mode in enumerate(spec.modes):
+        mac_mult = 3.0 if mode == "training" else 1.0
+        for b, batch in enumerate(spec.batches):
+            out[m, 0, b, 0] = mac_mult * workload.total_macs(batch) / arr.peak_ops_per_sec
+    return out
+
+
+def _eval_arrays(sizes, caps, ppa_fields, t_compute, modes, mem, dram, xp):
+    """The whole grid evaluation as one traceable array program.
+
+    Returns (count-field tuple, metric-field tuple) in dataclass field
+    order.  Pure in its array arguments, so the JAX path can ``jax.jit`` it.
+    """
+    per_mode = [count_grid(sizes, caps, mode, mem, xp) for mode in modes]
+    counts = per_mode[0].stack(per_mode[1:], xp)  # [M, B, C]
+
+    # Align axes: counts [M, 1, B, C] vs PPA [T, C] -> metrics [M, T, B, C].
+    counts_b = CountGrid(
+        *(
+            getattr(counts, f.name)[:, None, :, :]
+            for f in dataclasses.fields(CountGrid)
+        )
+    )
+    ppa_b = PPAGrid(*(xp.asarray(f)[None, :, None, :] for f in ppa_fields))
+    metrics = metrics_grid(counts_b, ppa_b, xp.asarray(t_compute), dram, xp)
+    return (
+        tuple(getattr(counts, f.name) for f in dataclasses.fields(CountGrid)),
+        tuple(getattr(metrics, f.name) for f in dataclasses.fields(MetricsGrid)),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_eval(modes: tuple, mem: MemoryParams, dram: DRAMModel):
+    """One jitted evaluator per (modes, MemoryParams, DRAMModel) triple;
+    jax re-traces per array shape (i.e. per workload/grid geometry)."""
+    import jax
+    import jax.numpy as jnp
+
+    def kernel(sizes, caps, ppa_fields, t_compute):
+        return _eval_arrays(sizes, caps, ppa_fields, t_compute, modes, mem, dram, jnp)
+
+    return jax.jit(kernel)
+
+
+def evaluate_workload_grid(
+    workload: Workload,
+    spec: GridSpec | None = None,
+    arr: ArrayConfig | None = None,
+    dram: DRAMModel | None = None,
+    mem_params: MemoryParams | None = None,
+    backend: str = "auto",
+) -> GridResult:
+    """Evaluate one workload over the whole grid in a single array program.
+
+    ``mem_params.glb_mb`` is ignored (the capacity axis supplies it); the
+    other ``MemoryParams`` fields apply grid-wide.
+    """
+    spec = spec or GridSpec()
+    arr = arr or ArrayConfig()
+    dram = dram or DRAMModel()
+    mem = mem_params or MemoryParams()
+    resolved = _backend.resolve_backend(backend)
+
+    sizes = entity_size_grid(workload, spec.batches, spec.d_w)  # [B, L, 3]
+    caps = np.asarray(spec.capacities_mb, dtype=np.float64)
+    ppa = PPAGrid.build(spec.technologies, spec.capacities_mb)
+    ppa_fields = tuple(
+        getattr(ppa, f.name) for f in dataclasses.fields(PPAGrid)
+    )
+    t_compute = _compute_time_grid(workload, spec, arr)
+
+    with _backend.x64_scope(resolved):
+        if resolved == "jax":
+            fn = _jitted_eval(tuple(spec.modes), mem, dram)
+            count_arrays, metric_arrays = fn(sizes, caps, ppa_fields, t_compute)
+        else:
+            count_arrays, metric_arrays = _eval_arrays(
+                sizes, caps, ppa_fields, t_compute, tuple(spec.modes), mem, dram, np
+            )
+
+    # Materialise as numpy for cheap indexing downstream.
+    return GridResult(
+        workload=workload.name,
+        spec=spec,
+        counts=CountGrid(*(np.asarray(a) for a in count_arrays)),
+        metrics=MetricsGrid(*(np.asarray(a) for a in metric_arrays)),
+        ppa=ppa,
+        backend=resolved,
+    )

@@ -1,0 +1,102 @@
+"""Pareto-frontier extraction and knee-point picking over (energy, latency,
+area).
+
+``repro.core.stco.pareto_front`` was the textbook O(n^2) all-pairs check —
+fine for 27 points, quadratic pain for the dense grids ``repro.dse`` sweeps.
+:func:`pareto_indices` is the classic sort + staircase sweep: sort points
+lexicographically by the first objective, then maintain the lower envelope of
+(latency, area) seen so far; each point does one binary search against the
+envelope.  O(n log n) comparisons, identical semantics to the naive check
+(weak dominance with at least one strict inequality; exact duplicates never
+dominate each other).
+"""
+
+from __future__ import annotations
+
+import bisect
+
+import numpy as np
+
+
+def dominates(q, p) -> bool:
+    """Does design point ``q`` dominate ``p`` (minimizing every objective)?"""
+    q, p = np.asarray(q), np.asarray(p)
+    return bool(np.all(q <= p) and np.any(q < p))
+
+
+def pareto_indices_naive(objs: np.ndarray) -> np.ndarray:
+    """All-pairs O(n^2) reference (kept as the equivalence-test oracle)."""
+    objs = np.asarray(objs, dtype=np.float64)
+    n = objs.shape[0]
+    le = np.all(objs[:, None, :] <= objs[None, :, :], axis=2)
+    lt = np.any(objs[:, None, :] < objs[None, :, :], axis=2)
+    dominated = np.any(le & lt, axis=0)
+    return np.flatnonzero(~dominated)
+
+
+def pareto_indices(objs: np.ndarray) -> np.ndarray:
+    """Indices of non-dominated rows of ``objs`` (``[N, 3]``, minimized).
+
+    Sort + staircase sweep, O(n log n).  Exact duplicates are all kept when
+    their shared coordinates are non-dominated (mutual weak dominance has no
+    strict inequality), matching the naive all-pairs semantics.
+    """
+    objs = np.asarray(objs, dtype=np.float64)
+    if objs.ndim != 2 or objs.shape[1] != 3:
+        raise ValueError(f"expected [N, 3] objectives, got {objs.shape}")
+    n = objs.shape[0]
+    if n == 0:
+        return np.empty(0, dtype=np.int64)
+
+    # Collapse exact duplicates: dominance is a property of the coordinates.
+    uniq, inverse = np.unique(objs, axis=0, return_inverse=True)
+    m = uniq.shape[0]
+    # np.unique sorts rows lexicographically by (energy, latency, area) —
+    # exactly the sweep order we need: any dominator of row i sorts before i.
+    keep = np.zeros(m, dtype=bool)
+    # Staircase: latencies ascending, areas strictly descending (the lower
+    # envelope of all kept points so far).  A new point is dominated iff some
+    # envelope entry has latency <= its latency and area <= its area.
+    stair_lat: list[float] = []
+    stair_area: list[float] = []
+    for i in range(m):
+        lat, area = uniq[i, 1], uniq[i, 2]
+        # Rightmost envelope entry with latency <= lat; envelope areas are
+        # decreasing, so that entry has the minimum area among them.
+        j = bisect.bisect_right(stair_lat, lat) - 1
+        if j >= 0 and stair_area[j] <= area:
+            continue  # dominated (strictness is guaranteed: rows are unique)
+        keep[i] = True
+        # Insert (lat, area) and restore the strictly-decreasing-area invariant.
+        k = bisect.bisect_left(stair_lat, lat)
+        if k < len(stair_lat) and stair_lat[k] == lat:
+            # Same latency, smaller area (else it would have been dominated).
+            stair_area[k] = area
+        else:
+            stair_lat.insert(k, lat)
+            stair_area.insert(k, area)
+        # Drop succeeding entries whose area is now >= this area.
+        end = k + 1
+        while end < len(stair_lat) and stair_area[end] >= area:
+            end += 1
+        del stair_lat[k + 1:end], stair_area[k + 1:end]
+
+    return np.flatnonzero(keep[inverse])
+
+
+def knee_index(objs: np.ndarray, front: np.ndarray | None = None) -> int:
+    """Knee-point pick: the frontier point closest (L2) to the utopia corner
+    after min-max normalizing each objective over the frontier.
+
+    Returns an index into ``objs``.  Degenerate axes (zero range across the
+    front) contribute nothing to the distance.
+    """
+    objs = np.asarray(objs, dtype=np.float64)
+    front = pareto_indices(objs) if front is None else np.asarray(front)
+    if front.size == 0:
+        raise ValueError("empty Pareto front")
+    f = objs[front]
+    lo, hi = f.min(axis=0), f.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    dist = np.linalg.norm((f - lo) / span, axis=1)
+    return int(front[int(np.argmin(dist))])

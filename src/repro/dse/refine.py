@@ -1,0 +1,52 @@
+"""Optional simulator refinement of the analytic Pareto frontier.
+
+The batched evaluator ranks thousands of grid points with the closed-form
+model; only the survivors are worth event-level replay.  ``refine_front``
+re-scores each frontier point with the PR-1 trace-driven simulator
+(``repro.sim``), attaching bank-conflict-aware latency and congestion
+metrics.  Points whose technology has no direct array model (e.g. the
+DTCO-device point uses a bespoke ``ArrayPPA``) can pass an explicit system.
+"""
+
+from __future__ import annotations
+
+from repro.core.bandwidth import ArrayConfig
+from repro.core.memory_system import HybridMemorySystem, glb_array
+
+
+def refine_front(
+    workload,
+    batch: int,
+    mode: str,
+    points,
+    d_w: int = 4,
+    tile_bytes: int | None = None,
+    arr: ArrayConfig | None = None,
+    sim_config=None,
+) -> list[dict]:
+    """Re-score Pareto points with the bank-level simulator.
+
+    ``points`` is an iterable of ``(technology, capacity_mb)`` pairs (or
+    objects with those attributes, e.g. ``repro.core.stco.STCOPoint``).
+    Returns one dict per point: the analytic identity plus the simulator's
+    latency and congestion metrics.
+    """
+    from repro.sim.engine import SimConfig
+    from repro.sim.validate import refine_point
+
+    sim_config = sim_config or SimConfig()
+    rows = []
+    for p in points:
+        tech, cap = (
+            (p.technology, p.capacity_mb) if hasattr(p, "technology") else p
+        )
+        try:
+            system = HybridMemorySystem(glb=glb_array(tech, cap))
+        except ValueError:
+            continue  # bespoke technologies (e.g. sot_dtco_device) are skipped
+        r = refine_point(
+            workload, batch, system, mode, d_w,
+            tile_bytes=tile_bytes, arr=arr, sim_config=sim_config,
+        )
+        rows.append({"technology": tech, "capacity_mb": cap, **r})
+    return rows

@@ -1,0 +1,201 @@
+"""Design-space exploration driver (the paper's Fig. 1 loop, batched).
+
+    PYTHONPATH=src python -m repro.launch.explore --domain cv --models resnet50 \
+        --modes inference --batches 16
+
+    PYTHONPATH=src python -m repro.launch.explore --domain nlp --models bert,gpt2 \
+        --modes training --refine
+
+    PYTHONPATH=src python -m repro.launch.explore --smoke
+
+For every (workload, mode, batch) the full capacity x technology grid is
+evaluated in one ``repro.dse`` array program; the (energy, latency, area)
+Pareto frontier is extracted with the O(n log n) staircase sweep, the
+knee point (closest to utopia) is reported, and ``--refine`` re-scores the
+frontier with the bank-level trace simulator (``repro.sim``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.stco import knee_capacity
+from repro.core.workload import cv_model_zoo, nlp_model_zoo
+from repro.dse import (
+    DEFAULT_CAPACITIES_MB,
+    DEFAULT_TECHNOLOGIES,
+    GridSpec,
+    evaluate_workload_grid,
+    knee_index,
+    pareto_indices,
+    refine_front,
+)
+
+DOMAINS = ("cv", "nlp", "both")
+
+
+def _parse_list(text: str, cast=str) -> tuple:
+    return tuple(cast(x) for x in text.split(",") if x)
+
+
+def _workloads(domain: str, models: str):
+    zoo = {}
+    if domain in ("cv", "both"):
+        zoo.update(cv_model_zoo())
+    if domain in ("nlp", "both"):
+        zoo.update(nlp_model_zoo())
+    if models == "all":
+        return zoo
+    picked = {}
+    for name in _parse_list(models):
+        if name not in zoo:
+            raise SystemExit(f"unknown model {name!r}; have {sorted(zoo)}")
+        picked[name] = zoo[name]
+    return picked
+
+
+def explore(
+    workloads,
+    spec: GridSpec,
+    backend: str = "auto",
+    refine: bool = False,
+    tile_bytes: int | None = None,
+) -> list[dict]:
+    """Sweep every workload over ``spec``; one result row per (wl, mode, batch)."""
+    rows = []
+    for name, wl in workloads.items():
+        t0 = time.perf_counter()
+        grid = evaluate_workload_grid(wl, spec, backend=backend)
+        eval_ms = (time.perf_counter() - t0) * 1e3
+        for mode in spec.modes:
+            # Knee of the DRAM-access curve (technology-independent).
+            for batch in spec.batches:
+                knee_cap = knee_capacity(grid.dram_curve(mode, batch))
+                objs, labels = grid.objective_arrays(mode, batch)
+                front = pareto_indices(objs)
+                ki = knee_index(objs, front)
+                row = {
+                    "workload": name,
+                    "mode": mode,
+                    "batch": batch,
+                    "backend": grid.backend,
+                    "eval_ms": eval_ms,
+                    "n_points": len(labels),
+                    "knee_capacity_mb": knee_cap,
+                    "pareto": [
+                        {
+                            "technology": labels[i][0],
+                            "capacity_mb": labels[i][1],
+                            "energy_j": float(objs[i, 0]),
+                            "latency_s": float(objs[i, 1]),
+                            "area_mm2": float(objs[i, 2]),
+                        }
+                        for i in front
+                    ],
+                    "knee_point": {
+                        "technology": labels[ki][0],
+                        "capacity_mb": labels[ki][1],
+                        "energy_j": float(objs[ki, 0]),
+                        "latency_s": float(objs[ki, 1]),
+                        "area_mm2": float(objs[ki, 2]),
+                    },
+                }
+                if refine:
+                    row["refined"] = refine_front(
+                        wl, batch, mode,
+                        [(labels[i][0], labels[i][1]) for i in front],
+                        d_w=spec.d_w, tile_bytes=tile_bytes,
+                    )
+                rows.append(row)
+    return rows
+
+
+def _print_row(row: dict, full: bool) -> None:
+    kp = row["knee_point"]
+    print(
+        f"# {row['workload']} {row['mode']} batch={row['batch']} "
+        f"({row['n_points']} points, {row['eval_ms']:.1f} ms, {row['backend']})"
+    )
+    print(
+        f"  dram-curve knee      : {row['knee_capacity_mb']} MB\n"
+        f"  pareto frontier      : {len(row['pareto'])} points\n"
+        f"  knee point           : {kp['technology']}@{kp['capacity_mb']}MB "
+        f"energy={kp['energy_j']:.3e} J latency={kp['latency_s']:.3e} s "
+        f"area={kp['area_mm2']:.1f} mm2"
+    )
+    if full:
+        for p in row["pareto"]:
+            print(
+                f"    {p['technology']:>16}@{p['capacity_mb']:<6} "
+                f"E={p['energy_j']:.3e} L={p['latency_s']:.3e} A={p['area_mm2']:.1f}"
+            )
+    for r in row.get("refined", []):
+        print(
+            f"  sim-refined          : {r['technology']}@{r['capacity_mb']}MB "
+            f"latency={r['sim_latency_s']:.3e} s "
+            f"(analytic err {r['latency_rel_err'] * 100:.1f}%, "
+            f"conflicts {r['bank_conflict_rate'] * 100:.1f}%, "
+            f"p99 {r['p99_latency_ns']:.0f} ns)"
+        )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--domain", default="cv", choices=DOMAINS)
+    ap.add_argument("--models", default="resnet50",
+                    help="comma-separated workload names, or 'all'")
+    ap.add_argument("--modes", default="inference,training")
+    ap.add_argument("--batches", default="16")
+    ap.add_argument("--caps",
+                    default=",".join(str(c) for c in DEFAULT_CAPACITIES_MB),
+                    help="GLB capacities in MB")
+    ap.add_argument("--techs", default=",".join(DEFAULT_TECHNOLOGIES))
+    ap.add_argument("--backend", default="auto", choices=["auto", "numpy", "jax"])
+    ap.add_argument("--refine", action="store_true",
+                    help="re-score the Pareto frontier with the trace simulator")
+    ap.add_argument("--tile-bytes", type=int, default=None)
+    ap.add_argument("--full", action="store_true", help="print every Pareto point")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast end-to-end check on a tiny grid")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        spec = GridSpec(
+            capacities_mb=(8, 16, 32, 64),
+            technologies=("sram", "sot_opt"),
+            batches=(16,),
+            modes=("inference",),
+        )
+        rows = explore(_workloads("cv", "resnet18"), spec,
+                       backend=args.backend, refine=True, tile_bytes=65536)
+        for row in rows:
+            _print_row(row, full=True)
+        ok = all(row["pareto"] for row in rows) and all(
+            r["latency_rel_err"] < 0.25
+            for row in rows for r in row.get("refined", [])
+        )
+        print("smoke OK" if ok else "smoke FAILED")
+        return 0 if ok else 1
+
+    spec = GridSpec(
+        capacities_mb=_parse_list(args.caps, float),
+        technologies=_parse_list(args.techs),
+        batches=_parse_list(args.batches, int),
+        modes=_parse_list(args.modes),
+    )
+    rows = explore(
+        _workloads(args.domain, args.models), spec,
+        backend=args.backend, refine=args.refine, tile_bytes=args.tile_bytes,
+    )
+    if not rows:
+        print("nothing to explore", file=sys.stderr)
+        return 2
+    for row in rows:
+        _print_row(row, full=args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,14 @@ latency).  See ``trace.py`` for generators, ``engine.py`` for the vectorized
 replay loop, ``validate.py`` for cross-validation against the analytic model.
 """
 
-from repro.sim.engine import KindStats, SimConfig, SimResult, simulate_trace
+from repro.sim.engine import (
+    KindStats,
+    ReplaySchedule,
+    SimConfig,
+    SimResult,
+    replay_schedule,
+    simulate_trace,
+)
 from repro.sim.trace import (
     EXPOSED_KINDS,
     KIND_NAMES,
@@ -23,6 +30,7 @@ from repro.sim.validate import (
     check_tolerance,
     cross_validate,
     fig18_cross_validation,
+    refine_point,
     summarize,
 )
 
@@ -31,6 +39,7 @@ __all__ = [
     "FIG18_CONFIGS",
     "KIND_NAMES",
     "KindStats",
+    "ReplaySchedule",
     "ServingConfig",
     "SimConfig",
     "SimResult",
@@ -40,6 +49,8 @@ __all__ = [
     "cross_validate",
     "fig18_cross_validation",
     "lower_workload",
+    "refine_point",
+    "replay_schedule",
     "serving_trace",
     "simulate_trace",
     "summarize",

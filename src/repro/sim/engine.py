@@ -123,6 +123,81 @@ def _coalesce_writes(trace: Trace, window_ns: float):
     return keep, int(dropped.size), float(trace.energy_pj[dropped].sum())
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplaySchedule:
+    """Per-event outcome of the FIFO replay, in ``(resource, t_issue)`` order.
+
+    Exposed for property tests and downstream analysis: ``simulate_trace``
+    reduces this to a :class:`SimResult`.  Invariants (pinned in
+    tests/test_properties.py): within one resource segment ``finish`` is
+    non-decreasing, ``start >= t_issue``, ``finish = start + service``.
+    """
+
+    resource: np.ndarray
+    t_issue_ns: np.ndarray
+    service_ns: np.ndarray
+    kind: np.ndarray
+    start_ns: np.ndarray
+    finish_ns: np.ndarray
+    wait_ns: np.ndarray
+    queue_depth: np.ndarray
+
+
+def replay_schedule(
+    t_issue: np.ndarray,
+    resource: np.ndarray,
+    service: np.ndarray,
+    kind: np.ndarray,
+    backend: str = "numpy",
+) -> ReplaySchedule:
+    """Solve the per-resource FIFO recurrence (segmented max-plus scan)."""
+    n = t_issue.shape[0]
+    if n == 0:
+        e = np.empty(0, np.float64)
+        return ReplaySchedule(
+            resource=np.empty(0, resource.dtype), t_issue_ns=e, service_ns=e,
+            kind=np.empty(0, kind.dtype), start_ns=e, finish_ns=e, wait_ns=e,
+            queue_depth=np.empty(0, np.int64),
+        )
+    order = np.lexsort((t_issue, resource))
+    res_s = resource[order]
+    t_s = t_issue[order]
+    svc_s = service[order]
+    kind_s = kind[order]
+
+    new_seg = np.empty(n, bool)
+    new_seg[0] = True
+    new_seg[1:] = res_s[1:] != res_s[:-1]
+    seg_id = np.cumsum(new_seg) - 1
+    cs = np.cumsum(svc_s)
+    seg_first = np.flatnonzero(new_seg)
+    seg_len = np.diff(np.append(seg_first, n))
+    seg_base = np.repeat(cs[seg_first] - svc_s[seg_first], seg_len)
+    s_local = cs - seg_base  # inclusive in-segment cumulative service
+    v = t_s - (s_local - svc_s)
+    big = float(v.max() - v.min()) + 1.0
+    running_max = _cummax(v + seg_id * big, backend) - seg_id * big
+    finish = s_local + running_max
+    start = finish - svc_s
+    wait = start - t_s
+
+    # --- queue depth: events in flight (same bank) at each issue -----------
+    big2 = float(max(finish.max(), t_s.max()) - min(finish.min(), t_s.min())) + 1.0
+    finish_aug = finish + seg_id * big2
+    depth = np.arange(n) - np.searchsorted(finish_aug, t_s + seg_id * big2, side="left")
+
+    return ReplaySchedule(
+        resource=res_s,
+        t_issue_ns=t_s,
+        service_ns=svc_s,
+        kind=kind_s,
+        start_ns=start,
+        finish_ns=finish,
+        wait_ns=wait,
+        queue_depth=depth,
+    )
+
+
 def simulate_trace(trace: Trace, config: SimConfig = SimConfig()) -> SimResult:
     n_total = len(trace)
     t_issue, resource = trace.t_issue_ns, trace.resource
@@ -149,34 +224,11 @@ def simulate_trace(trace: Trace, config: SimConfig = SimConfig()) -> SimResult:
             coalesced_energy_pj=coalesced_e, per_kind={"all": empty},
         )
 
-    # --- sort by (resource, issue time): per-bank FIFO order ---------------
-    order = np.lexsort((t_issue, resource))
-    res_s = resource[order]
-    t_s = t_issue[order]
-    svc_s = service[order]
-    kind_s = kind[order]
-
-    # --- segmented max-plus scan -------------------------------------------
-    new_seg = np.empty(n, bool)
-    new_seg[0] = True
-    new_seg[1:] = res_s[1:] != res_s[:-1]
-    seg_id = np.cumsum(new_seg) - 1
-    cs = np.cumsum(svc_s)
-    seg_first = np.flatnonzero(new_seg)
-    seg_len = np.diff(np.append(seg_first, n))
-    seg_base = np.repeat(cs[seg_first] - svc_s[seg_first], seg_len)
-    s_local = cs - seg_base  # inclusive in-segment cumulative service
-    v = t_s - (s_local - svc_s)
-    big = float(v.max() - v.min()) + 1.0
-    running_max = _cummax(v + seg_id * big, config.backend) - seg_id * big
-    finish = s_local + running_max
-    start = finish - svc_s
-    wait = start - t_s
-
-    # --- queue depth: events in flight (same bank) at each issue -----------
-    big2 = float(max(finish.max(), t_s.max()) - min(finish.min(), t_s.min())) + 1.0
-    finish_aug = finish + seg_id * big2
-    depth = np.arange(n) - np.searchsorted(finish_aug, t_s + seg_id * big2, side="left")
+    # --- per-bank FIFO replay (sort + segmented max-plus scan) -------------
+    sched = replay_schedule(t_issue, resource, service, kind, config.backend)
+    res_s, t_s = sched.resource, sched.t_issue_ns
+    svc_s, kind_s = sched.service_ns, sched.kind
+    finish, wait, depth = sched.finish_ns, sched.wait_ns, sched.queue_depth
 
     # --- metrics ------------------------------------------------------------
     exposed = np.isin(kind_s, EXPOSED_KINDS)

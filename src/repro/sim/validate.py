@@ -62,6 +62,36 @@ def _rel_err(sim: float, ref: float) -> float:
     return abs(sim - ref) / ref if ref > 0 else 0.0
 
 
+def refine_point(
+    workload: Workload,
+    batch: int,
+    system: HybridMemorySystem,
+    mode: str = "inference",
+    d_w: int = 4,
+    tile_bytes: int | None = None,
+    arr: ArrayConfig | None = None,
+    sim_config: SimConfig = SimConfig(),
+) -> dict:
+    """Bank-conflict-aware re-score of one design point (the ``repro.dse``
+    refinement stage): replay the trace and report the simulated latency
+    alongside the congestion metrics the analytic frontier cannot see."""
+    tile = tile_bytes or _DOMAIN_TILE_BYTES.get(workload.domain, 16384)
+    r = cross_validate(
+        workload, batch, system, mode, d_w, tile_bytes=tile,
+        arr=arr, sim_config=sim_config,
+    )
+    return {
+        "sim_latency_s": r["sim_latency_s"],
+        "sim_energy_j": r["sim_energy_j"],
+        "latency_rel_err": r["latency_rel_err"],
+        "energy_rel_err": r["energy_rel_err"],
+        "bank_conflict_rate": r["bank_conflict_rate"],
+        "p99_latency_ns": r["p99_latency_ns"],
+        "mean_queue_depth": r["mean_queue_depth"],
+        "n_events": r["n_events"],
+    }
+
+
 # The acceptance configurations: Fig. 18 training quadrants.
 FIG18_CONFIGS = (
     ("cv", "resnet50", "training", 256.0),

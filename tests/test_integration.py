@@ -11,6 +11,8 @@ import textwrap
 import numpy as np
 import pytest
 
+pytest.importorskip("jax", reason="train/serve integration needs jax")
+
 from repro.launch.train import train
 
 

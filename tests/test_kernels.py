@@ -1,5 +1,9 @@
 """Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
 
+import pytest
+
+pytest.importorskip("jax", reason="Pallas kernels need jax")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

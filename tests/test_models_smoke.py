@@ -4,10 +4,13 @@ consistency for the serving path."""
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="model smoke tests need jax")
+
+import jax
+import jax.numpy as jnp
 
 from repro.configs.registry import ARCHS, get_smoke
 from repro.models.api import model_api

@@ -1,0 +1,214 @@
+"""Property-based tests (hypothesis, or its seeded-sampling fallback shim).
+
+Three invariant families from ISSUE-2:
+
+  * evaluate_system monotonicity — growing the GLB at fixed workload never
+    increases DRAM traffic or the exposed DRAM latency; for the SOT
+    technologies (whose bank count scales with capacity and whose wire
+    latency grows flatter than SRAM's) total memory latency is monotone too.
+    Total *energy* is deliberately not asserted monotone: leakage and
+    per-access energy grow with capacity (that tradeoff is the paper's
+    point).
+  * access-count conservation — DRAM must at least carry the compulsory
+    traffic (all weights in, first ifmap in, last ofmap out; twice the
+    weights at training for the update write-back), and the GLB must at
+    least carry every activation once.
+  * sim-engine invariants — the segmented max-plus replay is a valid FIFO
+    schedule (no start before issue, per-bank completion times
+    non-decreasing, service conserved) and never loses events
+    (simulated + coalesced == issued).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.access_counts import MemoryParams
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import cv_model_zoo, nlp_model_zoo
+from repro.dse import GridSpec, evaluate_workload_grid
+from repro.sim import ServingConfig, SimConfig, serving_trace, simulate_trace
+from repro.sim.engine import replay_schedule
+from repro.sim.trace import lower_workload
+from repro.core.workload import NLP_TABLE_V
+
+ZOO = {**cv_model_zoo(), **nlp_model_zoo()}
+MODELS = ("alexnet", "resnet18", "mobilenet_v2", "squeezenet", "distilbert")
+CAPS = (2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0)
+
+_GRID_CACHE: dict = {}
+
+
+def _grid(model: str, batch: int):
+    key = (model, batch)
+    if key not in _GRID_CACHE:
+        _GRID_CACHE[key] = evaluate_workload_grid(
+            ZOO[model], GridSpec(capacities_mb=CAPS, batches=(batch,)),
+            backend="numpy",
+        )
+    return _GRID_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# evaluate_system monotonicity in GLB capacity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    model=st.sampled_from(MODELS),
+    batch=st.sampled_from([1, 4, 16, 64]),
+    mode=st.sampled_from(["inference", "training"]),
+)
+def test_dram_traffic_monotone_in_capacity(model, batch, mode):
+    g = _grid(model, batch)
+    mi = list(g.spec.modes).index(mode)
+    tol = 1 + 1e-12
+    for arr in (g.counts.dram_total, g.counts.dram_exposed):
+        a = arr[mi, 0, :]
+        assert np.all(a[1:] <= a[:-1] * tol), (model, mode, a)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    model=st.sampled_from(MODELS),
+    tech=st.sampled_from(["sot", "sot_opt"]),
+    batch=st.sampled_from([1, 16]),
+    mode=st.sampled_from(["inference", "training"]),
+)
+def test_latency_monotone_in_capacity_for_sot(model, tech, batch, mode):
+    g = _grid(model, batch)
+    mi = list(g.spec.modes).index(mode)
+    ti = list(g.spec.technologies).index(tech)
+    lat = g.metrics.latency_s[mi, ti, 0, :]
+    dram_lat = g.metrics.dram_latency_s[mi, ti, 0, :]
+    tol = 1 + 1e-12
+    assert np.all(lat[1:] <= lat[:-1] * tol), (model, tech, mode, lat)
+    assert np.all(dram_lat[1:] <= dram_lat[:-1] * tol)
+
+
+# ---------------------------------------------------------------------------
+# Access-count conservation: traffic >= model footprint
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    model=st.sampled_from(MODELS),
+    batch=st.integers(min_value=1, max_value=64),
+    mode=st.sampled_from(["inference", "training"]),
+)
+def test_access_count_conservation(model, batch, mode):
+    wl = ZOO[model]
+    mem = MemoryParams()
+    sizes = wl.entity_sizes_mb(batch, 4)
+    w_total = sum(s[2] for s in sizes)
+    compulsory_mb = w_total + sizes[0][0] + sizes[-1][1]
+    if mode == "training":
+        compulsory_mb += w_total  # updated weights write back
+    activations_mb = sum(s[0] for s in sizes) + sum(s[1] for s in sizes)
+
+    grid = evaluate_workload_grid(
+        wl, GridSpec(capacities_mb=CAPS, batches=(batch,)), backend="numpy"
+    )
+    mi = list(grid.spec.modes).index(mode)
+    dram_mb = grid.counts.dram_total[mi, 0, :] * mem.mbpa_dram
+    glb_mb = grid.counts.glb_total[mi, 0, :] * mem.mbpa_glb
+    slack = 1 + 1e-9
+    assert np.all(dram_mb * slack >= compulsory_mb), (model, mode, batch)
+    assert np.all(glb_mb * slack >= activations_mb), (model, mode, batch)
+    # DRAM + GLB together must carry at least the whole model footprint.
+    assert np.all((dram_mb + glb_mb) * slack >= compulsory_mb + activations_mb)
+
+
+# ---------------------------------------------------------------------------
+# Sim-engine invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_events=st.integers(min_value=1, max_value=2000),
+    n_banks=st.integers(min_value=1, max_value=64),
+    burstiness=st.floats(min_value=0.1, max_value=100.0),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_replay_schedule_is_valid_fifo(n_events, n_banks, burstiness, seed):
+    rng = np.random.default_rng(seed)
+    t_issue = np.sort(rng.exponential(burstiness, n_events)).astype(np.float64)
+    resource = rng.integers(0, n_banks, n_events).astype(np.int32)
+    service = rng.uniform(0.1, 50.0, n_events)
+    kind = np.zeros(n_events, np.int8)
+
+    s = replay_schedule(t_issue, resource, service, kind)
+    eps = 1e-6  # closed-form scan carries ~1e-4 ns rounding at large offsets
+    assert s.t_issue_ns.shape == (n_events,)
+    assert np.all(s.wait_ns >= -eps)  # no event starts before issue
+    assert np.allclose(s.finish_ns - s.start_ns, s.service_ns, atol=1e-6)
+    assert np.all(s.queue_depth >= 0)
+    # Per-bank completion times non-decreasing (FIFO order is preserved).
+    for bank in np.unique(s.resource):
+        f = s.finish_ns[s.resource == bank]
+        assert np.all(np.diff(f) >= -eps)
+
+
+def test_replay_schedule_empty_trace():
+    s = replay_schedule(
+        np.empty(0), np.empty(0, np.int32), np.empty(0), np.empty(0, np.int8)
+    )
+    assert s.finish_ns.shape == (0,)
+    assert s.queue_depth.shape == (0,)
+
+
+def test_replay_matches_naive_queue_simulation():
+    """The closed-form scan equals an explicit per-event FIFO loop."""
+    rng = np.random.default_rng(7)
+    n, n_banks = 500, 8
+    t_issue = np.sort(rng.exponential(5.0, n))
+    resource = rng.integers(0, n_banks, n).astype(np.int32)
+    service = rng.uniform(0.5, 20.0, n)
+    s = replay_schedule(t_issue, resource, service, np.zeros(n, np.int8))
+
+    free = np.zeros(n_banks)
+    finish_ref = {}
+    order = np.lexsort((t_issue, resource))
+    for i in order:
+        b = resource[i]
+        start = max(t_issue[i], free[b])
+        free[b] = start + service[i]
+        finish_ref[i] = free[b]
+    ref = np.array([finish_ref[i] for i in order])
+    assert np.allclose(s.finish_ns, ref, rtol=0, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    requests=st.integers(min_value=1, max_value=16),
+    window_mult=st.floats(min_value=0.0, max_value=8.0),
+)
+def test_event_count_conserved(requests, window_mult):
+    spec = {s.name: s for s in NLP_TABLE_V}["gpt2"]
+    system = HybridMemorySystem(glb=glb_array("sot_opt", 64.0))
+    trace = serving_trace(
+        system, spec, ServingConfig(n_requests=requests, decode_len=16, seed=1)
+    )
+    window = window_mult * trace.meta["token_interval_ns"]
+    result = simulate_trace(trace, SimConfig(coalesce_window_ns=window))
+    assert result.n_events == len(trace)
+    assert result.n_simulated + result.coalesced_writes == result.n_events
+    if window == 0.0:
+        assert result.coalesced_writes == 0
+
+
+def test_workload_trace_invariants():
+    """Lowered Algorithm-1 traces replay into valid schedules too."""
+    wl = cv_model_zoo()["alexnet"]
+    system = HybridMemorySystem(glb=glb_array("sot", 16.0))
+    trace = lower_workload(wl, 4, system, "inference", tile_bytes=65536)
+    s = replay_schedule(trace.t_issue_ns, trace.resource, trace.service_ns, trace.kind)
+    assert np.all(s.wait_ns >= -1e-6)
+    seg_change = np.flatnonzero(np.diff(s.resource) != 0)
+    diffs = np.diff(s.finish_ns)
+    keep = np.ones(len(diffs), bool)
+    keep[seg_change] = False  # finish may drop across segment boundaries
+    assert np.all(diffs[keep] >= -1e-6)

@@ -104,6 +104,7 @@ def test_engine_matches_python_reference_queue():
 
 
 def test_engine_jax_backend_parity():
+    pytest.importorskip("jax", reason="jax backend parity needs jax")
     rng = np.random.default_rng(2)
     n = 1000
     tr = _toy_trace(

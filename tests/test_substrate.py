@@ -3,11 +3,14 @@ gradient compression, VMEM/remat planner."""
 
 import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
+
+pytest.importorskip("jax", reason="substrate tests need jax")
+
+import jax
+import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.registry import get_smoke
