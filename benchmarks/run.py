@@ -27,13 +27,14 @@ from benchmarks import (
     fig18_system_ppa,
     fig19_area,
     roofline,
+    serving_qps,
     sim_vs_analytic,
     tab07_bitcell_power,
 )
 from benchmarks.common import rows_to_csv, timed
 
 # Benchmarks whose run() accepts a ``smoke`` flag.
-SMOKE_AWARE = {"sim_vs_analytic", "explore"}
+SMOKE_AWARE = {"sim_vs_analytic", "explore", "serving_qps"}
 
 
 def _derive(name: str, rows: list[dict]) -> str:
@@ -80,6 +81,16 @@ def _derive(name: str, rows: list[dict]) -> str:
             worst = min(r["speedup_x"] for r in rows)
             bits = sum(r["bit_mismatches"] for r in rows)
             return f"cases={len(rows)},min_speedup_x={worst}(req:10),bit_mismatches={bits}"
+        if name == "serving_qps":
+            worst = max(r["ttft_p99_ms"] for r in rows)
+            gap = min(
+                (a["energy_mj"] / b["energy_mj"])
+                for a, b in zip(
+                    (r for r in rows if r["tech"] == "sram"),
+                    (r for r in rows if r["tech"] == "sot_opt"),
+                )
+            )
+            return f"cells={len(rows)},worst_ttft_p99_ms={worst},min_sram_over_sot_energy_x={round(gap, 2)}"
         if name == "roofline":
             if "note" in rows[0]:
                 return rows[0]["note"]
@@ -110,6 +121,7 @@ BENCHMARKS = [
     ("roofline", roofline.run),
     ("sim_vs_analytic", sim_vs_analytic.run),
     ("explore", explore.run),
+    ("serving_qps", serving_qps.run),
 ]
 
 

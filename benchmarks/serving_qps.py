@@ -1,0 +1,54 @@
+"""Closed-loop serving QPS sweep: SRAM vs SOT-MRAM GLB under load.
+
+Drives the continuous-batching engine (``repro.serve``) at increasing
+request rates on an SRAM and a DTCO-optimized SOT-MRAM GLB of equal
+capacity and reports the p99 TTFT/TPOT, KV-page residency, bank-conflict
+rate, and replay energy at each operating point — the serving counterpart
+of the paper's Fig. 18 batch-workload comparison.  The interesting signal
+is where each technology's p99 leaves the SLO region as QPS grows, and how
+the energy gap widens with capacity (SRAM leakage vs MRAM's ~0).
+"""
+
+import dataclasses
+
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import NLP_TABLE_V
+from repro.serve import ServeEngineConfig, closed_loop_serving
+from repro.sim import ServingConfig
+
+TECHS = ("sram", "sot_opt")
+QPS_SWEEP = (100.0, 200.0, 400.0, 800.0, 1600.0)
+SMOKE_QPS_SWEEP = (200.0, 800.0)
+
+
+def run(smoke: bool = False, glb_mb: float = 64.0) -> list[dict]:
+    spec = next(s for s in NLP_TABLE_V if s.name == "gpt2")
+    base = ServingConfig(
+        n_requests=12 if smoke else 24,
+        prompt_len=128 if smoke else 256,
+        decode_len=32 if smoke else 64,
+        seed=3,
+    )
+    ecfg = ServeEngineConfig(max_batch=8)
+    rows = []
+    for tech in TECHS:
+        system = HybridMemorySystem(glb=glb_array(tech, glb_mb))
+        for qps in SMOKE_QPS_SWEEP if smoke else QPS_SWEEP:
+            cfg = dataclasses.replace(base, arrival_rate_rps=qps)
+            _, r = closed_loop_serving(system, spec, cfg, ecfg)
+            rows.append(
+                {
+                    "tech": tech,
+                    "glb_mb": glb_mb,
+                    "qps": qps,
+                    "achieved_qps": round(r.achieved_qps, 1),
+                    "ttft_p99_ms": round(r.ttft_p99_ms, 3),
+                    "tpot_p99_ms": round(r.tpot_p99_ms, 4),
+                    "residency_pct": round(r.residency_mean * 100, 1),
+                    "kv_spill_read_pct": round(r.kv_spill_read_frac * 100, 1),
+                    "bank_conflict_pct": round(r.bank_conflict_rate * 100, 1),
+                    "energy_mj": round(r.sim.energy_j * 1e3, 3),
+                    "n_events": r.sim.n_events,
+                }
+            )
+    return rows

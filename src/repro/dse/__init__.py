@@ -29,6 +29,7 @@ from repro.dse.grid import (  # noqa: F401
     GridSpec,
     MetricsGrid,
     PPAGrid,
+    evaluate_serving_slo,
     evaluate_workload_grid,
     metrics_grid,
 )
@@ -39,6 +40,12 @@ from repro.dse.pareto import (  # noqa: F401
     pareto_indices_naive,
 )
 from repro.dse.refine import refine_front  # noqa: F401
+from repro.dse.serving import (  # noqa: F401
+    ServingSLO,
+    ServingSweepSpec,
+    evaluate_serving_grid,
+    slo_knee,
+)
 
 __all__ = [
     "CountGrid",
@@ -49,9 +56,13 @@ __all__ = [
     "HAVE_JAX",
     "MetricsGrid",
     "PPAGrid",
+    "ServingSLO",
+    "ServingSweepSpec",
     "count_grid",
     "dominates",
     "entity_size_grid",
+    "evaluate_serving_grid",
+    "evaluate_serving_slo",
     "evaluate_workload_grid",
     "inference_count_grid",
     "knee_index",
@@ -60,5 +71,6 @@ __all__ = [
     "pareto_indices_naive",
     "refine_front",
     "resolve_backend",
+    "slo_knee",
     "training_count_grid",
 ]

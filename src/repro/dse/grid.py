@@ -283,6 +283,21 @@ def _eval_arrays(sizes, caps, ppa_fields, t_compute, modes, mem, dram, xp):
     )
 
 
+def evaluate_serving_slo(spec) -> dict:
+    """Serving mode of the DSE grid: closed-loop SLO sweep + knee.
+
+    Unlike the closed-form ``evaluate_workload_grid``, serving points are
+    scored by replaying the continuous-batching engine (``repro.serve``) on
+    the bank-level simulator — see :mod:`repro.dse.serving` for the spec and
+    row schema.  Returns ``{"rows": [...], "knee_capacity_mb": {...},
+    "best": {...}}``.
+    """
+    from repro.dse.serving import evaluate_serving_grid, slo_knee
+
+    rows = evaluate_serving_grid(spec)
+    return {"rows": rows, **slo_knee(rows)}
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted_eval(modes: tuple, mem: MemoryParams, dram: DRAMModel):
     """One jitted evaluator per (modes, MemoryParams, DRAMModel) triple;

@@ -1,0 +1,110 @@
+"""Serving-mode DSE: SLO-knee capacity search over the closed-loop engine.
+
+The paper's DSE (Fig. 1) ranks GLB designs by batch-workload energy/latency;
+its knees (64 MB inference / 256 MB training) say nothing about *serving*
+load.  This module adds the missing objective: **the smallest GLB capacity
+(and cheapest technology) that holds a TTFT/TPOT SLO at a target QPS** under
+continuous batching, evaluated point by point with the closed-loop engine
+(``repro.serve``) on the bank-level simulator.  The closed-form grid cannot
+rank these points — whether a capacity holds the SLO depends on KV-page
+spill and bank queueing, which only the replay sees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import NLP_TABLE_V, NLPModelSpec
+from repro.sim.trace import ServingConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSLO:
+    """p99 latency targets a design must hold."""
+
+    ttft_p99_ms: float = 50.0
+    tpot_p99_ms: float = 0.35
+
+    def holds(self, report) -> bool:
+        return (
+            report.completed == report.n_requests
+            and report.ttft_p99_ms <= self.ttft_p99_ms
+            and report.tpot_p99_ms <= self.tpot_p99_ms
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSweepSpec:
+    """The serving design-space grid (capacity x technology at one QPS)."""
+
+    capacities_mb: tuple[float, ...] = (32.0, 64.0, 128.0, 256.0)
+    technologies: tuple[str, ...] = ("sram", "sot", "sot_opt")
+    model: str = "gpt2"
+    qps: float = 800.0
+    slo: ServingSLO = ServingSLO()
+    serving: ServingConfig = None  # arrival/prompt/decode draws; None = default
+    engine: object = None  # ServeEngineConfig; None = default
+
+    def resolve_model(self) -> NLPModelSpec:
+        specs = {s.name: s for s in NLP_TABLE_V}
+        if self.model not in specs:
+            raise KeyError(f"unknown NLP spec {self.model!r}; have {sorted(specs)}")
+        return specs[self.model]
+
+
+def evaluate_serving_grid(spec: ServingSweepSpec) -> list[dict]:
+    """Closed-loop replay of every (technology, capacity) point.
+
+    Returns one row per point with the SLO metrics, congestion/residency
+    statistics, replay energy, and the SLO verdict.  Rows are ordered
+    technology-major, capacity-minor (ascending).
+    """
+    from repro.serve import ServeEngineConfig, closed_loop_serving
+
+    model = spec.resolve_model()
+    base = spec.serving or ServingConfig()
+    serving = dataclasses.replace(base, arrival_rate_rps=spec.qps)
+    engine = spec.engine or ServeEngineConfig()
+    rows = []
+    for tech in spec.technologies:
+        for cap in sorted(spec.capacities_mb):
+            system = HybridMemorySystem(glb=glb_array(tech, cap))
+            _, rep = closed_loop_serving(system, model, serving, engine)
+            rows.append({
+                "technology": tech,
+                "capacity_mb": cap,
+                "qps": spec.qps,
+                "ttft_p99_ms": rep.ttft_p99_ms,
+                "tpot_p99_ms": rep.tpot_p99_ms,
+                "residency": rep.residency_mean,
+                "kv_spill_read_frac": rep.kv_spill_read_frac,
+                "bank_conflict_rate": rep.bank_conflict_rate,
+                "energy_j": rep.sim.energy_j,
+                "completed": rep.completed,
+                "n_requests": rep.n_requests,
+                "slo_ok": spec.slo.holds(rep),
+            })
+    return rows
+
+
+def slo_knee(rows: list[dict]) -> dict:
+    """Per-technology SLO-knee capacity, plus the overall cheapest point.
+
+    The knee is the *smallest* capacity whose replay holds the SLO (None if
+    no capacity does); ``best`` is the minimum-energy SLO-holding point
+    across all technologies — the serving counterpart of the paper's
+    64 MB/256 MB workload knees.
+    """
+    knees: dict[str, float | None] = {}
+    best = None
+    for row in rows:
+        tech = row["technology"]
+        knees.setdefault(tech, None)
+        if not row["slo_ok"]:
+            continue
+        if knees[tech] is None or row["capacity_mb"] < knees[tech]:
+            knees[tech] = row["capacity_mb"]
+        if best is None or row["energy_j"] < best["energy_j"]:
+            best = row
+    return {"knee_capacity_mb": knees, "best": best}

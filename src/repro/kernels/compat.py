@@ -1,0 +1,30 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+The TPU compiler-params dataclass was renamed across jax releases:
+``pltpu.TPUCompilerParams`` (jax <= 0.4.x / 0.5.x) became
+``pltpu.CompilerParams`` (newer releases), with the old name first aliased
+and later removed.  Kernels must run across that whole range (the CI matrix
+pins 0.4.31, the oldest release with their block-shape-first ``BlockSpec``
+order, plus the current release), so they construct their params through
+:func:`tpu_compiler_params` instead of naming either class directly.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _resolve_params_cls():
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise AttributeError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version"
+    )
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under whichever name this jax has."""
+    return _resolve_params_cls()(**kwargs)

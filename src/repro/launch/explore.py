@@ -8,11 +8,19 @@
 
     PYTHONPATH=src python -m repro.launch.explore --smoke
 
+    PYTHONPATH=src python -m repro.launch.explore --serving --qps 800 \
+        --caps 32,64,128,256 --techs sram,sot_opt
+
 For every (workload, mode, batch) the full capacity x technology grid is
 evaluated in one ``repro.dse`` array program; the (energy, latency, area)
 Pareto frontier is extracted with the O(n log n) staircase sweep, the
 knee point (closest to utopia) is reported, and ``--refine`` re-scores the
 frontier with the bank-level trace simulator (``repro.sim``).
+
+``--serving`` switches the DSE to the closed-loop serving objective: every
+(technology, capacity) point is replayed through the continuous-batching
+engine (``repro.serve``) and the SLO-knee — the smallest capacity holding
+the p99 TTFT/TPOT SLO at the target QPS — is reported per technology.
 """
 
 from __future__ import annotations
@@ -141,6 +149,67 @@ def _print_row(row: dict, full: bool) -> None:
         )
 
 
+def explore_serving(args) -> int:
+    """Serving-mode DSE: SLO sweep + knee report (see repro.dse.serving)."""
+    from repro.dse import ServingSLO, ServingSweepSpec, evaluate_serving_slo
+    from repro.serve import ServeEngineConfig
+    from repro.sim import ServingConfig
+
+    if args.smoke:
+        spec = ServingSweepSpec(
+            capacities_mb=(32.0, 64.0, 128.0, 256.0),
+            technologies=("sram", "sot_opt"),
+            qps=800.0,
+            slo=ServingSLO(ttft_p99_ms=30.0, tpot_p99_ms=0.31),
+            serving=ServingConfig(n_requests=16, prompt_len=512,
+                                  decode_len=64, seed=2),
+            engine=ServeEngineConfig(max_batch=16),
+        )
+    else:
+        # --models carries CV names by default; serving only understands the
+        # Table V NLP specs, so pick the first recognised one (gpt2 if none).
+        from repro.core.workload import NLP_TABLE_V
+
+        nlp_names = {s.name for s in NLP_TABLE_V}
+        requested = [n for n in _parse_list(args.models) if n in nlp_names]
+        if len(requested) > 1:
+            print(f"serving DSE sweeps one model; using {requested[0]!r} "
+                  f"(ignoring {requested[1:]})", file=sys.stderr)
+        spec = ServingSweepSpec(
+            capacities_mb=_parse_list(args.caps, float),
+            technologies=_parse_list(args.techs),
+            model=requested[0] if requested else "gpt2",
+            qps=args.qps,
+            slo=ServingSLO(ttft_p99_ms=args.slo_ttft_ms,
+                           tpot_p99_ms=args.slo_tpot_ms),
+            serving=ServingConfig(n_requests=args.requests, seed=args.seed),
+            engine=ServeEngineConfig(max_batch=args.max_batch),
+        )
+    t0 = time.perf_counter()
+    out = evaluate_serving_slo(spec)
+    dt = time.perf_counter() - t0
+    print(f"# serving DSE {spec.model} @ {spec.qps:.0f} rps "
+          f"(SLO: TTFT p99 <= {spec.slo.ttft_p99_ms} ms, "
+          f"TPOT p99 <= {spec.slo.tpot_p99_ms} ms; {dt:.1f}s)")
+    for r in out["rows"]:
+        mark = "ok " if r["slo_ok"] else "SLO"
+        print(f"  [{mark}] {r['technology']:>8}@{r['capacity_mb']:<6.0f} "
+              f"ttft_p99={r['ttft_p99_ms']:.2f}ms tpot_p99={r['tpot_p99_ms']:.3f}ms "
+              f"residency={r['residency'] * 100:.0f}% "
+              f"energy={r['energy_j']:.3e}J")
+    for tech, cap in out["knee_capacity_mb"].items():
+        knee = f"{cap:.0f} MB" if cap is not None else "none (SLO unmet)"
+        print(f"  SLO-knee capacity    : {tech:>8} -> {knee}")
+    best = out["best"]
+    if best is not None:
+        print(f"  min-energy SLO point : {best['technology']}@"
+              f"{best['capacity_mb']:.0f}MB energy={best['energy_j']:.3e}J")
+    ok = any(cap is not None for cap in out["knee_capacity_mb"].values())
+    if args.smoke:
+        print("smoke OK" if ok else "smoke FAILED")
+    return 0 if ok else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--domain", default="cv", choices=DOMAINS)
@@ -159,7 +228,18 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true", help="print every Pareto point")
     ap.add_argument("--smoke", action="store_true",
                     help="fast end-to-end check on a tiny grid")
+    ap.add_argument("--serving", action="store_true",
+                    help="serving-mode DSE: SLO-knee capacity at --qps")
+    ap.add_argument("--qps", type=float, default=800.0)
+    ap.add_argument("--slo-ttft-ms", type=float, default=50.0)
+    ap.add_argument("--slo-tpot-ms", type=float, default=0.35)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=2)
     args = ap.parse_args(argv)
+
+    if args.serving:
+        return explore_serving(args)
 
     if args.smoke:
         spec = GridSpec(

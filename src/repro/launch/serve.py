@@ -29,9 +29,15 @@ def serve(
     model_parallel: int = 1,
     seed: int = 0,
 ):
+    if gen < 1:
+        raise ValueError("gen must be >= 1 (prefill itself produces one token)")
     cfg = get_smoke(arch) if smoke else get_config(arch)
     mesh = make_host_mesh(model_parallel)
-    max_len = prompt_len + gen + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    # Token accounting: prefill produces token 1 from the prompt; the decode
+    # loop appends the remaining gen-1.  The cache therefore holds the prompt
+    # (+ image tokens) plus gen-1 decoded tokens — the last generated token is
+    # never written back.
+    max_len = prompt_len + (gen - 1) + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
     shape = ShapeConfig("serve", prompt_len, batch, "prefill")
     batch_specs = prefill_input_specs(cfg, shape)
     bundle = build_serve_steps(cfg, mesh, batch, max_len, batch_specs=batch_specs)
@@ -71,10 +77,15 @@ def serve(
     t_decode = time.time() - t0
 
     out = np.concatenate(generated, axis=1)
-    tps = batch * (gen - 1) / max(t_decode, 1e-9)
+    assert out.shape[1] == gen, (
+        f"generated {out.shape[1]} tokens per sequence, expected gen={gen}"
+    )
+    decode_tps = batch * (gen - 1) / max(t_decode, 1e-9)
+    total_tps = batch * gen / max(t_prefill + t_decode, 1e-9)
     print(
-        f"prefill {prompt_len} toks x{batch}: {t_prefill*1e3:.1f}ms; "
-        f"decode {gen-1} steps: {t_decode*1e3:.1f}ms ({tps:.1f} tok/s)"
+        f"prefill {prompt_len} toks x{batch}: {t_prefill*1e3:.1f}ms (1 tok/seq); "
+        f"decode {gen-1} steps: {t_decode*1e3:.1f}ms ({decode_tps:.1f} tok/s); "
+        f"total {gen} toks/seq ({total_tps:.1f} tok/s end-to-end)"
     )
     return out
 

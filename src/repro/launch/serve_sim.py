@@ -1,0 +1,124 @@
+"""Closed-loop continuous-batching serving simulation driver.
+
+    PYTHONPATH=src python -m repro.launch.serve_sim --model gpt2 \
+        --tech sot_opt --glb-mb 64 --qps 400 --requests 32 --max-batch 16
+
+    PYTHONPATH=src python -m repro.launch.serve_sim --smoke
+
+Runs the ``repro.serve`` continuous-batching engine (iteration-level
+admission over a paged KV cache on the GLB banks), lowers the resulting
+schedule to a bank-accurate event stream, replays it with ``repro.sim``,
+and reports TTFT/TPOT p50/p99, bank-conflict rate, and GLB page residency.
+``--cross-validate`` additionally generates the open-loop ``serving_trace``
+at the same seed/config and prints the aggregate byte-count agreement.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import NLP_TABLE_V
+from repro.serve import ServeEngineConfig, closed_loop_serving, summarize_report
+from repro.sim import ServingConfig, SimConfig, serving_trace
+from repro.sim.trace import trace_byte_counts
+
+
+def run(args) -> int:
+    specs = {s.name: s for s in NLP_TABLE_V}
+    if args.model not in specs:
+        print(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
+        return 2
+    spec = specs[args.model]
+    system = HybridMemorySystem(glb=glb_array(args.tech, args.glb_mb))
+    cfg = ServingConfig(
+        n_requests=args.requests,
+        arrival_rate_rps=args.qps,
+        prompt_len=args.prompt_len,
+        decode_len=args.decode_len,
+        seed=args.seed,
+    )
+    ecfg = ServeEngineConfig(
+        max_batch=args.max_batch,
+        max_step_tokens=args.max_step_tokens,
+        prefill_chunk=args.prefill_chunk,
+        page_tokens=args.page_tokens,
+    )
+    t0 = time.time()
+    sim_config = None
+    if args.coalesce_window_ns is not None:
+        sim_config = SimConfig(coalesce_window_ns=args.coalesce_window_ns,
+                               backend=args.backend)
+    trace, report = closed_loop_serving(system, spec, cfg, ecfg,
+                                        sim_config=sim_config)
+    dt = time.time() - t0
+    print(f"# serve_sim {args.model} {args.tech}@{args.glb_mb}MB "
+          f"{args.requests} reqs @ {args.qps}/s max_batch={args.max_batch} "
+          f"({len(trace)} events, {dt:.1f}s)")
+    print(f"token interval       : {trace.meta['token_interval_ns'] / 1e3:.1f} us")
+    print(summarize_report(report))
+
+    if args.cross_validate:
+        open_trace = serving_trace(system, spec, cfg)
+        b_open = trace_byte_counts(open_trace, system)
+        b_closed = report.bytes
+        print("byte-count agreement vs open-loop serving_trace:")
+        worst = 0.0
+        for key in ("glb_bytes", "dram_bytes"):
+            rel = abs(b_closed[key] - b_open[key]) / max(b_open[key], 1.0)
+            worst = max(worst, rel)
+            print(f"  {key:12s}: closed {b_closed[key] / 1e6:.1f} MB "
+                  f"vs open {b_open[key] / 1e6:.1f} MB (rel err {rel * 100:.2f}%)")
+        if report.kv_spill_read_frac > 0.05:
+            print(f"  note: {report.kv_spill_read_frac * 100:.0f}% of KV reads "
+                  "spill — the open loop's scalar spill_frac and the paged "
+                  "allocator legitimately diverge here; compare at a "
+                  "capacity that holds the working set")
+        if worst > args.tolerance:
+            print(f"FAIL: byte agreement outside {args.tolerance * 100:.0f}%")
+            return 1
+        print("cross-validation OK")
+    if report.completed != report.n_requests:
+        print("FAIL: not all requests completed")
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="gpt2")
+    ap.add_argument("--tech", default="sot_opt", choices=["sram", "sot", "sot_opt"])
+    ap.add_argument("--glb-mb", type=float, default=64.0)
+    ap.add_argument("--qps", type=float, default=200.0)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--decode-len", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-step-tokens", type=int, default=4096)
+    ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--coalesce-window-ns", type=float, default=None,
+                    help="write-combining window (default: 4x token interval)")
+    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"])
+    ap.add_argument("--cross-validate", action="store_true",
+                    help="compare aggregate bytes against serving_trace")
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast end-to-end check (tiny workload + cross-validation)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.requests, args.prompt_len, args.decode_len = 12, 64, 32
+        args.qps, args.max_batch = 300.0, 8
+        args.cross_validate = True
+        rc = run(args)
+        print("smoke OK" if rc == 0 else "smoke FAILED")
+        return rc
+    return run(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

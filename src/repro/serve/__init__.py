@@ -1,0 +1,36 @@
+"""Continuous-batching LLM serving engine on the SOT-MRAM memory system.
+
+Closes the loop between request arrivals and the bank-level simulator:
+an iteration-level continuous-batching scheduler (``scheduler``) runs over
+a paged KV-cache allocator that maps fixed-size KV pages onto GLB banks and
+spills cold pages to DRAM (``kv_pages``); the lowering (``lower``) emits the
+resulting bank-accurate event stream through ``repro.sim``'s TraceBuilder
+and scores it with the FIFO replay — TTFT/TPOT p50/p99, bank-conflict rate,
+GLB page residency.  ``repro.dse.serving`` sweeps this engine over the
+capacity x technology grid to find the SLO-knee capacity.
+"""
+
+from repro.serve.kv_pages import KVPage, PagedKVAllocator
+from repro.serve.lower import (
+    ServeReport,
+    closed_loop_serving,
+    summarize_report,
+)
+from repro.serve.scheduler import (
+    ContinuousBatchScheduler,
+    RequestState,
+    ServeEngineConfig,
+    StepPlan,
+)
+
+__all__ = [
+    "ContinuousBatchScheduler",
+    "KVPage",
+    "PagedKVAllocator",
+    "RequestState",
+    "ServeEngineConfig",
+    "ServeReport",
+    "StepPlan",
+    "closed_loop_serving",
+    "summarize_report",
+]

@@ -1,0 +1,156 @@
+"""Paged KV-cache allocator over GLB banks with DRAM spill.
+
+The open-loop ``serving_trace`` approximates KV placement with a single
+scalar ``spill_frac`` (steady-state footprint vs GLB capacity).  This module
+replaces that with *per-page residency*: the KV cache of each request is a
+list of fixed-size pages — ``page_tokens`` tokens of K+V across **all**
+layers — each mapped to one GLB bank.  When the GLB fills, the
+least-recently-touched page is spilled to DRAM; its reads and appends then
+hit the exposed DRAM path instead of the bank.  Spilled pages stay in DRAM
+until their request completes (no promotion — documented simplification),
+so a burst that overflows the GLB keeps paying DRAM latency for its cold
+context, exactly the behaviour the scalar fraction cannot express.
+
+The allocator is deliberately scheduler-agnostic: it only sees
+``(request, token-count)`` demands and a monotonically increasing step
+counter for LRU ordering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+
+@dataclasses.dataclass
+class KVPage:
+    """One fixed-size KV page: ``page_tokens`` tokens x all layers."""
+
+    bank: int
+    resident: bool
+    last_used: int = 0
+
+
+class PagedKVAllocator:
+    """Maps fixed-size KV pages onto GLB banks; spills cold pages to DRAM."""
+
+    def __init__(self, glb_bytes: float, page_bytes: float, n_banks: int):
+        if page_bytes <= 0:
+            raise ValueError("page_bytes must be positive")
+        self.page_bytes = float(page_bytes)
+        self.n_banks = max(1, int(n_banks))
+        self.capacity_pages = max(0, int(glb_bytes // page_bytes))
+        self._pages: dict[int, list[KVPage]] = {}
+        self._resident = 0
+        self._clock = 0
+        # Lazy LRU: a min-heap of (last_used-at-push, seq, page) entries.
+        # touch() pushes fresh entries instead of re-keying, and eviction
+        # discards entries whose stamp no longer matches the page — O(log n)
+        # amortized instead of a linear scan over every live page.
+        self._lru: list = []
+        self._seq = itertools.count()
+        self.spill_count = 0  # pages ever spilled (eviction or birth-in-DRAM)
+        self.pages_created = 0  # pages ever allocated (live + freed)
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def resident_pages(self) -> int:
+        return self._resident
+
+    @property
+    def total_pages(self) -> int:
+        return sum(len(p) for p in self._pages.values())
+
+    def residency(self) -> float:
+        """Fraction of live KV pages currently GLB-resident (1.0 if none)."""
+        total = self.total_pages
+        return self._resident / total if total else 1.0
+
+    def tick(self) -> None:
+        """Advance the LRU clock (call once per scheduler step)."""
+        self._clock += 1
+
+    def _bank_of(self, rid: int, page_idx: int) -> int:
+        # Same hash family as serving_trace's stripe placement: spreads one
+        # request's pages over banks while decorrelating requests.
+        return (rid * 131 + page_idx * 7919) % self.n_banks
+
+    def _evict_lru(self) -> bool:
+        while self._lru:
+            stamp, _, page = heapq.heappop(self._lru)
+            if not page.resident or page.last_used != stamp:
+                continue  # stale entry: freed, already spilled, or re-touched
+            page.resident = False
+            self._resident -= 1
+            self.spill_count += 1
+            return True
+        return False
+
+    # -- allocation ----------------------------------------------------------
+    def ensure(self, rid: int, n_tokens: int, page_tokens: int) -> None:
+        """Grow request ``rid``'s page list to cover ``n_tokens`` tokens.
+
+        New pages are placed in the GLB, evicting LRU pages as needed; if the
+        GLB holds zero pages outright the page is born spilled.
+        """
+        pages = self._pages.setdefault(rid, [])
+        need = -(-int(n_tokens) // int(page_tokens)) if n_tokens > 0 else 0
+        while len(pages) < need:
+            idx = len(pages)
+            resident = True
+            if self.capacity_pages == 0:
+                resident = False
+                self.spill_count += 1
+            else:
+                while self._resident >= self.capacity_pages:
+                    if not self._evict_lru():  # pragma: no cover - safety net
+                        resident = False
+                        break
+            page = KVPage(bank=self._bank_of(rid, idx), resident=resident,
+                          last_used=self._clock)
+            if page.resident:
+                self._resident += 1
+                heapq.heappush(self._lru, (page.last_used, next(self._seq), page))
+            pages.append(page)
+            self.pages_created += 1
+
+    def touch(self, rid: int) -> None:
+        """Mark all of ``rid``'s pages as used this step (attention reads
+        the whole context every token)."""
+        for p in self._pages.get(rid, ()):
+            if p.last_used != self._clock:
+                p.last_used = self._clock
+                if p.resident:
+                    heapq.heappush(self._lru, (p.last_used, next(self._seq), p))
+
+    def free(self, rid: int) -> int:
+        """Release a completed request's pages; returns the page count."""
+        pages = self._pages.pop(rid, [])
+        self._resident -= sum(p.resident for p in pages)
+        for p in pages:
+            p.resident = False  # invalidates any lingering LRU heap entries
+        return len(pages)
+
+    # -- read/write placement -------------------------------------------------
+    def pages_of(self, rid: int) -> list[KVPage]:
+        return self._pages.get(rid, [])
+
+    def page_split(self, rid: int, n_tokens: int, page_tokens: int):
+        """Token counts per page for a context of ``n_tokens`` tokens.
+
+        Returns ``(banks, tokens, resident)`` parallel lists over the pages
+        covering the context — the lowering turns each page into one GLB (or
+        exposed DRAM, if spilled) read event.
+        """
+        banks, toks, res = [], [], []
+        remaining = int(n_tokens)
+        for p in self.pages_of(rid):
+            if remaining <= 0:
+                break
+            t = min(int(page_tokens), remaining)
+            banks.append(p.bank)
+            toks.append(t)
+            res.append(p.resident)
+            remaining -= t
+        return banks, toks, res

@@ -1,0 +1,478 @@
+"""Closed-loop serving: drive the scheduler, lower to bank-level events.
+
+``closed_loop_serving`` runs the continuous-batching scheduler step by step
+against the paged KV allocator, emits every step's memory traffic through
+the existing :class:`repro.sim.trace.TraceBuilder`, and feeds the *modelled*
+step duration (weight-stream cadence, per-bank GLB service, exposed DRAM
+spill time — whichever dominates) back into the clock.  Queueing therefore
+compounds: a step slowed by bank conflicts or KV spill delays every token
+behind it, which is exactly what the open-loop ``serving_trace`` cannot
+express.
+
+Traffic formulas deliberately mirror ``serving_trace`` operand for operand
+(per decode token and layer: context-length KV read, KV append to a stable
+line, activation read/write pair, shared per-step weight stream; per prefill
+token and layer: 6x/2x activation traffic plus the KV write), with one
+difference: KV placement is per-page residency from the allocator instead of
+a scalar ``spill_frac``.  At matched config and zero spill the two
+generators agree on aggregate GLB/DRAM byte counts — pinned by
+``tests/test_serve.py``.
+
+The final event stream is scored by ``sim.engine``'s FIFO replay; per-token
+events are tagged with their request id so TTFT/TPOT p50/p99 are measured
+from *replayed* finish times (bank-accurate), not from the scheduler clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.access_counts import MemoryParams
+from repro.core.memory_system import HybridMemorySystem
+from repro.core.workload import NLPModelSpec
+from repro.sim.engine import SimConfig, SimResult, simulate_trace
+from repro.sim.trace import (
+    KIND_DRAM_RD,
+    KIND_DRAM_WR,
+    KIND_GLB_RD,
+    KIND_GLB_WR,
+    KIND_PREFETCH_RD,
+    MB,
+    ServingConfig,
+    Trace,
+    TraceBuilder,
+    _spec_weight_bytes,
+    draw_requests,
+    trace_byte_counts,
+)
+from repro.serve.kv_pages import PagedKVAllocator
+from repro.serve.scheduler import (
+    ContinuousBatchScheduler,
+    ServeEngineConfig,
+    StepPlan,
+)
+
+_MAX_STEPS = 200_000
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Closed-loop serving outcome: SLO metrics + memory-system congestion."""
+
+    n_requests: int
+    completed: int
+    n_steps: int
+    offered_qps: float
+    achieved_qps: float
+    span_s: float
+    # Replay-scored (bank-accurate) SLO metrics, milliseconds.
+    ttft_p50_ms: float
+    ttft_p99_ms: float
+    tpot_p50_ms: float
+    tpot_p99_ms: float
+    # Scheduler-clock metrics (the closed-loop feedback signal).
+    sched_ttft_p99_ms: float
+    sched_tpot_p99_ms: float
+    # KV paging.
+    residency_mean: float  # time-weighted fraction of KV pages GLB-resident
+    pages_spilled: int
+    pages_allocated: int
+    kv_spill_read_frac: float  # fraction of KV read bytes served from DRAM
+    # Congestion (from the replay).
+    bank_conflict_rate: float
+    mean_queue_depth: float
+    bytes: dict
+    sim: SimResult
+
+
+@dataclasses.dataclass
+class _StepBuffers:
+    """Per-step event accumulators, flushed as one ``add`` per kind."""
+
+    glb_rd_bank: list = dataclasses.field(default_factory=list)
+    glb_rd_acc: list = dataclasses.field(default_factory=list)
+    glb_wr_bank: list = dataclasses.field(default_factory=list)
+    glb_wr_acc: list = dataclasses.field(default_factory=list)
+    glb_wr_line: list = dataclasses.field(default_factory=list)  # -1 = fresh
+    glb_wr_tag: list = dataclasses.field(default_factory=list)
+    dram_rd_ch: list = dataclasses.field(default_factory=list)
+    dram_rd_acc: list = dataclasses.field(default_factory=list)
+    dram_wr_ch: list = dataclasses.field(default_factory=list)
+    dram_wr_acc: list = dataclasses.field(default_factory=list)
+    pref_ch: list = dataclasses.field(default_factory=list)
+    pref_acc: list = dataclasses.field(default_factory=list)
+
+
+class _ServeLowering:
+    def __init__(
+        self,
+        system: HybridMemorySystem,
+        spec: NLPModelSpec,
+        cfg: ServingConfig,
+        engine_cfg: ServeEngineConfig,
+        n_dram_channels: int = 8,
+        n_prefetch_channels: int = 4,
+    ):
+        self.system, self.spec = system, spec
+        self.cfg, self.ecfg = cfg, engine_cfg
+        self.b = TraceBuilder(system, n_dram_channels, n_prefetch_channels)
+        glb, dram = system.glb, system.dram
+        self.n_layers = max(1, spec.enc_layers + spec.dec_layers)
+        self.d = spec.d_model
+        self.kv_token_bytes = 2 * self.d * cfg.d_w
+        self.glb_acc_bytes = int(MB * MemoryParams().mbpa_glb)
+        self.t_dram_acc_ns = dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
+        self.t_dram_acc_ch_ns = self.t_dram_acc_ns * n_dram_channels
+        self.e_dram_pj = dram.energy_pj_per_access()
+        self.weight_bytes = _spec_weight_bytes(spec, cfg.d_w)
+        self.t_ws_ns = self.weight_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
+        if engine_cfg.token_interval_ns is not None:
+            if engine_cfg.token_interval_ns <= 0:
+                raise ValueError("token_interval_ns must be positive")
+            self.interval_ns = engine_cfg.token_interval_ns
+        else:
+            self.interval_ns = max(engine_cfg.headroom * self.t_ws_ns, 1e3)
+        page_bytes = engine_cfg.page_tokens * self.kv_token_bytes * self.n_layers
+        self.alloc = PagedKVAllocator(
+            glb_bytes=glb.capacity_mb * MB * engine_cfg.kv_reserve_frac,
+            page_bytes=page_bytes,
+            n_banks=self.b.n_glb_banks,
+        )
+        # Stable KV-append line per (request, layer) — the write-coalescing
+        # target, same namespace layout as serving_trace.
+        self._kv_line_base = self.b.fresh_lines(cfg.n_requests * self.n_layers)[0]
+        self._l = np.arange(self.n_layers)
+        # Running spill statistics (read bytes by placement).
+        self._kv_rd_bytes_glb = 0.0
+        self._kv_rd_bytes_dram = 0.0
+        self._residency_wsum = 0.0
+        self._dt_sum = 0.0
+
+    # -- per-step emission ----------------------------------------------------
+    def _emit_prefill(self, buf: _StepBuffers, r, toks: int) -> float:
+        """Emit one prefill chunk; returns its stream-time contribution."""
+        d_w, d, L = self.cfg.d_w, self.d, self.n_layers
+        rid = r.rid
+        act_rd = 6.0 * toks * d * d_w / self.glb_acc_bytes
+        act_wr = 2.0 * toks * d * d_w / self.glb_acc_bytes
+        bank = (rid * 131 + self._l * 17) % self.b.n_glb_banks
+        buf.glb_rd_bank.append(bank)
+        buf.glb_rd_acc.append(np.full(L, act_rd))
+        buf.glb_wr_bank.append((bank + 1) % self.b.n_glb_banks)
+        buf.glb_wr_acc.append(np.full(L, act_wr))
+        buf.glb_wr_line.append(np.full(L, -1, np.int64))
+        buf.glb_wr_tag.append(np.full(L, -1, np.int64))
+
+        # KV writes land on the pages covering the new tokens.
+        start = r.prefilled
+        self.alloc.ensure(rid, start + toks, self.ecfg.page_tokens)
+        pt = self.ecfg.page_tokens
+        for idx in range(start // pt, -(-(start + toks) // pt)):
+            page = self.alloc.pages_of(rid)[idx]
+            t_in_page = min((idx + 1) * pt, start + toks) - max(idx * pt, start)
+            acc = t_in_page * self.kv_token_bytes * L / self.glb_acc_bytes
+            if page.resident:
+                buf.glb_wr_bank.append(np.array([page.bank]))
+                buf.glb_wr_acc.append(np.array([acc]))
+                buf.glb_wr_line.append(np.array([-1], np.int64))
+                buf.glb_wr_tag.append(np.array([-1], np.int64))
+            else:
+                buf.dram_wr_ch.append(np.array([page.bank % self.b.n_dram_channels]))
+                buf.dram_wr_acc.append(
+                    np.array([acc * self.glb_acc_bytes / self.system.dram.access_bytes])
+                )
+
+        # Per-request weight-stream slice (prefill re-streams the weights,
+        # like serving_trace's per-arrival prefill burst).
+        frac = toks / r.prompt
+        pref = self.weight_bytes * frac / L / self.system.dram.access_bytes
+        buf.pref_ch.append(self._l % self.b.n_prefetch_channels)
+        buf.pref_acc.append(np.full(L, pref))
+        return self.t_ws_ns * (frac + toks / 2048.0)
+
+    def _emit_decode(self, buf: _StepBuffers, r) -> None:
+        L = self.n_layers
+        rid = r.rid
+        ctx = r.prompt + r.decoded  # context read by this token
+        self.alloc.ensure(rid, ctx + 1, self.ecfg.page_tokens)
+        self.alloc.touch(rid)
+
+        # KV reads: one event per page of the context, resident pages on
+        # their GLB bank, spilled pages on the exposed DRAM path.
+        banks, toks, res = self.alloc.page_split(rid, ctx, self.ecfg.page_tokens)
+        for bank, t_in_page, resident in zip(banks, toks, res):
+            acc = t_in_page * self.kv_token_bytes * L / self.glb_acc_bytes
+            bytes_ = acc * self.glb_acc_bytes
+            if resident:
+                buf.glb_rd_bank.append(np.array([bank]))
+                buf.glb_rd_acc.append(np.array([acc]))
+                self._kv_rd_bytes_glb += bytes_
+            else:
+                buf.dram_rd_ch.append(np.array([bank % self.b.n_dram_channels]))
+                buf.dram_rd_acc.append(
+                    np.array([acc * self.glb_acc_bytes / self.system.dram.access_bytes])
+                )
+                self._kv_rd_bytes_dram += bytes_
+
+        # KV append: stable line per (request, layer) -> coalescible.
+        append_page = self.alloc.pages_of(rid)[ctx // self.ecfg.page_tokens]
+        w_acc = max(1.0, self.kv_token_bytes / self.glb_acc_bytes)
+        lines = self._kv_line_base + rid * L + self._l
+        if append_page.resident:
+            buf.glb_wr_bank.append(np.full(L, append_page.bank))
+            buf.glb_wr_acc.append(np.full(L, w_acc))
+            buf.glb_wr_line.append(lines)
+            buf.glb_wr_tag.append(np.full(L, -1, np.int64))
+        else:
+            buf.dram_wr_ch.append(
+                np.full(L, append_page.bank % self.b.n_dram_channels)
+            )
+            buf.dram_wr_acc.append(
+                np.full(L, w_acc * self.glb_acc_bytes / self.system.dram.access_bytes)
+            )
+
+        # Activation read/write per layer; the last layer's write is the
+        # token-completion marker, tagged with the request id so the replay
+        # yields per-token finish times.
+        act = max(1.0, 2.0 * self.d * self.cfg.d_w / self.glb_acc_bytes)
+        buf.glb_rd_bank.append((rid * 131 + self._l * 17 + 3) % self.b.n_glb_banks)
+        buf.glb_rd_acc.append(np.full(L, act))
+        buf.glb_wr_bank.append((rid * 131 + self._l * 17 + 5) % self.b.n_glb_banks)
+        buf.glb_wr_acc.append(np.full(L, act))
+        buf.glb_wr_line.append(np.full(L, -1, np.int64))
+        tag = np.full(L, -1, np.int64)
+        tag[-1] = rid
+        buf.glb_wr_tag.append(tag)
+
+    def _flush(self, buf: _StepBuffers, t_ns: float) -> tuple[float, float]:
+        """Emit the step's events; returns (max per-bank GLB ns, DRAM ns)."""
+        b, glb = self.b, self.system.glb
+        glb_busy = np.zeros(b.n_glb_banks)
+        if buf.glb_rd_bank:
+            bank = np.concatenate(buf.glb_rd_bank)
+            acc = np.concatenate(buf.glb_rd_acc)
+            svc = acc * glb.read_latency_ns
+            b.add(np.full(bank.size, t_ns), bank, svc,
+                  acc * glb.read_energy_pj_per_access, KIND_GLB_RD)
+            np.add.at(glb_busy, bank, svc)
+        if buf.glb_wr_bank:
+            bank = np.concatenate(buf.glb_wr_bank)
+            acc = np.concatenate(buf.glb_wr_acc)
+            line = np.concatenate(buf.glb_wr_line)
+            tag = np.concatenate(buf.glb_wr_tag)
+            fresh = line < 0
+            if fresh.any():
+                line = line.copy()
+                line[fresh] = self.b.fresh_lines(int(fresh.sum()))
+            svc = acc * glb.write_latency_ns
+            b.add(np.full(bank.size, t_ns), bank, svc,
+                  acc * glb.write_energy_pj_per_access, KIND_GLB_WR,
+                  line=line, tag=tag)
+            np.add.at(glb_busy, bank, svc)
+        dram_acc_total = 0.0
+        for ch_l, acc_l, kind in (
+            (buf.dram_rd_ch, buf.dram_rd_acc, KIND_DRAM_RD),
+            (buf.dram_wr_ch, buf.dram_wr_acc, KIND_DRAM_WR),
+        ):
+            if ch_l:
+                ch = np.concatenate(ch_l)
+                acc = np.concatenate(acc_l)
+                b.add(np.full(ch.size, t_ns), b.dram_resource(ch),
+                      acc * self.t_dram_acc_ch_ns, acc * self.e_dram_pj, kind)
+                dram_acc_total += float(acc.sum())
+        if buf.pref_ch:
+            ch = np.concatenate(buf.pref_ch)
+            acc = np.concatenate(buf.pref_acc)
+            b.add(np.full(ch.size, t_ns), b.prefetch_resource(ch),
+                  acc * self.t_dram_acc_ns * b.n_prefetch_channels,
+                  acc * self.e_dram_pj, KIND_PREFETCH_RD)
+        return float(glb_busy.max()), dram_acc_total * self.t_dram_acc_ns
+
+    def step(self, sched: ContinuousBatchScheduler, plan: StepPlan) -> float:
+        """Lower one step's plan to events; returns the step duration (ns)."""
+        self.alloc.tick()
+        buf = _StepBuffers()
+        prefill_ns = 0.0
+        for r, toks in plan.prefill:
+            prefill_ns = max(prefill_ns, self._emit_prefill(buf, r, toks))
+        for r in plan.decode:
+            self._emit_decode(buf, r)
+        if plan.decode:
+            # One shared weight stream per decode step (continuous batching).
+            L = self.n_layers
+            pref = self.weight_bytes / L / self.system.dram.access_bytes
+            buf.pref_ch.append(self._l % self.b.n_prefetch_channels)
+            buf.pref_acc.append(np.full(L, pref))
+        glb_ns, dram_ns = self._flush(buf, plan.t_start_ns)
+        decode_ns = self.interval_ns if plan.decode else 0.0
+        dt = max(decode_ns, prefill_ns, glb_ns, dram_ns)
+        self._residency_wsum += self.alloc.residency() * dt
+        self._dt_sum += dt
+        return dt
+
+
+def closed_loop_serving(
+    system: HybridMemorySystem,
+    spec: NLPModelSpec,
+    cfg: ServingConfig = ServingConfig(),
+    engine_cfg: ServeEngineConfig = ServeEngineConfig(),
+    sim_config: SimConfig | None = None,
+    n_dram_channels: int = 8,
+    n_prefetch_channels: int = 4,
+) -> tuple[Trace, ServeReport]:
+    """Run the continuous-batching loop to completion and score the replay."""
+    rng = np.random.default_rng(cfg.seed)
+    arrivals, prompts, decodes = draw_requests(cfg, rng)
+    sched = ContinuousBatchScheduler(arrivals, prompts, decodes, engine_cfg)
+    low = _ServeLowering(system, spec, cfg, engine_cfg,
+                         n_dram_channels, n_prefetch_channels)
+
+    t = sched.next_arrival_ns()
+    n_steps = 0
+    while not sched.done:
+        plan = sched.plan_step(t)
+        if plan.empty:
+            nxt = sched.next_arrival_ns()
+            if not math.isfinite(nxt) or nxt <= t:  # pragma: no cover
+                raise RuntimeError("scheduler stalled with no admissible work")
+            t = nxt
+            continue
+        dt = low.step(sched, plan)
+        t_end = t + dt
+        for r in sched.commit_step(plan, t_end):
+            low.alloc.free(r.rid)
+        t = t_end
+        n_steps += 1
+        if n_steps > _MAX_STEPS:  # pragma: no cover
+            raise RuntimeError(f"serving loop exceeded {_MAX_STEPS} steps")
+
+    trace = low.b.build(
+        compute_time_s=0.0,
+        meta={
+            "scenario": "serving_closed_loop",
+            "model": spec.name,
+            "n_requests": cfg.n_requests,
+            "arrival_rate_rps": cfg.arrival_rate_rps,
+            "token_interval_ns": low.interval_ns,
+            "technology": system.glb.technology,
+            "glb_mb": system.glb.capacity_mb,
+            "n_steps": n_steps,
+            "page_tokens": engine_cfg.page_tokens,
+            "max_batch": engine_cfg.max_batch,
+        },
+    )
+    sim_config = sim_config or SimConfig(coalesce_window_ns=4 * low.interval_ns)
+    report = _score(trace, sched, low, sim_config, n_steps)
+    return trace, report
+
+
+def _percentiles_ms(x: np.ndarray) -> tuple[float, float]:
+    if x.size == 0:
+        return 0.0, 0.0
+    return (
+        float(np.percentile(x, 50)) * 1e-6,
+        float(np.percentile(x, 99)) * 1e-6,
+    )
+
+
+def _score(
+    trace: Trace,
+    sched: ContinuousBatchScheduler,
+    low: _ServeLowering,
+    sim_config: SimConfig,
+    n_steps: int,
+) -> ServeReport:
+    result, schedule, orig_idx = simulate_trace(trace, sim_config,
+                                                return_schedule=True)
+
+    # Per-request token-completion times from the replay (tagged events).
+    tags = trace.tag[orig_idx]
+    m = tags >= 0
+    arrival_by_rid = {r.rid: r.arrival_ns for r in sched.finished}
+    ttft, tpot = np.empty(0), np.empty(0)
+    if m.any():
+        tg, fin = tags[m], schedule.finish_ns[m]
+        order = np.lexsort((fin, tg))
+        tg, fin = tg[order], fin[order]
+        first = np.flatnonzero(np.r_[True, tg[1:] != tg[:-1]])
+        bounds = np.r_[first, tg.size]
+        counts = np.diff(bounds)
+        rids = tg[first]
+        t_first = fin[first]
+        t_last = fin[bounds[1:] - 1]
+        arr = np.array([arrival_by_rid.get(int(r), np.nan) for r in rids])
+        ttft = t_first - arr
+        multi = counts > 1
+        tpot = (t_last[multi] - t_first[multi]) / (counts[multi] - 1)
+
+    sched_ttft = np.array(
+        [r.first_token_ns - r.arrival_ns for r in sched.finished]
+    )
+    sched_tpot = np.array(
+        [
+            (r.finish_ns - r.first_token_ns) / (r.decoded - 1)
+            for r in sched.finished
+            if r.decoded > 1
+        ]
+    )
+    finishes = [r.finish_ns for r in sched.finished]
+    arrivals = [r.arrival_ns for r in sched.requests]
+    span_ns = (max(finishes) - min(arrivals)) if finishes else 0.0
+
+    kv_rd_total = low._kv_rd_bytes_glb + low._kv_rd_bytes_dram
+    ttft_p50, ttft_p99 = _percentiles_ms(ttft)
+    tpot_p50, tpot_p99 = _percentiles_ms(tpot)
+    return ServeReport(
+        n_requests=len(sched.requests),
+        completed=len(sched.finished),
+        n_steps=n_steps,
+        offered_qps=low.cfg.arrival_rate_rps,
+        achieved_qps=(len(sched.finished) / (span_ns * 1e-9) if span_ns else 0.0),
+        span_s=span_ns * 1e-9,
+        ttft_p50_ms=ttft_p50,
+        ttft_p99_ms=ttft_p99,
+        tpot_p50_ms=tpot_p50,
+        tpot_p99_ms=tpot_p99,
+        sched_ttft_p99_ms=(
+            float(np.percentile(sched_ttft, 99)) * 1e-6 if sched_ttft.size else 0.0
+        ),
+        sched_tpot_p99_ms=(
+            float(np.percentile(sched_tpot, 99)) * 1e-6 if sched_tpot.size else 0.0
+        ),
+        residency_mean=(
+            low._residency_wsum / low._dt_sum if low._dt_sum else 1.0
+        ),
+        pages_spilled=low.alloc.spill_count,
+        pages_allocated=low.alloc.pages_created,
+        kv_spill_read_frac=(
+            low._kv_rd_bytes_dram / kv_rd_total if kv_rd_total else 0.0
+        ),
+        bank_conflict_rate=result.bank_conflict_rate,
+        mean_queue_depth=result.mean_queue_depth,
+        bytes=trace_byte_counts(trace, low.system),
+        sim=result,
+    )
+
+
+def summarize_report(r: ServeReport) -> str:
+    """Human-readable dump, mirroring ``repro.sim.validate.summarize``."""
+    return "\n".join([
+        f"requests             : {r.completed}/{r.n_requests} completed "
+        f"in {r.n_steps} steps ({r.span_s * 1e3:.1f} ms span)",
+        f"throughput           : offered {r.offered_qps:.1f} rps, "
+        f"achieved {r.achieved_qps:.1f} rps",
+        f"TTFT p50/p99         : {r.ttft_p50_ms:.2f} / {r.ttft_p99_ms:.2f} ms "
+        f"(sched-clock p99 {r.sched_ttft_p99_ms:.2f} ms)",
+        f"TPOT p50/p99         : {r.tpot_p50_ms:.3f} / {r.tpot_p99_ms:.3f} ms "
+        f"(sched-clock p99 {r.sched_tpot_p99_ms:.3f} ms)",
+        f"GLB page residency   : {r.residency_mean * 100:.1f}% "
+        f"({r.pages_spilled} pages spilled, "
+        f"{r.kv_spill_read_frac * 100:.1f}% of KV read bytes from DRAM)",
+        f"bank conflict rate   : {r.bank_conflict_rate * 100:.2f}%",
+        f"queue depth (mean)   : {r.mean_queue_depth:.2f}",
+        f"bytes glb/dram       : {r.bytes['glb_bytes'] / 1e6:.1f} / "
+        f"{r.bytes['dram_bytes'] / 1e6:.1f} MB",
+    ])

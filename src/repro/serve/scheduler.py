@@ -1,0 +1,153 @@
+"""Iteration-level continuous batching (Orca-style) for LLM serving.
+
+Each global step the scheduler:
+
+1. **admits** waiting requests into the running batch while there is room
+   (``max_batch``) — requests queue FIFO from their Poisson arrival times;
+2. assigns every running request one unit of work: a **prefill chunk**
+   (``prefill_chunk`` tokens, whole prompt by default, bounded by the step's
+   ``max_step_tokens`` token budget — decode tokens are budgeted first) or
+   one **decode token**;
+3. **evicts** requests whose decode completed, freeing their KV pages.
+
+The scheduler is pure policy: it never touches the memory system.  The
+lowering (``repro.serve.lower``) drives it step by step, converts each
+:class:`StepPlan` into bank-level events, and feeds the *simulated* step
+duration back into the clock — that feedback (queueing delays push arrivals
+into deeper backlogs) is what makes the serving loop closed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass
+class RequestState:
+    """One request's lifecycle through the batch."""
+
+    rid: int
+    arrival_ns: float
+    prompt: int
+    decode: int
+    prefilled: int = 0
+    decoded: int = 0
+    admitted_ns: float = math.nan
+    first_token_ns: float = math.nan
+    finish_ns: float = math.nan
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= self.prompt
+
+    @property
+    def done(self) -> bool:
+        return self.prefill_done and self.decoded >= self.decode
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeEngineConfig:
+    """Knobs of the continuous-batching engine (scheduler + KV paging)."""
+
+    max_batch: int = 16  # running-batch cap (iteration-level admission)
+    max_step_tokens: int = 4096  # per-step token budget (decode first)
+    prefill_chunk: int | None = None  # tokens per prefill step; None = whole prompt
+    page_tokens: int = 16  # tokens per KV page (all layers)
+    kv_reserve_frac: float = 1.0  # fraction of the GLB usable for KV pages
+    headroom: float = 1.15  # decode cadence over the weight-stream floor
+    token_interval_ns: float | None = None  # explicit decode cadence floor
+
+    def __post_init__(self):
+        if self.max_batch <= 0:
+            raise ValueError("max_batch must be positive")
+        if self.max_step_tokens < self.max_batch:
+            raise ValueError("max_step_tokens must be >= max_batch "
+                             "(each decode slot costs one token)")
+        if self.page_tokens <= 0:
+            raise ValueError("page_tokens must be positive")
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Work assigned to one global step."""
+
+    t_start_ns: float
+    prefill: list  # [(RequestState, n_tokens)]
+    decode: list  # [RequestState] — one token each
+
+    @property
+    def empty(self) -> bool:
+        return not self.prefill and not self.decode
+
+
+class ContinuousBatchScheduler:
+    def __init__(self, arrivals_ns, prompts, decodes, cfg: ServeEngineConfig):
+        self.cfg = cfg
+        self.requests = [
+            RequestState(rid=i, arrival_ns=float(a), prompt=int(p), decode=int(d))
+            for i, (a, p, d) in enumerate(zip(arrivals_ns, prompts, decodes))
+        ]
+        self.requests.sort(key=lambda r: r.arrival_ns)
+        self._next = 0
+        self.active: list[RequestState] = []
+        self.finished: list[RequestState] = []
+
+    @property
+    def done(self) -> bool:
+        return self._next >= len(self.requests) and not self.active
+
+    def next_arrival_ns(self) -> float:
+        if self._next >= len(self.requests):
+            return math.inf
+        return self.requests[self._next].arrival_ns
+
+    def plan_step(self, now_ns: float) -> StepPlan:
+        """Admit arrivals, then split the token budget over the batch."""
+        while (
+            self._next < len(self.requests)
+            and len(self.active) < self.cfg.max_batch
+            and self.requests[self._next].arrival_ns <= now_ns
+        ):
+            r = self.requests[self._next]
+            r.admitted_ns = now_ns
+            self.active.append(r)
+            self._next += 1
+
+        decode = [r for r in self.active if r.prefill_done]
+        budget = self.cfg.max_step_tokens - len(decode)
+        prefill: list = []
+        for r in self.active:
+            if r.prefill_done:
+                continue
+            chunk = min(
+                self.cfg.prefill_chunk or r.prompt,
+                r.prompt - r.prefilled,
+                max(0, budget),
+            )
+            if chunk > 0:
+                prefill.append((r, chunk))
+                budget -= chunk
+        if self.active and not decode and not prefill:
+            # Budget starvation guard: a step must always make progress.
+            r = next(r for r in self.active if not r.prefill_done)
+            prefill.append((r, 1))
+        return StepPlan(t_start_ns=now_ns, prefill=prefill, decode=decode)
+
+    def commit_step(self, plan: StepPlan, t_end_ns: float) -> list[RequestState]:
+        """Apply the step's outcome at simulated time ``t_end_ns``; returns
+        the requests that completed (their KV can be freed)."""
+        for r, toks in plan.prefill:
+            r.prefilled += toks
+        newly_finished = []
+        for r in plan.decode:
+            r.decoded += 1
+            if math.isnan(r.first_token_ns):
+                r.first_token_ns = t_end_ns
+            if r.done:
+                r.finish_ns = t_end_ns
+                newly_finished.append(r)
+        for r in newly_finished:
+            self.active.remove(r)
+            self.finished.append(r)
+        return newly_finished

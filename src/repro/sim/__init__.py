@@ -22,8 +22,10 @@ from repro.sim.trace import (
     ServingConfig,
     Trace,
     TraceBuilder,
+    draw_requests,
     lower_workload,
     serving_trace,
+    trace_byte_counts,
 )
 from repro.sim.validate import (
     FIG18_CONFIGS,
@@ -47,6 +49,7 @@ __all__ = [
     "TraceBuilder",
     "check_tolerance",
     "cross_validate",
+    "draw_requests",
     "fig18_cross_validation",
     "lower_workload",
     "refine_point",
@@ -54,4 +57,5 @@ __all__ = [
     "serving_trace",
     "simulate_trace",
     "summarize",
+    "trace_byte_counts",
 ]

@@ -141,6 +141,10 @@ class ReplaySchedule:
     finish_ns: np.ndarray
     wait_ns: np.ndarray
     queue_depth: np.ndarray
+    # Permutation mapping schedule rows back to the caller's event order
+    # (row i of this schedule is input event order[i]); lets callers join
+    # per-event outcomes with side arrays such as ``Trace.tag``.
+    order: np.ndarray = None
 
 
 def replay_schedule(
@@ -157,7 +161,7 @@ def replay_schedule(
         return ReplaySchedule(
             resource=np.empty(0, resource.dtype), t_issue_ns=e, service_ns=e,
             kind=np.empty(0, kind.dtype), start_ns=e, finish_ns=e, wait_ns=e,
-            queue_depth=np.empty(0, np.int64),
+            queue_depth=np.empty(0, np.int64), order=np.empty(0, np.int64),
         )
     order = np.lexsort((t_issue, resource))
     res_s = resource[order]
@@ -195,17 +199,29 @@ def replay_schedule(
         finish_ns=finish,
         wait_ns=wait,
         queue_depth=depth,
+        order=order,
     )
 
 
-def simulate_trace(trace: Trace, config: SimConfig = SimConfig()) -> SimResult:
+def simulate_trace(
+    trace: Trace, config: SimConfig = SimConfig(), return_schedule: bool = False
+):
+    """Replay a trace; returns a :class:`SimResult`.
+
+    With ``return_schedule=True`` returns ``(result, schedule, orig_idx)``
+    where ``orig_idx[i]`` is the original trace index of schedule row ``i``
+    (coalesced-away writes excluded) — the join key for per-event side
+    arrays such as ``Trace.tag``.
+    """
     n_total = len(trace)
     t_issue, resource = trace.t_issue_ns, trace.resource
     service, energy, kind = trace.service_ns, trace.energy_pj, trace.kind
 
+    kept = np.arange(n_total, dtype=np.int64)
     coalesced, coalesced_e = 0, 0.0
     if config.coalesce_window_ns > 0 and n_total:
         keep, coalesced, coalesced_e = _coalesce_writes(trace, config.coalesce_window_ns)
+        kept = np.flatnonzero(keep)
         t_issue, resource = t_issue[keep], resource[keep]
         service, energy, kind = service[keep], energy[keep], kind[keep]
     n = t_issue.shape[0]
@@ -213,7 +229,7 @@ def simulate_trace(trace: Trace, config: SimConfig = SimConfig()) -> SimResult:
     if n == 0:
         empty = KindStats(0, 0.0, 0.0, 0.0, 0.0)
         leak = trace.leakage_w * trace.compute_time_s
-        return SimResult(
+        result = SimResult(
             latency_s=0.0, runtime_s=trace.compute_time_s, energy_j=leak,
             dram_energy_j=0.0, glb_energy_j=0.0, leakage_energy_j=leak,
             hidden_stream_s=0.0, compute_time_s=trace.compute_time_s,
@@ -223,6 +239,12 @@ def simulate_trace(trace: Trace, config: SimConfig = SimConfig()) -> SimResult:
             n_simulated=0, coalesced_writes=coalesced,
             coalesced_energy_pj=coalesced_e, per_kind={"all": empty},
         )
+        if return_schedule:
+            empty_sched = replay_schedule(
+                t_issue, resource, service, kind, config.backend
+            )
+            return result, empty_sched, kept
+        return result
 
     # --- per-bank FIFO replay (sort + segmented max-plus scan) -------------
     sched = replay_schedule(t_issue, resource, service, kind, config.backend)
@@ -271,7 +293,7 @@ def simulate_trace(trace: Trace, config: SimConfig = SimConfig()) -> SimResult:
             p99_latency_ns=float(np.percentile(lat, 99)),
         )
 
-    return SimResult(
+    result = SimResult(
         latency_s=latency_ns * 1e-9,
         runtime_s=runtime_s,
         energy_j=dram_e + glb_e + leak_e,
@@ -296,3 +318,6 @@ def simulate_trace(trace: Trace, config: SimConfig = SimConfig()) -> SimResult:
         coalesced_energy_pj=coalesced_e,
         per_kind=per_kind,
     )
+    if return_schedule:
+        return result, sched, kept[sched.order]
+    return result

@@ -76,6 +76,10 @@ class Trace:
     compute_time_s: float = 0.0  # PE-array floor (runtime = max(compute, mem))
     leakage_w: float = 0.0  # GLB leakage burning for the whole runtime
     meta: dict = dataclasses.field(default_factory=dict)
+    # Optional event owner (e.g. serving request id); -1 = untagged.  The
+    # replay keeps tags attached so per-owner finish times (TTFT/TPOT) can be
+    # recovered from the schedule.
+    tag: np.ndarray | None = None
 
     def __len__(self) -> int:
         return int(self.t_issue_ns.shape[0])
@@ -116,7 +120,7 @@ class TraceBuilder:
         self._line_counter += n
         return out
 
-    def add(self, t_issue, resource, service, energy, kind, line=None) -> None:
+    def add(self, t_issue, resource, service, energy, kind, line=None, tag=-1) -> None:
         t_issue = np.asarray(t_issue, dtype=np.float64).ravel()
         n = t_issue.shape[0]
         if n == 0:
@@ -129,8 +133,12 @@ class TraceBuilder:
             line_a = self.fresh_lines(n)
         else:
             line_a = np.broadcast_to(np.asarray(line, np.int64), (n,))
+        tag_a = np.broadcast_to(np.asarray(tag, np.int64), (n,))
         self._chunks.append(
-            tuple(np.ascontiguousarray(a) for a in (t_issue, resource, service, energy, kind_a, line_a))
+            tuple(
+                np.ascontiguousarray(a)
+                for a in (t_issue, resource, service, energy, kind_a, line_a, tag_a)
+            )
         )
 
     def add_paced_block(
@@ -168,11 +176,14 @@ class TraceBuilder:
 
     def build(self, compute_time_s: float = 0.0, meta: dict | None = None) -> Trace:
         if self._chunks:
-            cols = [np.concatenate([c[i] for c in self._chunks]) for i in range(6)]
+            cols = [np.concatenate([c[i] for c in self._chunks]) for i in range(7)]
         else:
             cols = [
                 np.empty(0, dt)
-                for dt in (np.float64, np.int32, np.float64, np.float64, np.int8, np.int64)
+                for dt in (
+                    np.float64, np.int32, np.float64, np.float64, np.int8,
+                    np.int64, np.int64,
+                )
             ]
         return Trace(
             t_issue_ns=cols[0],
@@ -187,6 +198,7 @@ class TraceBuilder:
             compute_time_s=compute_time_s,
             leakage_w=self.glb.leakage_w,
             meta=meta or {},
+            tag=cols[6],
         )
 
 
@@ -303,6 +315,26 @@ class ServingConfig:
     seed: int = 0
 
 
+def draw_requests(cfg: ServingConfig, rng: np.random.Generator):
+    """Draw the (arrival_ns, prompt_toks, decode_toks) request population.
+
+    Shared by the open-loop :func:`serving_trace` and the closed-loop
+    ``repro.serve`` engine so that, at the same seed and config, both see the
+    *identical* request stream (the byte-count cross-validation relies on
+    this).  Draw order is part of the contract: exponential inter-arrivals,
+    then prompt lengths, then decode lengths.
+    """
+    if cfg.arrival_rate_rps <= 0:
+        raise ValueError("arrival_rate_rps must be positive")
+    if cfg.n_requests <= 0:
+        raise ValueError("n_requests must be positive")
+    R = cfg.n_requests
+    arrivals_ns = np.cumsum(rng.exponential(1e9 / cfg.arrival_rate_rps, R))
+    prompts = np.maximum(8, rng.poisson(cfg.prompt_len, R)).astype(np.int64)
+    decodes = np.maximum(4, rng.poisson(cfg.decode_len, R)).astype(np.int64)
+    return arrivals_ns, prompts, decodes
+
+
 def _spec_weight_bytes(spec: NLPModelSpec, d_w: int) -> float:
     n_layers = spec.enc_layers + spec.dec_layers
     per_layer = (4 * spec.d_model**2 + 2 * spec.d_model * spec.d_ff) * d_w
@@ -343,9 +375,7 @@ def serving_trace(
 
     # --- request-level draws -------------------------------------------------
     R = cfg.n_requests
-    arrivals_ns = np.cumsum(rng.exponential(1e9 / cfg.arrival_rate_rps, R))
-    prompts = np.maximum(8, rng.poisson(cfg.prompt_len, R)).astype(np.int64)
-    decodes = np.maximum(4, rng.poisson(cfg.decode_len, R)).astype(np.int64)
+    arrivals_ns, prompts, decodes = draw_requests(cfg, rng)
     Kmax = int(decodes.max())
 
     weight_bytes = _spec_weight_bytes(spec, cfg.d_w)
@@ -459,6 +489,7 @@ def serving_trace(
         compute_time_s=0.0,
         meta={
             "scenario": "serving",
+            "arrival_rate_rps": cfg.arrival_rate_rps,
             "model": spec.name,
             "n_requests": R,
             "token_interval_ns": token_interval,
@@ -467,3 +498,43 @@ def serving_trace(
             "glb_mb": glb.capacity_mb,
         },
     )
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (generator-independent)
+# ---------------------------------------------------------------------------
+
+
+def trace_byte_counts(trace: Trace, system: HybridMemorySystem) -> dict:
+    """Aggregate bytes moved per memory level, recovered from event energy.
+
+    Every generator prices GLB events at ``energy_per_access x accesses`` with
+    one access = one 256 B GLB bus beat, and DRAM/prefetch events at the
+    DRAM per-access energy with 64 B bursts, so dividing total energy by the
+    per-access energy recovers exact access (and hence byte) counts without
+    the generators having to thread separate byte counters through every
+    ``add`` call.  Used by the closed-loop vs open-loop serving
+    cross-validation.
+    """
+    glb, dram = system.glb, system.dram
+    glb_acc_bytes = int(MB * MemoryParams().mbpa_glb)
+    e = trace.energy_pj
+    k = trace.kind
+
+    def _sum(kind):
+        return float(e[k == kind].sum())
+
+    glb_rd_b = _sum(KIND_GLB_RD) / glb.read_energy_pj_per_access * glb_acc_bytes
+    glb_wr_b = _sum(KIND_GLB_WR) / glb.write_energy_pj_per_access * glb_acc_bytes
+    e_dram = dram.energy_pj_per_access()
+    dram_rd_b = _sum(KIND_DRAM_RD) / e_dram * dram.access_bytes
+    dram_wr_b = _sum(KIND_DRAM_WR) / e_dram * dram.access_bytes
+    pref_b = (_sum(KIND_PREFETCH_RD) + _sum(KIND_PREFETCH_WR)) / e_dram * dram.access_bytes
+    return {
+        "glb_rd_bytes": glb_rd_b,
+        "glb_wr_bytes": glb_wr_b,
+        "glb_bytes": glb_rd_b + glb_wr_b,
+        "dram_exposed_bytes": dram_rd_b + dram_wr_b,
+        "dram_prefetch_bytes": pref_b,
+        "dram_bytes": dram_rd_b + dram_wr_b + pref_b,
+    }

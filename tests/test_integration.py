@@ -11,6 +11,10 @@ import textwrap
 import numpy as np
 import pytest
 
+# Model-stack integration runs jit-compile-heavy training loops; it lives in
+# the slow CI lane (the fast lane covers the analytic/sim/DSE/serving stack).
+pytestmark = pytest.mark.slow
+
 pytest.importorskip("jax", reason="train/serve integration needs jax")
 
 from repro.launch.train import train

@@ -23,6 +23,7 @@ def _tol(dtype):
     )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "B,H,KV,S,T,hd",
@@ -54,6 +55,7 @@ def test_flash_attention_sweep(dtype, B, H, KV, S, T, hd, causal, window, cap):
     assert lse.shape == (B, H, S)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "causal,window,cap",
     [(True, None, None), (True, 13, None), (True, None, 25.0), (False, None, None)],
@@ -87,6 +89,7 @@ def test_flash_attention_pallas_bwd_matches_reference(causal, window, cap):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "B,S,H,P,G,N,chunk",
@@ -111,6 +114,7 @@ def test_ssd_scan_sweep(dtype, B, S, H, P, G, N, chunk):
     np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "M,K,N,bm,bk,bn",

@@ -9,6 +9,9 @@ import pytest
 
 pytest.importorskip("jax", reason="model smoke tests need jax")
 
+# Per-arch forward/train smokes jit-compile every model; slow CI lane.
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 
