@@ -1,0 +1,79 @@
+"""CI gate for BENCH_serving.json: fail on wall-clock or correctness drift.
+
+    PYTHONPATH=src python -m benchmarks.check_bench BENCH_serving.json \
+        benchmarks/BENCH_serving.baseline.json [--max-regression 2.0]
+
+Compares a fresh benchmark record against the committed baseline:
+
+* **wall-clock**: each benchmark present in both files must not be slower
+  than ``max_regression`` x its baseline ``us_per_call`` (default 2x — wide
+  enough for runner-to-runner variance, tight enough to catch the serving
+  loop quietly falling back to scalar-era behaviour);
+* **correctness invariants** on the serving sweep: the scalar and
+  vectorized paths must still produce identical metrics
+  (``all_scalar_identical``), and the vectorized path must remain faster
+  than the scalar reference (``grid_speedup_x > 1``).
+
+Exit status 0 on pass, 1 on any violation (each violation is printed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, max_regression: float) -> list[str]:
+    problems = []
+    cur_b = current.get("benchmarks", {})
+    base_b = baseline.get("benchmarks", {})
+    for name, base in base_b.items():
+        cur = cur_b.get(name)
+        if cur is None:
+            problems.append(f"{name}: missing from current record")
+            continue
+        b_us, c_us = base.get("us_per_call"), cur.get("us_per_call")
+        if b_us and c_us and c_us > max_regression * b_us:
+            problems.append(
+                f"{name}: wall-clock {c_us / 1e6:.2f}s vs baseline "
+                f"{b_us / 1e6:.2f}s (> {max_regression:.1f}x regression)"
+            )
+    serving = cur_b.get("serving_qps")
+    if serving is not None:
+        if not serving.get("all_scalar_identical", False):
+            problems.append(
+                "serving_qps: vectorized and scalar paths no longer produce "
+                "identical metrics"
+            )
+        speedup = serving.get("grid_speedup_x") or 0.0
+        if speedup <= 1.0:
+            problems.append(
+                f"serving_qps: vectorized grid no faster than the scalar "
+                f"path (grid_speedup_x={speedup})"
+            )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly produced BENCH_serving.json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--max-regression", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    with open(args.current) as fh:
+        current = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    problems = check(current, baseline, args.max_regression)
+    for p in problems:
+        print(f"BENCH REGRESSION: {p}", file=sys.stderr)
+    if not problems:
+        names = sorted(baseline.get("benchmarks", {}))
+        print(f"bench check OK ({', '.join(names)})")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,26 @@
 """Benchmark harness: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
+        [--bench-json PATH]
 
 Prints ``name,us_per_call,derived`` CSV (one line per benchmark) followed by
 per-benchmark detail tables.  ``--smoke`` shrinks the expensive benchmarks
-(``sim_vs_analytic``, ``explore``) so the whole harness stays CI-friendly.
+(``sim_vs_analytic``, ``explore``, ``serving_qps``) so the whole harness
+stays CI-friendly.
+
+``--bench-json`` (default ``BENCH_serving.json``) records each run's
+wall-clock and key metrics as JSON so the perf trajectory is tracked across
+PRs; ``benchmarks/check_bench.py`` gates CI on it against the committed
+baseline.  Pass an empty string to skip the file.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
+import time
 
 from benchmarks import (
     explore,
@@ -83,14 +93,14 @@ def _derive(name: str, rows: list[dict]) -> str:
             return f"cases={len(rows)},min_speedup_x={worst}(req:10),bit_mismatches={bits}"
         if name == "serving_qps":
             worst = max(r["ttft_p99_ms"] for r in rows)
-            gap = min(
-                (a["energy_mj"] / b["energy_mj"])
-                for a, b in zip(
-                    (r for r in rows if r["tech"] == "sram"),
-                    (r for r in rows if r["tech"] == "sot_opt"),
-                )
+            ident = all(r.get("scalar_identical") for r in rows)
+            r0 = rows[0]
+            return (
+                f"cells={len(rows)},worst_ttft_p99_ms={worst},"
+                f"loop_speedup_x={r0.get('loop_speedup_x')},"
+                f"grid_speedup_x={r0.get('grid_speedup_x')},"
+                f"scalar_identical={ident}"
             )
-            return f"cells={len(rows)},worst_ttft_p99_ms={worst},min_sram_over_sot_energy_x={round(gap, 2)}"
         if name == "roofline":
             if "note" in rows[0]:
                 return rows[0]["note"]
@@ -132,6 +142,8 @@ def main() -> None:
                     help="run only benchmarks whose name contains this substring")
     ap.add_argument("--smoke", action="store_true",
                     help="shrink the expensive benchmarks for CI")
+    ap.add_argument("--bench-json", default="BENCH_serving.json",
+                    help="write wall-clock + key metrics here ('' to skip)")
     args = ap.parse_args()
 
     selected = [
@@ -146,6 +158,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     details = []
     failures = []
+    bench_entries = {}
     for name, fn in selected:
         try:
             if args.smoke and name in SMOKE_AWARE:
@@ -162,6 +175,23 @@ def main() -> None:
         base = name.split("_inf")[0].split("_train")[0] if name.startswith("fig09") else name
         print(f"{name},{us:.0f},{_derive(base, rows)}")
         details.append((name, rows))
+        if name == "serving_qps":
+            bench_entries[name] = serving_qps.bench_payload(rows, us)
+        else:
+            bench_entries[name] = {"us_per_call": round(us, 1)}
+    if args.bench_json:
+        payload = {
+            "schema": 1,
+            "created_unix": int(time.time()),
+            "smoke": args.smoke,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "benchmarks": bench_entries,
+        }
+        with open(args.bench_json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {args.bench_json} ({len(bench_entries)} entries)",
+              file=sys.stderr)
     if args.full:
         for name, rows in details:
             print(f"\n## {name}")

@@ -1,54 +1,136 @@
 """Closed-loop serving QPS sweep: SRAM vs SOT-MRAM GLB under load.
 
 Drives the continuous-batching engine (``repro.serve``) at increasing
-request rates on an SRAM and a DTCO-optimized SOT-MRAM GLB of equal
-capacity and reports the p99 TTFT/TPOT, KV-page residency, bank-conflict
-rate, and replay energy at each operating point — the serving counterpart
-of the paper's Fig. 18 batch-workload comparison.  The interesting signal
-is where each technology's p99 leaves the SLO region as QPS grows, and how
-the energy gap widens with capacity (SRAM leakage vs MRAM's ~0).
+request rates on SRAM and SOT-MRAM GLBs of equal capacity and reports the
+p99 TTFT/TPOT, KV-page residency, bank-conflict rate, and replay energy at
+each operating point — the serving counterpart of the paper's Fig. 18
+batch-workload comparison.  The interesting signal is where each
+technology's p99 leaves the SLO region as QPS grows, and how the energy gap
+widens with capacity (SRAM leakage vs MRAM's ~0).
+
+The benchmark is also the perf gate for the vectorized serving hot path:
+the default path evaluates the grid with the shared-schedule sweep engine
+(``repro.serve.sweep``, block-batched lowering, blocks re-priced per
+technology), while a reference pass replays every point through the
+per-request **scalar** lowering.  Both must produce bit-identical traces —
+byte counts and TTFT/TPOT percentiles are compared here and pinned by
+``tests/test_serve.py`` — and the wall-clock split is reported three ways:
+
+* ``loop_speedup_x`` — scheduler + allocator + lowering + pricing only (the
+  scalar island this PR vectorizes; the replay was already an array program
+  in ``repro.sim``),
+* ``grid_speedup_x`` — end-to-end wall-clock including the shared replay,
+* absolute seconds for both paths (tracked over time in BENCH_serving.json).
 """
 
 import dataclasses
+import time
 
 from repro.core.memory_system import HybridMemorySystem, glb_array
 from repro.core.workload import NLP_TABLE_V
-from repro.serve import ServeEngineConfig, closed_loop_serving
+from repro.serve import (
+    ServeEngineConfig,
+    ServingGridSpec,
+    closed_loop_serving,
+    sweep_serving_grid,
+)
 from repro.sim import ServingConfig
 
-TECHS = ("sram", "sot_opt")
+TECHS = ("sram", "sot", "sot_opt")
 QPS_SWEEP = (100.0, 200.0, 400.0, 800.0, 1600.0)
+SMOKE_TECHS = ("sram", "sot_opt")
 SMOKE_QPS_SWEEP = (200.0, 800.0)
 
 
 def run(smoke: bool = False, glb_mb: float = 64.0) -> list[dict]:
     spec = next(s for s in NLP_TABLE_V if s.name == "gpt2")
     base = ServingConfig(
-        n_requests=12 if smoke else 24,
-        prompt_len=128 if smoke else 256,
+        n_requests=12 if smoke else 32,
+        prompt_len=128 if smoke else 512,
         decode_len=32 if smoke else 64,
         seed=3,
     )
-    ecfg = ServeEngineConfig(max_batch=8)
-    rows = []
-    for tech in TECHS:
+    ecfg = ServeEngineConfig(max_batch=8 if smoke else 16)
+    techs = SMOKE_TECHS if smoke else TECHS
+    qps_sweep = SMOKE_QPS_SWEEP if smoke else QPS_SWEEP
+
+    # -- vectorized default path: shared-grid sweep engine -------------------
+    grid = ServingGridSpec(qps=qps_sweep, capacities_mb=(glb_mb,),
+                           technologies=techs, model="gpt2",
+                           serving=base, engine=ecfg)
+    vec_timing: dict = {}
+    t0 = time.perf_counter()
+    sweep_rows = sweep_serving_grid(grid, timing=vec_timing)
+    vec_wall_s = time.perf_counter() - t0
+    vec_loop_s = vec_timing["loop_s"]
+
+    # -- scalar reference path: per-point closed loops -----------------------
+    scalar_timing: dict = {}
+    scalar_reports = {}
+    for tech in techs:
         system = HybridMemorySystem(glb=glb_array(tech, glb_mb))
-        for qps in SMOKE_QPS_SWEEP if smoke else QPS_SWEEP:
+        for qps in qps_sweep:
             cfg = dataclasses.replace(base, arrival_rate_rps=qps)
-            _, r = closed_loop_serving(system, spec, cfg, ecfg)
-            rows.append(
-                {
-                    "tech": tech,
-                    "glb_mb": glb_mb,
-                    "qps": qps,
-                    "achieved_qps": round(r.achieved_qps, 1),
-                    "ttft_p99_ms": round(r.ttft_p99_ms, 3),
-                    "tpot_p99_ms": round(r.tpot_p99_ms, 4),
-                    "residency_pct": round(r.residency_mean * 100, 1),
-                    "kv_spill_read_pct": round(r.kv_spill_read_frac * 100, 1),
-                    "bank_conflict_pct": round(r.bank_conflict_rate * 100, 1),
-                    "energy_mj": round(r.sim.energy_j * 1e3, 3),
-                    "n_events": r.sim.n_events,
-                }
-            )
+            _, rep = closed_loop_serving(system, spec, cfg, ecfg,
+                                         lowering="scalar",
+                                         timing=scalar_timing)
+            scalar_reports[(tech, qps)] = rep
+    scalar_loop_s = scalar_timing["loop_s"]
+    scalar_wall_s = scalar_loop_s + scalar_timing["score_s"]
+
+    grid_speedup = scalar_wall_s / vec_wall_s if vec_wall_s else 0.0
+    loop_speedup = scalar_loop_s / vec_loop_s if vec_loop_s else 0.0
+
+    rows = []
+    for row in sweep_rows:
+        r = row.report
+        s = scalar_reports[(row.technology, row.qps)]
+        identical = (
+            r.ttft_p50_ms == s.ttft_p50_ms
+            and r.ttft_p99_ms == s.ttft_p99_ms
+            and r.tpot_p50_ms == s.tpot_p50_ms
+            and r.tpot_p99_ms == s.tpot_p99_ms
+            and r.bytes["glb_bytes"] == s.bytes["glb_bytes"]
+            and r.bytes["dram_bytes"] == s.bytes["dram_bytes"]
+        )
+        rows.append(
+            {
+                "tech": row.technology,
+                "glb_mb": glb_mb,
+                "qps": row.qps,
+                "achieved_qps": round(r.achieved_qps, 1),
+                "ttft_p99_ms": round(r.ttft_p99_ms, 3),
+                "tpot_p99_ms": round(r.tpot_p99_ms, 4),
+                "residency_pct": round(r.residency_mean * 100, 1),
+                "kv_spill_read_pct": round(r.kv_spill_read_frac * 100, 1),
+                "bank_conflict_pct": round(r.bank_conflict_rate * 100, 1),
+                "energy_mj": round(r.sim.energy_j * 1e3, 3),
+                "n_events": r.sim.n_events,
+                "shared_schedule": row.shared,
+                "scalar_identical": identical,
+                # Grid-level wall-clock facts, repeated on every row so the
+                # CSV stays rectangular.
+                "vec_wall_s": round(vec_wall_s, 3),
+                "scalar_wall_s": round(scalar_wall_s, 3),
+                "grid_speedup_x": round(grid_speedup, 2),
+                "loop_speedup_x": round(loop_speedup, 2),
+            }
+        )
     return rows
+
+
+def bench_payload(rows: list[dict], us_per_call: float) -> dict:
+    """BENCH_serving.json entry: wall-clock + key metrics of one run."""
+    first = rows[0] if rows else {}
+    return {
+        "us_per_call": round(us_per_call, 1),
+        "grid_points": len(rows),
+        "vec_wall_s": first.get("vec_wall_s"),
+        "scalar_wall_s": first.get("scalar_wall_s"),
+        "grid_speedup_x": first.get("grid_speedup_x"),
+        "loop_speedup_x": first.get("loop_speedup_x"),
+        "all_scalar_identical": all(r.get("scalar_identical") for r in rows),
+        "shared_schedule_points": sum(bool(r.get("shared_schedule")) for r in rows),
+        "worst_ttft_p99_ms": max((r["ttft_p99_ms"] for r in rows), default=0.0),
+        "rows": rows,
+    }

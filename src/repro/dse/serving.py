@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.memory_system import HybridMemorySystem, glb_array
 from repro.core.workload import NLP_TABLE_V, NLPModelSpec
 from repro.sim.trace import ServingConfig
 
@@ -53,24 +52,41 @@ class ServingSweepSpec:
         return specs[self.model]
 
 
-def evaluate_serving_grid(spec: ServingSweepSpec) -> list[dict]:
-    """Closed-loop replay of every (technology, capacity) point.
+def evaluate_serving_grid(
+    spec: ServingSweepSpec, mode: str = "shared", backend: str = "numpy"
+) -> list[dict]:
+    """Closed-loop-exact evaluation of every (technology, capacity) point.
 
     Returns one row per point with the SLO metrics, congestion/residency
     statistics, replay energy, and the SLO verdict.  Rows are ordered
     technology-major, capacity-minor (ascending).
-    """
-    from repro.serve import ServeEngineConfig, closed_loop_serving
 
-    model = spec.resolve_model()
+    Evaluation routes through the shared-grid sweep engine
+    (:mod:`repro.serve.sweep`): the scheduler, allocator, and block lowering
+    run once per capacity and are re-priced per technology whenever the
+    schedule-invariance certificate holds, falling back to a per-point
+    closed loop when it does not — the rows are identical either way
+    (``mode="exact"`` forces the fallback path everywhere).
+    """
+    from repro.serve import ServeEngineConfig
+    from repro.serve.sweep import ServingGridSpec, sweep_serving_grid
+
     base = spec.serving or ServingConfig()
-    serving = dataclasses.replace(base, arrival_rate_rps=spec.qps)
-    engine = spec.engine or ServeEngineConfig()
+    grid = ServingGridSpec(
+        qps=(spec.qps,),
+        capacities_mb=tuple(sorted(spec.capacities_mb)),
+        technologies=tuple(spec.technologies),
+        model=spec.model,
+        serving=dataclasses.replace(base, arrival_rate_rps=spec.qps),
+        engine=spec.engine or ServeEngineConfig(),
+    )
+    sweep = sweep_serving_grid(grid, mode=mode, backend=backend)
+    by_point = {(r.technology, r.capacity_mb): r for r in sweep}
     rows = []
     for tech in spec.technologies:
         for cap in sorted(spec.capacities_mb):
-            system = HybridMemorySystem(glb=glb_array(tech, cap))
-            _, rep = closed_loop_serving(system, model, serving, engine)
+            r = by_point[(tech, cap)]
+            rep = r.report
             rows.append({
                 "technology": tech,
                 "capacity_mb": cap,
@@ -84,6 +100,7 @@ def evaluate_serving_grid(spec: ServingSweepSpec) -> list[dict]:
                 "completed": rep.completed,
                 "n_requests": rep.n_requests,
                 "slo_ok": spec.slo.holds(rep),
+                "schedule_shared": r.shared,
             })
     return rows
 

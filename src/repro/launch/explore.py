@@ -186,11 +186,14 @@ def explore_serving(args) -> int:
             engine=ServeEngineConfig(max_batch=args.max_batch),
         )
     t0 = time.perf_counter()
-    out = evaluate_serving_slo(spec)
+    backend = "jax" if args.backend == "jax" else "numpy"
+    out = evaluate_serving_slo(spec, mode=args.sweep_mode, backend=backend)
     dt = time.perf_counter() - t0
+    n_shared = sum(bool(r.get("schedule_shared")) for r in out["rows"])
     print(f"# serving DSE {spec.model} @ {spec.qps:.0f} rps "
           f"(SLO: TTFT p99 <= {spec.slo.ttft_p99_ms} ms, "
-          f"TPOT p99 <= {spec.slo.tpot_p99_ms} ms; {dt:.1f}s)")
+          f"TPOT p99 <= {spec.slo.tpot_p99_ms} ms; {dt:.1f}s, "
+          f"{n_shared}/{len(out['rows'])} points off the shared schedule)")
     for r in out["rows"]:
         mark = "ok " if r["slo_ok"] else "SLO"
         print(f"  [{mark}] {r['technology']:>8}@{r['capacity_mb']:<6.0f} "
@@ -230,6 +233,11 @@ def main(argv=None) -> int:
                     help="fast end-to-end check on a tiny grid")
     ap.add_argument("--serving", action="store_true",
                     help="serving-mode DSE: SLO-knee capacity at --qps")
+    ap.add_argument("--sweep-mode", default="shared",
+                    choices=["shared", "exact"],
+                    help="serving DSE evaluation: reuse the shared schedule "
+                         "across technologies (certificate-checked) or run "
+                         "every point's own closed loop")
     ap.add_argument("--qps", type=float, default=800.0)
     ap.add_argument("--slo-ttft-ms", type=float, default=50.0)
     ap.add_argument("--slo-tpot-ms", type=float, default=0.35)

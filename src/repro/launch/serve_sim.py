@@ -50,13 +50,14 @@ def run(args) -> int:
     sim_config = None
     if args.coalesce_window_ns is not None:
         sim_config = SimConfig(coalesce_window_ns=args.coalesce_window_ns,
-                               backend=args.backend)
+                               backend=args.backend, kind_stats=False)
     trace, report = closed_loop_serving(system, spec, cfg, ecfg,
-                                        sim_config=sim_config)
+                                        sim_config=sim_config,
+                                        lowering=args.lowering)
     dt = time.time() - t0
     print(f"# serve_sim {args.model} {args.tech}@{args.glb_mb}MB "
           f"{args.requests} reqs @ {args.qps}/s max_batch={args.max_batch} "
-          f"({len(trace)} events, {dt:.1f}s)")
+          f"({len(trace)} events, {dt:.1f}s, {args.lowering} lowering)")
     print(f"token interval       : {trace.meta['token_interval_ns'] / 1e3:.1f} us")
     print(summarize_report(report))
 
@@ -103,6 +104,9 @@ def main(argv=None) -> int:
     ap.add_argument("--coalesce-window-ns", type=float, default=None,
                     help="write-combining window (default: 4x token interval)")
     ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"])
+    ap.add_argument("--lowering", default="block", choices=["block", "scalar"],
+                    help="step lowering: vectorized blocks (default) or the "
+                         "per-request scalar reference (bit-identical output)")
     ap.add_argument("--cross-validate", action="store_true",
                     help="compare aggregate bytes against serving_trace")
     ap.add_argument("--tolerance", type=float, default=0.10)

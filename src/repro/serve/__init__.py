@@ -3,16 +3,27 @@
 Closes the loop between request arrivals and the bank-level simulator:
 an iteration-level continuous-batching scheduler (``scheduler``) runs over
 a paged KV-cache allocator that maps fixed-size KV pages onto GLB banks and
-spills cold pages to DRAM (``kv_pages``); the lowering (``lower``) emits the
-resulting bank-accurate event stream through ``repro.sim``'s TraceBuilder
-and scores it with the FIFO replay — TTFT/TPOT p50/p99, bank-conflict rate,
-GLB page residency.  ``repro.dse.serving`` sweeps this engine over the
-capacity x technology grid to find the SLO-knee capacity.
+spills cold pages to DRAM (``kv_pages``, a struct-of-arrays page table);
+the lowering (``lower``) emits one technology-neutral event block per
+traffic class per step (``BlockEmitter``; ``ScalarEmitter`` is the
+bit-identical per-request reference), prices them per GLB technology
+(``TechPricer``) through ``repro.sim``'s TraceBuilder, and scores the FIFO
+replay — TTFT/TPOT p50/p99, bank-conflict rate, GLB page residency.  The
+sweep engine (``sweep``) evaluates QPS x capacity x technology grids off
+one shared request draw, re-pricing one lowered schedule across
+technologies under a schedule-invariance certificate; ``repro.dse.serving``
+uses it to find the SLO-knee capacity.  See docs/serving.md and
+docs/perf.md.
 """
 
-from repro.serve.kv_pages import KVPage, PagedKVAllocator
+from repro.serve.kv_pages import PagedKVAllocator
 from repro.serve.lower import (
+    BlockEmitter,
+    ScalarEmitter,
+    ServeModel,
     ServeReport,
+    StepBlocks,
+    TechPricer,
     closed_loop_serving,
     summarize_report,
 )
@@ -22,15 +33,27 @@ from repro.serve.scheduler import (
     ServeEngineConfig,
     StepPlan,
 )
+from repro.serve.sweep import (
+    ServingGridSpec,
+    SweepRow,
+    sweep_serving_grid,
+)
 
 __all__ = [
+    "BlockEmitter",
     "ContinuousBatchScheduler",
-    "KVPage",
     "PagedKVAllocator",
     "RequestState",
+    "ScalarEmitter",
     "ServeEngineConfig",
+    "ServeModel",
     "ServeReport",
+    "ServingGridSpec",
+    "StepBlocks",
     "StepPlan",
+    "SweepRow",
+    "TechPricer",
     "closed_loop_serving",
     "summarize_report",
+    "sweep_serving_grid",
 ]

@@ -1,9 +1,9 @@
-"""Paged KV-cache allocator over GLB banks with DRAM spill.
+"""Paged KV-cache allocator over GLB banks with DRAM spill (struct-of-arrays).
 
 The open-loop ``serving_trace`` approximates KV placement with a single
 scalar ``spill_frac`` (steady-state footprint vs GLB capacity).  This module
 replaces that with *per-page residency*: the KV cache of each request is a
-list of fixed-size pages — ``page_tokens`` tokens of K+V across **all**
+sequence of fixed-size pages — ``page_tokens`` tokens of K+V across **all**
 layers — each mapped to one GLB bank.  When the GLB fills, the
 least-recently-touched page is spilled to DRAM; its reads and appends then
 hit the exposed DRAM path instead of the bank.  Spilled pages stay in DRAM
@@ -11,25 +11,34 @@ until their request completes (no promotion — documented simplification),
 so a burst that overflows the GLB keeps paying DRAM latency for its cold
 context, exactly the behaviour the scalar fraction cannot express.
 
+Pages are rows of a struct-of-arrays table (``page_hash``, ``page_resident``,
+``page_owner``, ``page_last_used``, ``page_seq``), not per-page objects, and
+each request's page run lives in one row of a dense ``[request, page]`` slot
+matrix: the block-batched lowering gathers a whole decode batch's pages with
+a single fancy index (``repeat``/``arange`` row-column pairs) instead of
+scanning Python lists, LRU touches are masked vector stores, and evictions a
+single k-smallest selection.  Bank placement is stored as the raw *hash*
+(``rid*131 + idx*7919``); ``bank = hash % n_banks`` is applied by the
+consumer, which lets the sweep engine reuse one page table across
+technologies with different bank counts.
+
+Eviction order is exact LRU with creation/touch-order tie-breaking: the
+victim is the resident page minimizing ``(last_used, seq)`` where ``seq`` is
+a global counter stamped at every creation or touch — the same order the
+previous lazy-heap implementation produced.
+
 The allocator is deliberately scheduler-agnostic: it only sees
 ``(request, token-count)`` demands and a monotonically increasing step
-counter for LRU ordering.
+counter for LRU ordering.  Allocator transactions are *step-batched* by the
+lowering: all of a step's ``ensure`` calls run first (in plan order, against
+the previous step's LRU stamps), then all of its touches commit at once.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import itertools
+import numpy as np
 
-
-@dataclasses.dataclass
-class KVPage:
-    """One fixed-size KV page: ``page_tokens`` tokens x all layers."""
-
-    bank: int
-    resident: bool
-    last_used: int = 0
+_GROW = 64  # initial page-table capacity; doubles as it fills
 
 
 class PagedKVAllocator:
@@ -41,15 +50,20 @@ class PagedKVAllocator:
         self.page_bytes = float(page_bytes)
         self.n_banks = max(1, int(n_banks))
         self.capacity_pages = max(0, int(glb_bytes // page_bytes))
-        self._pages: dict[int, list[KVPage]] = {}
+        # Struct-of-arrays page table, grown by doubling; freed rows recycle.
+        self.page_hash = np.empty(_GROW, np.int64)
+        self.page_resident = np.zeros(_GROW, bool)
+        self.page_owner = np.full(_GROW, -1, np.int64)
+        self.page_last_used = np.zeros(_GROW, np.int64)
+        self.page_seq = np.zeros(_GROW, np.int64)
+        self._top = 0  # high-water row count
+        self._free: list[int] = []  # recycled rows
+        # Dense [request, page] -> table-row matrix plus per-request counts.
+        self._slots2d = np.zeros((16, 8), np.int64)
+        self._n_pages = np.zeros(16, np.int64)
         self._resident = 0
         self._clock = 0
-        # Lazy LRU: a min-heap of (last_used-at-push, seq, page) entries.
-        # touch() pushes fresh entries instead of re-keying, and eviction
-        # discards entries whose stamp no longer matches the page — O(log n)
-        # amortized instead of a linear scan over every live page.
-        self._lru: list = []
-        self._seq = itertools.count()
+        self._seq_counter = 0
         self.spill_count = 0  # pages ever spilled (eviction or birth-in-DRAM)
         self.pages_created = 0  # pages ever allocated (live + freed)
 
@@ -60,7 +74,7 @@ class PagedKVAllocator:
 
     @property
     def total_pages(self) -> int:
-        return sum(len(p) for p in self._pages.values())
+        return int(self._n_pages.sum())
 
     def residency(self) -> float:
         """Fraction of live KV pages currently GLB-resident (1.0 if none)."""
@@ -71,86 +85,249 @@ class PagedKVAllocator:
         """Advance the LRU clock (call once per scheduler step)."""
         self._clock += 1
 
-    def _bank_of(self, rid: int, page_idx: int) -> int:
+    @staticmethod
+    def _hash_of(rid: int, page_idx) -> np.ndarray | int:
         # Same hash family as serving_trace's stripe placement: spreads one
         # request's pages over banks while decorrelating requests.
-        return (rid * 131 + page_idx * 7919) % self.n_banks
+        return rid * 131 + page_idx * 7919
 
-    def _evict_lru(self) -> bool:
-        while self._lru:
-            stamp, _, page = heapq.heappop(self._lru)
-            if not page.resident or page.last_used != stamp:
-                continue  # stale entry: freed, already spilled, or re-touched
-            page.resident = False
-            self._resident -= 1
-            self.spill_count += 1
-            return True
-        return False
+    def _next_seq(self, n: int = 1) -> int:
+        s = self._seq_counter
+        self._seq_counter += n
+        return s
+
+    def _grow_slots(self, rid: int, need_pages: int) -> None:
+        rows, cols = self._slots2d.shape
+        new_rows, new_cols = rows, cols
+        while rid >= new_rows:
+            new_rows *= 2
+        while need_pages > new_cols:
+            new_cols *= 2
+        if (new_rows, new_cols) != (rows, cols):
+            grown = np.zeros((new_rows, new_cols), np.int64)
+            grown[:rows, :cols] = self._slots2d
+            self._slots2d = grown
+            counts = np.zeros(new_rows, np.int64)
+            counts[:rows] = self._n_pages
+            self._n_pages = counts
+
+    def _new_row(self) -> int:
+        if self._free:
+            return self._free.pop()
+        if self._top == self.page_hash.shape[0]:
+            cap = 2 * self._top
+            for name in ("page_hash", "page_resident", "page_owner",
+                         "page_last_used", "page_seq"):
+                col = getattr(self, name)
+                grown = np.empty(cap, col.dtype)
+                grown[: self._top] = col
+                setattr(self, name, grown)
+        row = self._top
+        self._top += 1
+        return row
+
+    def _evict_many(self, k: int) -> int:
+        """Evict the ``k`` LRU pages in one vectorized selection.
+
+        Victim order is identical to ``k`` one-at-a-time LRU evictions —
+        evicting a page never changes another page's stamps, so the k
+        smallest ``(last_used, seq)`` pairs are exactly the pages the
+        sequential loop would pick.  Returns how many were evicted (fewer
+        than ``k`` only if the GLB holds fewer resident pages).
+        """
+        cands = np.flatnonzero(self.page_resident[: self._top])
+        k = min(k, cands.size)
+        if k <= 0:
+            return 0
+        if k < cands.size:
+            order = np.lexsort((self.page_seq[cands],
+                                self.page_last_used[cands]))
+            victims = cands[order[:k]]
+        else:
+            victims = cands
+        self.page_resident[victims] = False
+        self._resident -= k
+        self.spill_count += k
+        return k
 
     # -- allocation ----------------------------------------------------------
     def ensure(self, rid: int, n_tokens: int, page_tokens: int) -> None:
-        """Grow request ``rid``'s page list to cover ``n_tokens`` tokens.
+        """Grow request ``rid``'s page run to cover ``n_tokens`` tokens.
 
         New pages are placed in the GLB, evicting LRU pages as needed; if the
         GLB holds zero pages outright the page is born spilled.
         """
-        pages = self._pages.setdefault(rid, [])
         need = -(-int(n_tokens) // int(page_tokens)) if n_tokens > 0 else 0
-        while len(pages) < need:
-            idx = len(pages)
-            resident = True
-            if self.capacity_pages == 0:
-                resident = False
-                self.spill_count += 1
-            else:
-                while self._resident >= self.capacity_pages:
-                    if not self._evict_lru():  # pragma: no cover - safety net
-                        resident = False
-                        break
-            page = KVPage(bank=self._bank_of(rid, idx), resident=resident,
-                          last_used=self._clock)
-            if page.resident:
+        self._grow_slots(rid, need)
+        have = int(self._n_pages[rid])
+        if need <= have:
+            return
+        n_new = need - have
+        # Batch eviction: make room for the whole allocation up front.  The
+        # first ``born_spilled`` new pages are the ones the sequential loop
+        # would have created resident and then immediately evicted (they are
+        # the youngest stamps once every older page is gone), so they are
+        # born spilled here — same final state, same spill count.
+        born_spilled = 0
+        if self.capacity_pages == 0:
+            born_spilled = n_new
+            self.spill_count += n_new
+        else:
+            overflow = self._resident + n_new - self.capacity_pages
+            if overflow > 0:
+                evicted = self._evict_many(overflow)
+                born_spilled = overflow - evicted
+                self.spill_count += born_spilled
+        slots = self._slots2d[rid]
+        for idx in range(have, need):
+            resident = (idx - have) >= born_spilled
+            row = self._new_row()
+            self.page_hash[row] = self._hash_of(rid, idx)
+            self.page_resident[row] = resident
+            self.page_owner[row] = rid
+            self.page_last_used[row] = self._clock
+            self.page_seq[row] = self._next_seq()
+            if resident:
                 self._resident += 1
-                heapq.heappush(self._lru, (page.last_used, next(self._seq), page))
-            pages.append(page)
+            slots[idx] = row
             self.pages_created += 1
+        self._n_pages[rid] = need
+
+    def _gather(self, rids, counts):
+        """Table rows of each request's first ``counts`` pages, request-major
+        page-minor, as one fancy index into the dense slot matrix."""
+        total = int(counts.sum())
+        rep = rids.repeat(counts)
+        offs = counts.cumsum() - counts
+        intra = np.arange(total) - offs.repeat(counts)
+        return self._slots2d[rep, intra]
 
     def touch(self, rid: int) -> None:
         """Mark all of ``rid``'s pages as used this step (attention reads
         the whole context every token)."""
-        for p in self._pages.get(rid, ()):
-            if p.last_used != self._clock:
-                p.last_used = self._clock
-                if p.resident:
-                    heapq.heappush(self._lru, (p.last_used, next(self._seq), p))
+        self.touch_batch(np.asarray([rid]))
+
+    def _counts_for(self, rids: np.ndarray) -> np.ndarray:
+        """Page counts per rid; zero for requests the table has never seen
+        (keeps touch/split no-ops before ``ensure``, like the old dict)."""
+        counts = np.zeros(rids.shape, np.int64)
+        valid = rids < self._n_pages.shape[0]
+        counts[valid] = self._n_pages[rids[valid]]
+        return counts
+
+    def touch_batch(self, rids) -> None:
+        """One masked vector store for all touched pages, in request order."""
+        rids = np.asarray(rids, np.int64)
+        if rids.size == 0:
+            return
+        slots = self._gather(rids, self._counts_for(rids))
+        self._touch_slots(slots)
+
+    def _touch_slots(self, slots: np.ndarray) -> None:
+        stale = slots[self.page_last_used[slots] != self._clock]
+        if stale.size:
+            self.page_last_used[stale] = self._clock
+            self.page_seq[stale] = self._next_seq(stale.size) + np.arange(stale.size)
 
     def free(self, rid: int) -> int:
         """Release a completed request's pages; returns the page count."""
-        pages = self._pages.pop(rid, [])
-        self._resident -= sum(p.resident for p in pages)
-        for p in pages:
-            p.resident = False  # invalidates any lingering LRU heap entries
-        return len(pages)
+        if rid >= self._n_pages.shape[0]:
+            return 0
+        n = int(self._n_pages[rid])
+        if not n:
+            return 0
+        slots = self._slots2d[rid, :n]
+        self._resident -= int(self.page_resident[slots].sum())
+        self.page_resident[slots] = False
+        self.page_owner[slots] = -1
+        self._free.extend(int(s) for s in slots)
+        self._n_pages[rid] = 0
+        return n
 
     # -- read/write placement -------------------------------------------------
-    def pages_of(self, rid: int) -> list[KVPage]:
-        return self._pages.get(rid, [])
+    def slots_of(self, rid: int) -> np.ndarray:
+        """Page-table rows of ``rid``'s pages, in page order."""
+        if rid >= self._n_pages.shape[0]:
+            return np.empty(0, np.int64)
+        return self._slots2d[rid, : self._n_pages[rid]]
+
+    def residency_of(self, rid: int) -> np.ndarray:
+        """Per-page residency flags of ``rid``'s pages, in page order."""
+        return self.page_resident[self.slots_of(rid)]
 
     def page_split(self, rid: int, n_tokens: int, page_tokens: int):
         """Token counts per page for a context of ``n_tokens`` tokens.
 
-        Returns ``(banks, tokens, resident)`` parallel lists over the pages
+        Returns ``(banks, tokens, resident)`` parallel arrays over the pages
         covering the context — the lowering turns each page into one GLB (or
         exposed DRAM, if spilled) read event.
         """
-        banks, toks, res = [], [], []
-        remaining = int(n_tokens)
-        for p in self.pages_of(rid):
-            if remaining <= 0:
-                break
-            t = min(int(page_tokens), remaining)
-            banks.append(p.bank)
-            toks.append(t)
-            res.append(p.resident)
-            remaining -= t
-        return banks, toks, res
+        slots, toks, _ = self.split_batch(np.asarray([rid]),
+                                          np.asarray([n_tokens]), page_tokens)
+        return (self.page_hash[slots] % self.n_banks, toks,
+                self.page_resident[slots])
+
+    def split_batch(self, rids, n_tokens, page_tokens: int):
+        """Batched page split across requests (request-major, page-minor).
+
+        Returns ``(slots, tokens, n_pages)``: the concatenated page-table
+        rows covering each request's context, per-page token counts (full
+        pages except each request's last), and the per-request page counts.
+        """
+        pt = int(page_tokens)
+        rids = np.asarray(rids, np.int64)
+        ctx = np.asarray(n_tokens, np.int64)
+        n_pages = np.minimum(-(-ctx // pt), self._counts_for(rids))
+        slots = self._gather(rids, n_pages)
+        toks = np.full(slots.shape[0], pt, np.int64)
+        last = np.cumsum(n_pages) - 1
+        nz = n_pages > 0
+        # min(pt, remaining): a run that does not fully cover the context
+        # (under-allocated rid) keeps every returned page at full size.
+        toks[last[nz]] = np.minimum((ctx - (n_pages - 1) * pt)[nz], pt)
+        return slots, toks, n_pages
+
+    def append_slots(self, rids, page_idx) -> np.ndarray:
+        """Page-table rows of each request's append page (``ctx // pt``)."""
+        return self._slots2d[np.asarray(rids, np.int64),
+                             np.asarray(page_idx, np.int64)]
+
+    def decode_step(self, rids: np.ndarray, ctx: np.ndarray, page_tokens: int):
+        """One decode step's allocator transaction, fused: ensure coverage of
+        ``ctx + 1`` tokens per request (plan order), commit the LRU touches,
+        and return the page split plus append rows.
+
+        Returns ``(slots, tokens, n_pages, append_rows)`` — the first three
+        as in :meth:`split_batch`, ``append_rows`` the per-request row of the
+        page receiving this token's KV append.  Equivalent to sequential
+        ``ensure``/``touch``/``split_batch``/``append_slots`` calls.
+        """
+        pt = int(page_tokens)
+        need = -(-(ctx + 1) // pt)
+        if int(rids.max(initial=-1)) >= self._n_pages.shape[0]:
+            self._grow_slots(int(rids.max()), int(need.max()))
+        counts = self._n_pages[rids]
+        grow = need > counts
+        if grow.any():
+            for rid, c in zip(rids[grow], ctx[grow]):
+                self.ensure(int(rid), int(c) + 1, pt)
+            counts = self._n_pages[rids]
+        # Touches commit after every allocation, in request order (the same
+        # stamps/seq sequential touch calls would produce).
+        slots_all = self._gather(rids, counts)
+        self._touch_slots(slots_all)
+        n_pages = -(-ctx // pt)
+        # The full runs cover ctx+1 tokens, so the split is a prefix of
+        # ``slots_all``: drop each request's trailing pages past the split.
+        if int((counts - n_pages).max(initial=0)) == 0:
+            slots = slots_all
+        else:
+            offs = counts.cumsum() - counts
+            total = int(n_pages.sum())
+            rep = offs.repeat(n_pages)
+            intra = np.arange(total) - (n_pages.cumsum() - n_pages).repeat(n_pages)
+            slots = slots_all[rep + intra]
+        toks = np.full(slots.shape[0], pt, np.int64)
+        toks[n_pages.cumsum() - 1] = ctx - (n_pages - 1) * pt
+        app = self._slots2d[rids, ctx // pt]
+        return slots, toks, n_pages, app

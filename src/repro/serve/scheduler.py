@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class RequestState:
@@ -70,15 +72,35 @@ class ServeEngineConfig:
 
 @dataclasses.dataclass
 class StepPlan:
-    """Work assigned to one global step."""
+    """Work assigned to one global step.
+
+    The block-batched lowering consumes the plan as arrays (one event block
+    per traffic class across all requests), so the per-class request id /
+    context columns are materialized once here and cached.
+    """
 
     t_start_ns: float
     prefill: list  # [(RequestState, n_tokens)]
     decode: list  # [RequestState] — one token each
+    _cols: tuple | None = dataclasses.field(default=None, repr=False)
 
     @property
     def empty(self) -> bool:
         return not self.prefill and not self.decode
+
+    @property
+    def decode_arrays(self) -> tuple:
+        """``(rids, ctx)`` int64 columns over the decode batch; ``ctx`` is
+        the context length read by this step's token (``prompt + decoded``,
+        evaluated before the step commits)."""
+        if self._cols is None:
+            n = len(self.decode)
+            self._cols = (
+                np.fromiter((r.rid for r in self.decode), np.int64, n),
+                np.fromiter((r.prompt + r.decoded for r in self.decode),
+                            np.int64, n),
+            )
+        return self._cols
 
 
 class ContinuousBatchScheduler:

@@ -1,0 +1,241 @@
+"""Shared-grid QPS x capacity x technology sweep over the serving closed loop.
+
+Evaluating a serving design grid point by point re-runs the scheduler, the
+page allocator, and the lowering for every (qps, capacity, technology)
+triple, even though most of that work is identical across the grid:
+
+* the **request population** is load-invariant up to a scale factor —
+  NumPy's ``Generator.exponential(scale)`` is exactly ``scale *
+  standard_exponential()``, so one ``draw_request_shape`` draw yields every
+  QPS point's arrival times bit-identically (``arrivals_at_qps``);
+* the **schedule and lowered event blocks** are technology-invariant
+  whenever no step is paced by GLB bank congestion: of the per-step
+  feedback ``dt = max(cadence, prefill, glb, dram)``, the decode cadence,
+  prefill time, and DRAM busy term (total spill accesses x access time — no
+  per-channel max) are all DRAM-side quantities shared by every technology;
+  only the per-bank GLB busy time differs.
+
+The engine exploits both: per (qps, capacity) it runs the scheduler +
+allocator + block lowering **once**, with
+``max(cadence, prefill, dram)`` as the step clock, then prices the neutral
+:class:`~repro.serve.lower.StepBlocks` per technology (bank = hash %
+n_banks, service/energy scaled).  While pricing it checks the *exactness
+certificate*: if every step's priced per-bank GLB busy time stays within
+the shared step duration, the full closed loop with that technology would
+have produced byte-for-byte the same schedule, so the shared result is
+exact — not an approximation.  A
+technology that violates the certificate (congestion would have stretched
+its steps) falls back to its own closed loop, so ``sweep_serving_grid``
+always returns closed-loop-exact rows; ``shared`` on each row records which
+path produced it.
+
+Scoring replays each priced trace through ``repro.sim``; ``backend="jax"``
+routes the replay's segmented scan through ``jax.lax.cummax`` (mirroring
+``repro.dse.grid``'s optional jitted backend) for device offload of very
+large grids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import NLP_TABLE_V, NLPModelSpec
+from repro.sim.engine import SimConfig
+from repro.sim.trace import ServingConfig, arrivals_at_qps, draw_request_shape
+from repro.serve.lower import (
+    BlockEmitter,
+    RunStats,
+    ScalarEmitter,
+    ServeModel,
+    ServeReport,
+    TechPricer,
+    closed_loop_serving,
+    drive_serving_loop,
+    score_run,
+    serving_run_meta,
+)
+from repro.serve.scheduler import ContinuousBatchScheduler, ServeEngineConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingGridSpec:
+    """The serving design grid: offered load x GLB capacity x technology."""
+
+    qps: tuple[float, ...] = (100.0, 200.0, 400.0, 800.0)
+    capacities_mb: tuple[float, ...] = (32.0, 64.0)
+    technologies: tuple[str, ...] = ("sram", "sot_opt")
+    model: str = "gpt2"
+    serving: ServingConfig = ServingConfig()
+    engine: ServeEngineConfig = ServeEngineConfig()
+
+    def resolve_model(self) -> NLPModelSpec:
+        specs = {s.name: s for s in NLP_TABLE_V}
+        if self.model not in specs:
+            raise KeyError(f"unknown NLP spec {self.model!r}; have {sorted(specs)}")
+        return specs[self.model]
+
+
+@dataclasses.dataclass
+class SweepRow:
+    """One grid point's closed-loop-exact outcome."""
+
+    technology: str
+    capacity_mb: float
+    qps: float
+    shared: bool  # True: scored off the shared schedule (certificate held)
+    report: ServeReport
+
+
+def _shared_run(model: ServeModel, sched: ContinuousBatchScheduler,
+                lowering: str, t_dram_acc_ns: float):
+    """Drive the loop once with the technology-invariant clock.
+
+    The step feedback's DRAM term is ``total accesses x access time`` — no
+    per-channel max — so it is identical for every technology and can be
+    folded into the shared clock exactly.  Only the per-bank GLB busy time
+    is technology-dependent; it is what the certificate checks per tech.
+    """
+    emitter = (BlockEmitter if lowering == "block" else ScalarEmitter)(model)
+    stats = RunStats()
+    blocks_list, dts = [], []
+
+    def shared_dt(blocks):
+        decode_ns = model.interval_ns if blocks.has_decode else 0.0
+        # Same accumulation order as TechPricer.price_step, so the value is
+        # bit-identical to the closed loop's dram_ns term.
+        dram_acc = 0.0
+        if blocks.dram_rd_acc.size:
+            dram_acc += float(blocks.dram_rd_acc.sum())
+        if blocks.dram_wr_acc.size:
+            dram_acc += float(blocks.dram_wr_acc.sum())
+        return max(decode_ns, blocks.prefill_ns, dram_acc * t_dram_acc_ns)
+
+    for blocks, dt in drive_serving_loop(sched, emitter, shared_dt,
+                                         model.alloc):
+        stats.account(blocks, dt)
+        blocks_list.append(blocks)
+        dts.append(dt)
+    return blocks_list, np.asarray(dts), stats
+
+
+def sweep_serving_grid(
+    spec: ServingGridSpec,
+    mode: str = "shared",
+    backend: str = "numpy",
+    n_dram_channels: int = 8,
+    n_prefetch_channels: int = 4,
+    lowering: str = "block",
+    timing: dict | None = None,
+) -> list[SweepRow]:
+    """Evaluate the whole grid; rows ordered (capacity, qps, technology).
+
+    ``mode="shared"`` (default) reuses one schedule per (qps, capacity)
+    across technologies with the exactness certificate + per-technology
+    closed-loop fallback; ``mode="exact"`` runs every triple through its own
+    closed loop (the reference path the certificate is validated against).
+
+    Pass a dict as ``timing`` to receive the wall-clock split:
+    ``loop_s`` (scheduler + allocator + lowering + per-tech pricing) vs
+    ``score_s`` (trace build + replay + report) — the benchmark harness uses
+    it to separate the serving-loop speedup from the shared replay cost.
+    """
+    if mode not in ("shared", "exact"):
+        raise ValueError(f"unknown sweep mode {mode!r}")
+    if timing is None:
+        timing = {}
+    timing.setdefault("loop_s", 0.0)
+    timing.setdefault("score_s", 0.0)
+    nlp = spec.resolve_model()
+    rng = np.random.default_rng(spec.serving.seed)
+    interarrival_std, prompts, decodes = draw_request_shape(spec.serving, rng)
+
+    rows: list[SweepRow] = []
+    for cap in spec.capacities_mb:
+        for qps in spec.qps:
+            cfg = dataclasses.replace(spec.serving, arrival_rate_rps=qps)
+            if mode == "exact":
+                for tech in spec.technologies:
+                    system = HybridMemorySystem(glb=glb_array(tech, cap))
+                    # sim_config=None reproduces the closed loop's own
+                    # default (4x-cadence coalescing, no kind stats); only a
+                    # non-default replay backend needs an explicit config.
+                    _, rep = closed_loop_serving(
+                        system, nlp, cfg, spec.engine,
+                        sim_config=(None if backend == "numpy" else
+                                    _sim_config(system, nlp, cfg, spec.engine,
+                                                backend)),
+                        n_dram_channels=n_dram_channels,
+                        n_prefetch_channels=n_prefetch_channels,
+                        lowering=lowering,
+                        timing=timing,
+                    )
+                    rows.append(SweepRow(tech, cap, qps, False, rep))
+                continue
+
+            # One scheduler + allocator + lowering pass per (qps, capacity).
+            t0 = time.perf_counter()
+            arrivals = arrivals_at_qps(interarrival_std, qps)
+            ref_system = HybridMemorySystem(
+                glb=glb_array(spec.technologies[0], cap)
+            )
+            dram = ref_system.dram  # shared by every technology on the grid
+            t_dram_acc_ns = (
+                dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
+            )
+            model = ServeModel(ref_system, nlp, cfg, spec.engine)
+            sched = ContinuousBatchScheduler(arrivals, prompts, decodes,
+                                             spec.engine)
+            blocks_list, dts, stats = _shared_run(model, sched, lowering,
+                                                  t_dram_acc_ns)
+            timing["loop_s"] += time.perf_counter() - t0
+            sim_config = SimConfig(
+                coalesce_window_ns=4 * model.interval_ns, backend=backend,
+                kind_stats=False,
+            )
+
+            for tech in spec.technologies:
+                t0 = time.perf_counter()
+                system = HybridMemorySystem(glb=glb_array(tech, cap))
+                pricer = TechPricer(system, model,
+                                    n_dram_channels, n_prefetch_channels)
+                # The shared clock already carries the (tech-invariant) DRAM
+                # busy term; only the per-bank GLB busy time can push a
+                # technology off the shared schedule — price_run checks every
+                # step in one segmented pass.
+                certified = pricer.price_run(blocks_list, dts)
+                timing["loop_s"] += time.perf_counter() - t0
+                if certified:
+                    t0 = time.perf_counter()
+                    trace = pricer.b.build(
+                        compute_time_s=0.0,
+                        meta=serving_run_meta(nlp, cfg, spec.engine, system,
+                                              model, stats, lowering,
+                                              schedule="shared"),
+                    )
+                    rep = score_run(trace, sched, model, stats, system,
+                                    sim_config)
+                    timing["score_s"] += time.perf_counter() - t0
+                    rows.append(SweepRow(tech, cap, qps, True, rep))
+                else:
+                    # Congestion would have stretched this technology's
+                    # steps: replay its own closed loop (still block-lowered).
+                    _, rep = closed_loop_serving(
+                        system, nlp, cfg, spec.engine,
+                        sim_config=sim_config,
+                        n_dram_channels=n_dram_channels,
+                        n_prefetch_channels=n_prefetch_channels,
+                        lowering=lowering,
+                        timing=timing,
+                    )
+                    rows.append(SweepRow(tech, cap, qps, False, rep))
+    return rows
+
+
+def _sim_config(system, nlp, cfg, engine, backend) -> SimConfig:
+    model = ServeModel(system, nlp, cfg, engine)
+    return SimConfig(coalesce_window_ns=4 * model.interval_ns, backend=backend,
+                     kind_stats=False)

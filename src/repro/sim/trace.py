@@ -89,8 +89,26 @@ class Trace:
         return self.n_glb_banks + self.n_dram_channels + self.n_prefetch_channels
 
 
+_COLUMN_DTYPES = (
+    np.float64,  # t_issue_ns
+    np.int32,  # resource
+    np.float64,  # service_ns
+    np.float64,  # energy_pj
+    np.int8,  # kind
+    np.int64,  # line
+    np.int64,  # tag
+)
+
+
 class TraceBuilder:
-    """Accumulates event blocks and finalizes them into one `Trace`."""
+    """Accumulates event blocks and finalizes them into one `Trace`.
+
+    Storage is preallocated struct-of-arrays columns grown by doubling, so
+    block appends are O(block) slice assignments and :meth:`build` is a
+    zero-copy trim — no per-build re-concatenation of accumulated chunks.
+    """
+
+    _INITIAL_CAPACITY = 1024
 
     def __init__(
         self,
@@ -104,9 +122,25 @@ class TraceBuilder:
         self.n_glb_banks = max(1, int(self.glb.banks))
         self.n_dram_channels = n_dram_channels
         self.n_prefetch_channels = n_prefetch_channels
-        self._chunks: list[tuple[np.ndarray, ...]] = []
+        self._cols = [np.empty(self._INITIAL_CAPACITY, dt) for dt in _COLUMN_DTYPES]
+        self._n = 0
         self._line_counter = 0
         self._rr_offset = 0  # rotates bank assignment across blocks
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _reserve(self, n: int) -> None:
+        need = self._n + n
+        cap = self._cols[0].shape[0]
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        for i, col in enumerate(self._cols):
+            grown = np.empty(cap, col.dtype)
+            grown[: self._n] = col[: self._n]
+            self._cols[i] = grown
 
     # -- resource id helpers -------------------------------------------------
     def dram_resource(self, ch: np.ndarray | int):
@@ -120,26 +154,27 @@ class TraceBuilder:
         self._line_counter += n
         return out
 
-    def add(self, t_issue, resource, service, energy, kind, line=None, tag=-1) -> None:
-        t_issue = np.asarray(t_issue, dtype=np.float64).ravel()
-        n = t_issue.shape[0]
+    def add(self, t_issue, resource, service, energy, kind, line=None, tag=-1,
+            n=None) -> None:
+        """Append one event block.  ``n`` overrides the block length (every
+        argument may then be a scalar or an ``(n,)`` array); without it the
+        length is taken from ``t_issue``."""
+        if n is None:
+            t_issue = np.asarray(t_issue, dtype=np.float64).ravel()
+            n = t_issue.shape[0]
         if n == 0:
             return
-        resource = np.broadcast_to(np.asarray(resource, np.int32), (n,))
-        service = np.broadcast_to(np.asarray(service, np.float64), (n,))
-        energy = np.broadcast_to(np.asarray(energy, np.float64), (n,))
-        kind_a = np.broadcast_to(np.asarray(kind, np.int8), (n,))
-        if line is None:
-            line_a = self.fresh_lines(n)
-        else:
-            line_a = np.broadcast_to(np.asarray(line, np.int64), (n,))
-        tag_a = np.broadcast_to(np.asarray(tag, np.int64), (n,))
-        self._chunks.append(
-            tuple(
-                np.ascontiguousarray(a)
-                for a in (t_issue, resource, service, energy, kind_a, line_a, tag_a)
-            )
-        )
+        self._reserve(n)
+        s = slice(self._n, self._n + n)
+        cols = self._cols
+        cols[0][s] = t_issue
+        cols[1][s] = resource
+        cols[2][s] = service
+        cols[3][s] = energy
+        cols[4][s] = kind
+        cols[5][s] = self.fresh_lines(n) if line is None else line
+        cols[6][s] = tag
+        self._n += n
 
     def add_paced_block(
         self,
@@ -175,22 +210,14 @@ class TraceBuilder:
         return start_ns + duration
 
     def build(self, compute_time_s: float = 0.0, meta: dict | None = None) -> Trace:
-        if self._chunks:
-            cols = [np.concatenate([c[i] for c in self._chunks]) for i in range(7)]
-        else:
-            cols = [
-                np.empty(0, dt)
-                for dt in (
-                    np.float64, np.int32, np.float64, np.float64, np.int8,
-                    np.int64, np.int64,
-                )
-            ]
+        # Trimmed views of the preallocated columns (no copy, single chunk).
+        cols = [col[: self._n] for col in self._cols]
         return Trace(
             t_issue_ns=cols[0],
-            resource=cols[1].astype(np.int32),
+            resource=cols[1],
             service_ns=cols[2],
             energy_pj=cols[3],
-            kind=cols[4].astype(np.int8),
+            kind=cols[4],
             line=cols[5],
             n_glb_banks=self.n_glb_banks,
             n_dram_channels=self.n_dram_channels,
@@ -315,6 +342,33 @@ class ServingConfig:
     seed: int = 0
 
 
+def draw_request_shape(cfg: ServingConfig, rng: np.random.Generator):
+    """Draw the load-invariant part of the request population.
+
+    Returns ``(interarrival_std, prompts, decodes)`` where ``interarrival_std``
+    are *standard* exponential inter-arrival draws: scaling them by
+    ``1e9 / qps`` and cumulative-summing yields arrival times bit-identical to
+    :func:`draw_requests` at ``arrival_rate_rps=qps`` (NumPy's
+    ``Generator.exponential(scale)`` is exactly ``scale *
+    standard_exponential()``).  The QPS x capacity x technology sweep engine
+    relies on this to evaluate a whole QPS axis off one shared draw.
+    """
+    if cfg.n_requests <= 0:
+        raise ValueError("n_requests must be positive")
+    R = cfg.n_requests
+    interarrival_std = rng.standard_exponential(R)
+    prompts = np.maximum(8, rng.poisson(cfg.prompt_len, R)).astype(np.int64)
+    decodes = np.maximum(4, rng.poisson(cfg.decode_len, R)).astype(np.int64)
+    return interarrival_std, prompts, decodes
+
+
+def arrivals_at_qps(interarrival_std: np.ndarray, qps: float) -> np.ndarray:
+    """Arrival times (ns) of a shared request shape at one offered load."""
+    if qps <= 0:
+        raise ValueError("arrival_rate_rps must be positive")
+    return np.cumsum(interarrival_std * (1e9 / qps))
+
+
 def draw_requests(cfg: ServingConfig, rng: np.random.Generator):
     """Draw the (arrival_ns, prompt_toks, decode_toks) request population.
 
@@ -324,14 +378,8 @@ def draw_requests(cfg: ServingConfig, rng: np.random.Generator):
     this).  Draw order is part of the contract: exponential inter-arrivals,
     then prompt lengths, then decode lengths.
     """
-    if cfg.arrival_rate_rps <= 0:
-        raise ValueError("arrival_rate_rps must be positive")
-    if cfg.n_requests <= 0:
-        raise ValueError("n_requests must be positive")
-    R = cfg.n_requests
-    arrivals_ns = np.cumsum(rng.exponential(1e9 / cfg.arrival_rate_rps, R))
-    prompts = np.maximum(8, rng.poisson(cfg.prompt_len, R)).astype(np.int64)
-    decodes = np.maximum(4, rng.poisson(cfg.decode_len, R)).astype(np.int64)
+    interarrival_std, prompts, decodes = draw_request_shape(cfg, rng)
+    arrivals_ns = arrivals_at_qps(interarrival_std, cfg.arrival_rate_rps)
     return arrivals_ns, prompts, decodes
 
 

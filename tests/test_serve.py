@@ -1,7 +1,11 @@
-"""repro.serve: scheduler policy, KV paging, closed-loop metrics, DSE knee."""
+"""repro.serve: scheduler policy, KV paging, closed-loop metrics, DSE knee,
+scalar-vs-vectorized lowering equivalence, shared-grid sweep certificate."""
+
+import dataclasses
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core.memory_system import HybridMemorySystem, glb_array
 from repro.core.workload import NLP_TABLE_V
@@ -9,10 +13,20 @@ from repro.serve import (
     ContinuousBatchScheduler,
     PagedKVAllocator,
     ServeEngineConfig,
+    ServingGridSpec,
     closed_loop_serving,
+    sweep_serving_grid,
 )
 from repro.sim import ServingConfig, serving_trace
-from repro.sim.trace import trace_byte_counts
+from repro.sim.trace import (
+    arrivals_at_qps,
+    draw_request_shape,
+    draw_requests,
+    trace_byte_counts,
+)
+
+TRACE_COLUMNS = ("t_issue_ns", "resource", "service_ns", "energy_pj", "kind",
+                 "line", "tag")
 
 
 def _gpt2():
@@ -121,8 +135,8 @@ def test_allocator_lru_evicts_untouched_request():
     a.touch(1)
     a.tick()
     a.ensure(2, 16, 16)  # evicts request 0's page (least recently touched)
-    assert [p.resident for p in a.pages_of(0)] == [False]
-    assert [p.resident for p in a.pages_of(1)] == [True]
+    assert list(a.residency_of(0)) == [False]
+    assert list(a.residency_of(1)) == [True]
 
 
 def test_allocator_zero_capacity_pages_born_spilled():
@@ -131,7 +145,7 @@ def test_allocator_zero_capacity_pages_born_spilled():
     assert a.resident_pages == 0 and a.total_pages == 2
     assert a.residency() == 0.0
     banks, toks, res = a.page_split(0, 20, 16)
-    assert toks == [16, 4] and res == [False, False]
+    assert list(toks) == [16, 4] and list(res) == [False, False]
     assert all(0 <= b < 4 for b in banks)
 
 
@@ -250,3 +264,136 @@ def test_serving_slo_knee_golden_small_grid():
     # Iso-capacity energy at the knee: MRAM beats SRAM.
     assert (by_point[("sot_opt", 64.0)]["energy_j"]
             < by_point[("sram", 64.0)]["energy_j"])
+
+
+# ---------------------------------------------------------------------------
+# Scalar vs vectorized lowering equivalence (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def _both_lowerings(system, cfg, ecfg):
+    out = {}
+    for lowering in ("block", "scalar"):
+        out[lowering] = closed_loop_serving(system, _gpt2(), cfg, ecfg,
+                                            lowering=lowering)
+    return out["block"], out["scalar"]
+
+
+@pytest.mark.parametrize("tech,cap,qps,prompt", [
+    ("sot_opt", 64.0, 200.0, 64),   # zero spill, cadence-bound
+    ("sot_opt", 4.0, 800.0, 256),   # heavy spill + eviction churn
+    ("sram", 32.0, 400.0, 128),     # different bank count, mild spill
+])
+def test_block_and_scalar_lowerings_bit_identical(tech, cap, qps, prompt):
+    """The vectorized block lowering and the per-request scalar reference
+    emit byte-for-byte the same event stream — every trace column equal —
+    and therefore identical replay metrics."""
+    system = HybridMemorySystem(glb=glb_array(tech, cap))
+    cfg = ServingConfig(n_requests=12, arrival_rate_rps=qps, prompt_len=prompt,
+                        decode_len=24, seed=7)
+    ecfg = ServeEngineConfig(max_batch=8)
+    (tb, rb), (ts, rs) = _both_lowerings(system, cfg, ecfg)
+    assert len(tb) == len(ts)
+    for col in TRACE_COLUMNS:
+        np.testing.assert_array_equal(getattr(tb, col), getattr(ts, col),
+                                      err_msg=col)
+    # Identical traces -> identical replay percentiles and byte counts.
+    assert (rb.ttft_p50_ms, rb.ttft_p99_ms) == (rs.ttft_p50_ms, rs.ttft_p99_ms)
+    assert (rb.tpot_p50_ms, rb.tpot_p99_ms) == (rs.tpot_p50_ms, rs.tpot_p99_ms)
+    assert rb.bytes == rs.bytes
+    assert rb.pages_spilled == rs.pages_spilled
+    assert rb.n_steps == rs.n_steps
+    assert rb.kv_spill_read_frac == pytest.approx(rs.kv_spill_read_frac,
+                                                  rel=1e-12)
+
+
+def test_shared_request_draw_scales_bit_identically():
+    """One draw_request_shape draw reproduces every QPS point's arrivals
+    bit-for-bit (the sweep engine's shared-draw contract)."""
+    cfg = ServingConfig(n_requests=40, seed=11)
+    shape = draw_request_shape(cfg, np.random.default_rng(cfg.seed))
+    for qps in (50.0, 400.0, 1600.0):
+        direct = draw_requests(dataclasses.replace(cfg, arrival_rate_rps=qps),
+                               np.random.default_rng(cfg.seed))
+        np.testing.assert_array_equal(arrivals_at_qps(shape[0], qps), direct[0])
+        np.testing.assert_array_equal(shape[1], direct[1])
+        np.testing.assert_array_equal(shape[2], direct[2])
+
+
+# ---------------------------------------------------------------------------
+# Shared-grid sweep engine: certificate exactness (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_shared_mode_matches_exact_closed_loops():
+    """Every shared-schedule row equals the per-point closed loop exactly:
+    certified points by the schedule-invariance argument, uncertified points
+    via the fallback.  The grid spans a cadence-bound regime (low QPS, big
+    GLB) and a congested one (high QPS, small GLB) so both paths execute."""
+    base = ServingConfig(n_requests=10, prompt_len=128, decode_len=16, seed=4)
+    grid = ServingGridSpec(
+        qps=(100.0, 1200.0),
+        capacities_mb=(8.0, 64.0),
+        technologies=("sram", "sot_opt"),
+        serving=base,
+        engine=ServeEngineConfig(max_batch=8),
+    )
+    shared = sweep_serving_grid(grid, mode="shared")
+    exact = sweep_serving_grid(grid, mode="exact")
+    assert [(r.technology, r.capacity_mb, r.qps) for r in shared] == \
+        [(r.technology, r.capacity_mb, r.qps) for r in exact]
+    assert any(r.shared for r in shared), "certificate never engaged"
+    for rs, re in zip(shared, exact):
+        assert rs.report.ttft_p99_ms == re.report.ttft_p99_ms, \
+            (rs.technology, rs.capacity_mb, rs.qps, rs.shared)
+        assert rs.report.tpot_p99_ms == re.report.tpot_p99_ms
+        assert rs.report.bytes == re.report.bytes
+        assert rs.report.n_steps == re.report.n_steps
+
+
+# ---------------------------------------------------------------------------
+# Page-table residency conservation (property, hypothesis shim)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    capacity_pages=st.integers(0, 12),
+    n_requests=st.integers(1, 6),
+    steps=st.integers(1, 30),
+    page_tokens=st.integers(1, 32),
+)
+def test_page_table_residency_conservation(capacity_pages, n_requests, steps,
+                                           page_tokens):
+    """Under random grow/touch/free traffic the struct-of-arrays page table
+    conserves pages: residency flags, the resident counter, and per-request
+    runs always agree, and the GLB never holds more than its capacity."""
+    rng = np.random.default_rng(capacity_pages * 1009 + n_requests * 31 + steps)
+    a = PagedKVAllocator(glb_bytes=capacity_pages * 64.0, page_bytes=64.0,
+                         n_banks=8)
+    tokens = {rid: 0 for rid in range(n_requests)}
+    live = set(tokens)
+    for _ in range(steps):
+        a.tick()
+        for rid in sorted(live):
+            tokens[rid] += int(rng.integers(0, 3 * page_tokens))
+            a.ensure(rid, tokens[rid], page_tokens)
+        touched = [rid for rid in sorted(live) if rng.random() < 0.7]
+        a.touch_batch(touched)
+        if live and rng.random() < 0.2:
+            rid = sorted(live)[int(rng.integers(0, len(live)))]
+            freed = a.free(rid)
+            assert freed == -(-tokens[rid] // page_tokens) if tokens[rid] else freed == 0
+            live.discard(rid)
+        # -- invariants ----------------------------------------------------
+        per_request = sum(int(a.residency_of(rid).sum()) for rid in live)
+        assert a.resident_pages == per_request
+        assert a.resident_pages <= max(a.capacity_pages, 0) or not a.capacity_pages
+        assert a.total_pages == sum(
+            -(-tokens[rid] // page_tokens) for rid in live if tokens[rid]
+        )
+        if a.capacity_pages == 0:
+            assert a.resident_pages == 0
+    # Spill accounting: every page ever created is live, spilled, or freed.
+    assert a.pages_created >= a.total_pages
+    assert a.spill_count >= 0

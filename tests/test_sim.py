@@ -315,6 +315,31 @@ def test_empty_trace_is_valid():
     assert r.energy_j == pytest.approx(system.glb.leakage_w * 1e-3)
 
 
+def test_trace_builder_preallocated_columns_grow_and_broadcast():
+    """Block appends land in the preallocated columns across doubling
+    boundaries, scalars broadcast under an explicit ``n``, and build() is a
+    trim of what was appended (no chunk re-concatenation to get wrong)."""
+    from repro.sim.trace import KIND_GLB_RD, KIND_GLB_WR, TraceBuilder
+
+    system = HybridMemorySystem(glb=glb_array("sram", 4.0))
+    b = TraceBuilder(system)
+    n_big = 3000  # spans several doublings of the 1024-slot initial columns
+    b.add(np.arange(n_big, dtype=float), 3, 2.0, 1.0, KIND_GLB_RD)
+    b.add(5.0, np.arange(7) % system.glb.banks, 1.5, 0.5, KIND_GLB_WR,
+          tag=9, n=7)
+    assert len(b) == n_big + 7
+    tr = b.build()
+    assert len(tr) == n_big + 7
+    np.testing.assert_array_equal(tr.t_issue_ns[:n_big], np.arange(n_big))
+    assert np.all(tr.t_issue_ns[n_big:] == 5.0)
+    assert np.all(tr.resource[:n_big] == 3)
+    assert np.all(tr.service_ns[n_big:] == 1.5)
+    assert np.all(tr.tag[:n_big] == -1) and np.all(tr.tag[n_big:] == 9)
+    # Fresh lines are unique and assigned in append order.
+    assert np.unique(tr.line).size == len(tr)
+    np.testing.assert_array_equal(tr.line, np.arange(len(tr)))
+
+
 def test_custom_glb_capacity_mem_params():
     """Simulating a GLB smaller than the workload forces DRAM spill events."""
     wl = cv_model_zoo()["vgg16"]
