@@ -12,7 +12,12 @@ Compares a fresh benchmark record against the committed baseline:
 * **correctness invariants** on the serving sweep: the scalar and
   vectorized paths must still produce identical metrics
   (``all_scalar_identical``), and the vectorized path must remain faster
-  than the scalar reference (``grid_speedup_x > 1``).
+  than the scalar reference (``grid_speedup_x > 1``);
+* **technology coverage**: every technology registered in ``repro.spec``
+  must appear in the baseline's ``tech_coverage`` block — either in
+  ``covered`` (part of the benchmark grid) or in ``notes`` (with a reason
+  it is excluded).  Registering a new technology without deciding its
+  serving-benchmark status fails CI until the baseline is updated.
 
 Exit status 0 on pass, 1 on any violation (each violation is printed).
 """
@@ -52,7 +57,29 @@ def check(current: dict, baseline: dict, max_regression: float) -> list[str]:
                 f"serving_qps: vectorized grid no faster than the scalar "
                 f"path (grid_speedup_x={speedup})"
             )
+    problems.extend(check_tech_coverage(baseline))
     return problems
+
+
+def check_tech_coverage(baseline: dict) -> list[str]:
+    """Every registered technology must be accounted for in the baseline.
+
+    Skips silently when ``repro.spec`` is not importable (the checker can
+    also be run on bare JSON without the package on the path).
+    """
+    try:
+        from repro.spec import list_techs
+    except ImportError:
+        return []
+    cov = baseline.get("tech_coverage", {})
+    accounted = set(cov.get("covered", ())) | set(cov.get("notes", {}))
+    return [
+        f"tech_coverage: registered technology {t!r} is neither in the "
+        "baseline's covered list nor excused in its notes — add it to "
+        "benchmarks/BENCH_serving.baseline.json tech_coverage"
+        for t in list_techs()
+        if t not in accounted
+    ]
 
 
 def main(argv=None) -> int:

@@ -9,6 +9,7 @@ with the scalar ``improvement_table``; see tests/test_dse_equivalence.py).
 from repro.core.evaluate import geomean, improvement_ratios
 from repro.core.workload import cv_model_zoo, nlp_model_zoo
 from repro.dse import GridSpec, evaluate_workload_grid
+from repro.spec import BASELINE_TECH, tech_group
 
 QUADRANTS = [
     ("cv", "inference", 64.0, {"sot": (5, 2), "sot_opt": (7, 8)}),
@@ -24,7 +25,7 @@ def improvement_table_batched(
     """Batched equivalent of ``repro.core.evaluate.improvement_table``."""
     spec = GridSpec(
         capacities_mb=(capacity_mb,),
-        technologies=("sram", "sot", "sot_opt"),
+        technologies=tech_group("paper"),
         batches=(batch,),
         modes=(mode,),
         d_w=d_w,
@@ -46,7 +47,7 @@ def run() -> list[dict]:
     rows = []
     for domain, mode, cap, paper in QUADRANTS:
         tab = improvement_table_batched(zoos[domain], 16, cap, mode)
-        for tech in ("sot", "sot_opt"):
+        for tech in (t for t in tech_group("paper") if t != BASELINE_TECH):
             e = geomean(v[f"{tech}_energy_x"] for v in tab.values())
             l = geomean(v[f"{tech}_latency_x"] for v in tab.values())
             rows.append(

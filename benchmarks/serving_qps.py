@@ -35,10 +35,11 @@ from repro.serve import (
     sweep_serving_grid,
 )
 from repro.sim import ServingConfig
+from repro.spec import tech_group
 
-TECHS = ("sram", "sot", "sot_opt")
+TECHS = tech_group("paper")
 QPS_SWEEP = (100.0, 200.0, 400.0, 800.0, 1600.0)
-SMOKE_TECHS = ("sram", "sot_opt")
+SMOKE_TECHS = tech_group("serving")
 SMOKE_QPS_SWEEP = (200.0, 800.0)
 
 

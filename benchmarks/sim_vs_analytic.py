@@ -8,12 +8,12 @@ cross-validation evidence that the event-level replay reproduces the paper's
 Fig. 18 operating points.
 """
 
-from repro.core.memory_system import HybridMemorySystem, glb_array
 from repro.core.workload import cv_model_zoo, nlp_model_zoo
 from repro.sim import cross_validate
+from repro.spec import build_system, tech_group
 
 CAPACITIES_MB = (16.0, 32.0, 64.0, 128.0, 256.0)
-TECHS = ("sram", "sot_opt")
+TECHS = tech_group("serving")
 # --smoke: one CV case, two capacities, coarse tiles — keeps CI under a minute.
 SMOKE_CAPACITIES_MB = (32.0, 64.0)
 
@@ -29,7 +29,7 @@ def run(smoke: bool = False) -> list[dict]:
     for domain, wl, mode, tile in cases:
         for cap in SMOKE_CAPACITIES_MB if smoke else CAPACITIES_MB:
             for tech in TECHS:
-                system = HybridMemorySystem(glb=glb_array(tech, cap))
+                system = build_system(tech, cap)
                 r = cross_validate(wl, 16, system, mode, tile_bytes=tile)
                 rows.append(
                     {

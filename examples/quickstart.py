@@ -30,9 +30,11 @@ def stco_demo():
           f"w_SOT={d.w_sot_nm}nm t_MgO={d.t_mgo_nm}nm d_MTJ={d.d_mtj_nm}nm")
     print(f"  retention {res.dtco.retention_s:.1f}s, Delta {res.dtco.delta:.1f}, "
           f"read bus {res.dtco.read_bus_bits}b, write bus {res.dtco.write_bus_bits}b")
+    from repro.spec import BASELINE_TECH
+
     m = compare_technologies(wl, 16, 64.0, "inference")
-    sram = m["sram"]
-    for tech in ("sot", "sot_opt"):
+    sram = m[BASELINE_TECH]
+    for tech in (t for t in m if t != BASELINE_TECH):
         v = m[tech]
         print(f"  {tech:8s}: {sram.energy_j / v.energy_j:4.1f}x energy, "
               f"{sram.latency_s / v.latency_s:4.1f}x latency vs SRAM @64MB")

@@ -15,7 +15,6 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.memory_system import HybridMemorySystem, glb_array
 from repro.core.workload import NLP_TABLE_V, cv_model_zoo
 from repro.sim import (
     ServingConfig,
@@ -24,13 +23,14 @@ from repro.sim import (
     serving_trace,
     simulate_trace,
 )
+from repro.spec import build_system, tech_group
 
 
 def cross_validation_demo():
     wl = cv_model_zoo()["resnet50"]
     print(f"== sim vs analytic: {wl.name} training @256MB ==")
-    for tech in ("sram", "sot", "sot_opt"):
-        system = HybridMemorySystem(glb=glb_array(tech, 256.0))
+    for tech in tech_group("paper"):
+        system = build_system(tech, 256.0)
         r = cross_validate(wl, 16, system, "training", tile_bytes=16384)
         print(
             f"  {tech:8s}: sim {r['sim_latency_s'] * 1e3:7.3f} ms vs analytic "
@@ -43,8 +43,9 @@ def cross_validation_demo():
 def serving_demo():
     spec = next(s for s in NLP_TABLE_V if s.name == "gpt2")
     print("== LLM serving (gpt2, 32 reqs @ 100/s, prefill+decode KV traffic) ==")
-    for tech, cap in (("sram", 64.0), ("sot_opt", 64.0), ("sot_opt", 256.0)):
-        system = HybridMemorySystem(glb=glb_array(tech, cap))
+    t_base, t_best = tech_group("serving")
+    for tech, cap in ((t_base, 64.0), (t_best, 64.0), (t_best, 256.0)):
+        system = build_system(tech, cap)
         trace = serving_trace(system, spec, ServingConfig())
         result = simulate_trace(
             trace,

@@ -112,23 +112,63 @@ def compare_technologies(
     mode: str,
     d_w: int = 4,
     arr: ArrayConfig | None = None,
+    technologies: tuple[str, ...] | None = None,
 ) -> dict[str, SystemMetrics]:
-    """SRAM vs SOT vs DTCO-opt SOT at iso-capacity (Fig. 18)."""
+    """Registered technologies at iso-capacity (Fig. 18).
+
+    ``technologies=None`` resolves to the registry's ``"paper"`` group
+    (SRAM vs SOT vs DTCO-opt SOT); any registered name is accepted.
+    """
+    from repro.spec import tech_group
+
     out = {}
-    for tech in ("sram", "sot", "sot_opt"):
+    for tech in technologies or tech_group("paper"):
         system = HybridMemorySystem(glb=glb_array(tech, capacity_mb))
         out[tech] = evaluate_system(workload, batch, system, mode, d_w, arr)
     return out
 
 
-def improvement_ratios(m: dict[str, SystemMetrics]) -> dict[str, float]:
-    """Fig. 18 ratio keys from a {technology: SystemMetrics} mapping."""
-    return {
-        "sot_energy_x": m["sram"].energy_j / m["sot"].energy_j,
-        "sot_latency_x": m["sram"].latency_s / m["sot"].latency_s,
-        "sot_opt_energy_x": m["sram"].energy_j / m["sot_opt"].energy_j,
-        "sot_opt_latency_x": m["sram"].latency_s / m["sot_opt"].latency_s,
-    }
+def fig18_ratio_keys(
+    technologies: tuple[str, ...] | None = None, baseline: str | None = None
+) -> tuple[str, ...]:
+    """The Fig. 18 ratio keys: ``{tech}_{energy,latency}_x`` for every
+    non-baseline technology, registry-derived by default."""
+    from repro.spec import BASELINE_TECH, tech_group
+
+    baseline = baseline or BASELINE_TECH
+    techs = technologies or tech_group("paper")
+    return tuple(
+        f"{tech}_{metric}_x"
+        for tech in techs
+        if tech != baseline
+        for metric in ("energy", "latency")
+    )
+
+
+def improvement_ratios(
+    m: dict[str, SystemMetrics], baseline: str | None = None
+) -> dict[str, float]:
+    """Fig. 18 ratio keys from a {technology: SystemMetrics} mapping.
+
+    Ratios are generated for every non-baseline technology in ``m`` (in
+    its insertion order) against ``baseline`` (default: the registry's
+    baseline technology, SRAM).
+    """
+    from repro.spec import BASELINE_TECH
+
+    baseline = baseline or BASELINE_TECH
+    if baseline not in m:
+        raise KeyError(
+            f"baseline technology {baseline!r} missing from metrics {sorted(m)}"
+        )
+    base = m[baseline]
+    out: dict[str, float] = {}
+    for tech, metrics in m.items():
+        if tech == baseline:
+            continue
+        out[f"{tech}_energy_x"] = base.energy_j / metrics.energy_j
+        out[f"{tech}_latency_x"] = base.latency_s / metrics.latency_s
+    return out
 
 
 def improvement_table(
@@ -137,11 +177,16 @@ def improvement_table(
     capacity_mb: float,
     mode: str,
     d_w: int = 4,
+    technologies: tuple[str, ...] | None = None,
+    baseline: str | None = None,
 ) -> dict[str, dict[str, float]]:
-    """Energy/latency improvement of SOT and SOT-opt over SRAM per model."""
+    """Energy/latency improvement over the baseline technology per model."""
     return {
         name: improvement_ratios(
-            compare_technologies(wl, batch, capacity_mb, mode, d_w)
+            compare_technologies(
+                wl, batch, capacity_mb, mode, d_w, technologies=technologies
+            ),
+            baseline=baseline,
         )
         for name, wl in workloads.items()
     }

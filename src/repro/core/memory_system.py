@@ -45,6 +45,14 @@ class ArrayPPA:
     leakage_w: float
     area_mm2: float
     banks: int
+    # Which registered MemTechSpec produced this PPA (defaults to
+    # ``technology``); bespoke builds (e.g. the DTCO-device point) carry a
+    # non-registered name so spec-identity checks know to skip them.
+    spec_name: str = ""
+
+    def __post_init__(self):
+        if not self.spec_name:
+            object.__setattr__(self, "spec_name", self.technology)
 
 
 # --- 14 nm technology constants (calibration documented above) -------------
@@ -139,34 +147,53 @@ def sot_array(capacity_mb: float, optimized: bool = False) -> ArrayPPA:
     )
 
 
+def device_array_terms(
+    dev: SOTDevice,
+    capacity_mb: float,
+    tg_rd_ns: float = _SOT_OPT_TG_RD_NS,
+    tg_wr_ns: float = _SOT_OPT_TG_WR_NS,
+    energy_cap_slope: float = 0.35,
+) -> tuple[float, float, float, float]:
+    """DTCO-device array terms: (t_rd_ns, t_wr_ns, e_rd_pj, e_wr_pj).
+
+    Array latency = cell access + interconnect growth; a 256 B access
+    touches 2048 bitcells, with an 8 pJ periphery floor.  The single source
+    for both :func:`sot_array_from_device` and device-carrying
+    ``repro.spec.MemTechSpec`` builds — change it in one place.
+    """
+    cell = bitcell_ppa(dev)
+    s = _sqrt_scale(capacity_mb)
+    t_rd = cell.read_latency_s * 1e9 + tg_rd_ns * s
+    t_wr = cell.write_latency_s * 1e9 + tg_wr_ns * s
+    e_rd = cell.read_energy_j * 2048 * 1e12 * 0.35 + 8.0
+    e_wr = cell.write_energy_j * 2048 * 1e12 * 0.35 + 8.0
+    scale = 1 + energy_cap_slope * (s - 1)
+    return t_rd, t_wr, e_rd * scale, e_wr * scale
+
+
 def sot_array_from_device(capacity_mb: float, dev: SOTDevice) -> ArrayPPA:
     """Build the array model from an explicit DTCO device point."""
     base = sot_array(capacity_mb, optimized=True)
-    cell = bitcell_ppa(dev)
-    # Array latency = cell access + interconnect (reuse optimized wiring).
-    s = _sqrt_scale(capacity_mb)
-    t_rd = cell.read_latency_s * 1e9 + _SOT_OPT_TG_RD_NS * s
-    t_wr = cell.write_latency_s * 1e9 + _SOT_OPT_TG_WR_NS * s
-    # 256B access touches 2048 bitcells.
-    e_rd = cell.read_energy_j * 2048 * 1e12 * 0.35 + 8.0
-    e_wr = cell.write_energy_j * 2048 * 1e12 * 0.35 + 8.0
+    t_rd, t_wr, e_rd, e_wr = device_array_terms(dev, capacity_mb)
     return dataclasses.replace(
         base,
         read_latency_ns=t_rd,
         write_latency_ns=t_wr,
-        read_energy_pj_per_access=e_rd * (1 + 0.35 * (s - 1)),
-        write_energy_pj_per_access=e_wr * (1 + 0.35 * (s - 1)),
+        read_energy_pj_per_access=e_rd,
+        write_energy_pj_per_access=e_wr,
+        spec_name="sot_dtco_device",  # bespoke point, not a registered spec
     )
 
 
 def glb_array(technology: str, capacity_mb: float) -> ArrayPPA:
-    if technology == "sram":
-        return sram_array(capacity_mb)
-    if technology == "sot":
-        return sot_array(capacity_mb, optimized=False)
-    if technology == "sot_opt":
-        return sot_array(capacity_mb, optimized=True)
-    raise ValueError(f"unknown technology {technology!r}")
+    """Array PPA of any *registered* technology (see ``repro.spec``).
+
+    Unknown names raise ``repro.spec.UnknownTechnologyError`` — a
+    ``ValueError`` subclass carrying near-miss suggestions.
+    """
+    from repro.spec import get_tech
+
+    return get_tech(technology).build(capacity_mb)
 
 
 # ---------------------------------------------------------------------------

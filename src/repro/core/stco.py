@@ -27,8 +27,31 @@ from repro.core.evaluate import SystemMetrics, evaluate_system
 from repro.core.memory_system import HybridMemorySystem, glb_array, sot_array_from_device
 from repro.core.workload import Workload
 
-CAPACITY_GRID_MB: tuple[float, ...] = (2, 4, 8, 16, 32, 64, 128, 256, 512)
-TECHNOLOGY_GRID: tuple[str, ...] = ("sram", "sot", "sot_opt")
+
+def _capacity_grid() -> tuple[float, ...]:
+    from repro.spec import DEFAULT_CAPACITY_GRID_MB
+
+    return DEFAULT_CAPACITY_GRID_MB
+
+
+def _technology_grid() -> tuple[str, ...]:
+    from repro.spec import tech_group
+
+    return tech_group("paper")
+
+
+def __getattr__(name):
+    # Registry-derived grid defaults (see repro.spec); the names stay the
+    # long-standing import surface of this module (``CAPACITY_GRID_MB``,
+    # ``TECHNOLOGY_GRID``).  Resolved lazily (PEP 562, cached in globals)
+    # because repro.spec itself imports repro.core.memory_system — an eager
+    # import here would make the package import order matter.
+    if name in ("CAPACITY_GRID_MB", "TECHNOLOGY_GRID"):
+        g = globals()
+        g["CAPACITY_GRID_MB"] = _capacity_grid()
+        g["TECHNOLOGY_GRID"] = _technology_grid()
+        return g[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,9 +81,11 @@ def dram_access_curve(
     """Total DRAM accesses vs GLB capacity (the Fig. 9/11 reduction curve)."""
     if engine == "vectorized":
         from repro.dse import GridSpec, evaluate_workload_grid
+        from repro.spec import BASELINE_TECH
 
+        # Access counts are technology-independent; one tech suffices.
         spec = GridSpec(
-            capacities_mb=CAPACITY_GRID_MB, technologies=("sram",),
+            capacities_mb=_capacity_grid(), technologies=(BASELINE_TECH,),
             batches=(batch,), modes=(mode,), d_w=d_w,
         )
         g = evaluate_workload_grid(workload, spec, backend="numpy")
@@ -69,7 +94,7 @@ def dram_access_curve(
         cap: access_counts(
             workload, batch, MemoryParams(glb_mb=cap), mode, d_w
         ).dram_total
-        for cap in CAPACITY_GRID_MB
+        for cap in _capacity_grid()
     }
 
 
@@ -143,8 +168,8 @@ def grid_points_scalar(
     measure the vectorized engine against.
     """
     points: list[STCOPoint] = []
-    for tech in TECHNOLOGY_GRID:
-        for c in CAPACITY_GRID_MB:
+    for tech in _technology_grid():
+        for c in _capacity_grid():
             g = glb_array(tech, c)
             m = evaluate_system(
                 workload, batch, HybridMemorySystem(glb=g), mode, d_w
@@ -170,16 +195,17 @@ def run_stco(
     if engine == "vectorized":
         from repro.dse import GridSpec, evaluate_workload_grid
 
+        caps, techs = _capacity_grid(), _technology_grid()
         spec = GridSpec(
-            capacities_mb=CAPACITY_GRID_MB, technologies=TECHNOLOGY_GRID,
+            capacities_mb=caps, technologies=techs,
             batches=(batch,), modes=(mode,), d_w=d_w,
         )
         g = evaluate_workload_grid(workload, spec, backend=backend)
         curve = g.dram_curve(mode, batch)
         points = [
             STCOPoint(tech, c, g.point(mode, tech, batch, c), g.area_mm2(tech, c))
-            for tech in TECHNOLOGY_GRID
-            for c in CAPACITY_GRID_MB
+            for tech in techs
+            for c in caps
         ]
     elif engine == "scalar":
         curve = dram_access_curve(workload, batch, mode, d_w, engine="scalar")

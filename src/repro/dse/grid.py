@@ -44,6 +44,17 @@ class GridSpec:
     modes: tuple[str, ...] = ("inference", "training")
     d_w: int = 4
 
+    @classmethod
+    def from_scenario(cls, scenario) -> "GridSpec":
+        """The grid a :class:`repro.spec.Scenario` asks for (batch modes)."""
+        return cls(
+            capacities_mb=tuple(scenario.capacities_mb),
+            technologies=scenario.resolve_technologies(),
+            batches=tuple(scenario.batches),
+            modes=(scenario.mode,),
+            d_w=scenario.d_w,
+        )
+
     @property
     def n_points(self) -> int:
         return (

@@ -11,7 +11,7 @@ DTCO-device point uses a bespoke ``ArrayPPA``) can pass an explicit system.
 from __future__ import annotations
 
 from repro.core.bandwidth import ArrayConfig
-from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.spec import build_system
 
 
 def refine_front(
@@ -41,7 +41,7 @@ def refine_front(
             (p.technology, p.capacity_mb) if hasattr(p, "technology") else p
         )
         try:
-            system = HybridMemorySystem(glb=glb_array(tech, cap))
+            system = build_system(tech, cap)
         except ValueError:
             continue  # bespoke technologies (e.g. sot_dtco_device) are skipped
         r = refine_point(

@@ -16,6 +16,7 @@ import dataclasses
 
 from repro.core.workload import NLP_TABLE_V, NLPModelSpec
 from repro.sim.trace import ServingConfig
+from repro.spec import tech_group
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,12 +39,34 @@ class ServingSweepSpec:
     """The serving design-space grid (capacity x technology at one QPS)."""
 
     capacities_mb: tuple[float, ...] = (32.0, 64.0, 128.0, 256.0)
-    technologies: tuple[str, ...] = ("sram", "sot", "sot_opt")
+    technologies: tuple[str, ...] = tech_group("paper")
     model: str = "gpt2"
     qps: float = 800.0
     slo: ServingSLO = ServingSLO()
     serving: ServingConfig = None  # arrival/prompt/decode draws; None = default
     engine: object = None  # ServeEngineConfig; None = default
+
+    @classmethod
+    def from_scenario(cls, scenario, qps: float | None = None) -> "ServingSweepSpec":
+        """The sweep a serving-mode :class:`repro.spec.Scenario` asks for,
+        at one QPS point (default: the scenario's first).
+
+        The SLO knee is a single-QPS question; ``repro.spec.run_scenario``
+        calls this once per QPS point of the scenario grid.
+        """
+        qps = scenario.qps[0] if qps is None else qps
+        return cls(
+            capacities_mb=tuple(scenario.capacities_mb),
+            technologies=scenario.resolve_technologies(),
+            model=scenario.workloads[0],
+            qps=qps,
+            slo=ServingSLO(
+                ttft_p99_ms=scenario.slo_ttft_p99_ms,
+                tpot_p99_ms=scenario.slo_tpot_p99_ms,
+            ),
+            serving=scenario.serving_config(qps),
+            engine=scenario.engine_config(),
+        )
 
     def resolve_model(self) -> NLPModelSpec:
         specs = {s.name: s for s in NLP_TABLE_V}

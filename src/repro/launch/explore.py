@@ -11,6 +11,9 @@
     PYTHONPATH=src python -m repro.launch.explore --serving --qps 800 \
         --caps 32,64,128,256 --techs sram,sot_opt
 
+    PYTHONPATH=src python -m repro.launch.explore \
+        --scenario examples/scenarios/serving_hybrid.json --smoke
+
 For every (workload, mode, batch) the full capacity x technology grid is
 evaluated in one ``repro.dse`` array program; the (energy, latency, area)
 Pareto frontier is extracted with the O(n log n) staircase sweep, the
@@ -21,6 +24,12 @@ frontier with the bank-level trace simulator (``repro.sim``).
 (technology, capacity) point is replayed through the continuous-batching
 engine (``repro.serve``) and the SLO-knee — the smallest capacity holding
 the p99 TTFT/TPOT SLO at the target QPS — is reported per technology.
+
+Technologies resolve through the ``repro.spec`` registry: ``--tech`` (or
+``--techs``) accepts any registered name (``sram``, ``sot``, ``sot_opt``,
+``stt``, ``hybrid``, or anything the user registered), and ``--scenario
+path.json`` loads a full :class:`repro.spec.Scenario` from disk and runs
+it end to end (``--smoke`` shrinks it to a CI-sized grid).
 """
 
 from __future__ import annotations
@@ -33,12 +42,19 @@ from repro.core.stco import knee_capacity
 from repro.core.workload import cv_model_zoo, nlp_model_zoo
 from repro.dse import (
     DEFAULT_CAPACITIES_MB,
-    DEFAULT_TECHNOLOGIES,
     GridSpec,
     evaluate_workload_grid,
     knee_index,
     pareto_indices,
     refine_front,
+)
+from repro.spec import (
+    UnknownTechnologyError,
+    get_tech,
+    list_techs,
+    load_scenario,
+    run_scenario,
+    tech_group,
 )
 
 DOMAINS = ("cv", "nlp", "both")
@@ -46,6 +62,20 @@ DOMAINS = ("cv", "nlp", "both")
 
 def _parse_list(text: str, cast=str) -> tuple:
     return tuple(cast(x) for x in text.split(",") if x)
+
+
+def _resolve_techs(args, default: tuple[str, ...]) -> tuple[str, ...]:
+    """Technology list from ``--tech``/``--techs``, registry-validated."""
+    if args.tech and getattr(args, "techs", None):
+        raise SystemExit("--tech and --techs are aliases; pass only one")
+    text = args.tech or getattr(args, "techs", None)
+    techs = _parse_list(text) if text else default
+    try:
+        for t in techs:
+            get_tech(t)
+    except UnknownTechnologyError as e:
+        raise SystemExit(str(e)) from None
+    return techs
 
 
 def _workloads(domain: str, models: str):
@@ -158,7 +188,7 @@ def explore_serving(args) -> int:
     if args.smoke:
         spec = ServingSweepSpec(
             capacities_mb=(32.0, 64.0, 128.0, 256.0),
-            technologies=("sram", "sot_opt"),
+            technologies=_resolve_techs(args, tech_group("serving")),
             qps=800.0,
             slo=ServingSLO(ttft_p99_ms=30.0, tpot_p99_ms=0.31),
             serving=ServingConfig(n_requests=16, prompt_len=512,
@@ -177,7 +207,7 @@ def explore_serving(args) -> int:
                   f"(ignoring {requested[1:]})", file=sys.stderr)
         spec = ServingSweepSpec(
             capacities_mb=_parse_list(args.caps, float),
-            technologies=_parse_list(args.techs),
+            technologies=_resolve_techs(args, tech_group("paper")),
             model=requested[0] if requested else "gpt2",
             qps=args.qps,
             slo=ServingSLO(ttft_p99_ms=args.slo_ttft_ms,
@@ -194,20 +224,62 @@ def explore_serving(args) -> int:
           f"(SLO: TTFT p99 <= {spec.slo.ttft_p99_ms} ms, "
           f"TPOT p99 <= {spec.slo.tpot_p99_ms} ms; {dt:.1f}s, "
           f"{n_shared}/{len(out['rows'])} points off the shared schedule)")
+    ok = _print_serving_rows(out)
+    if args.smoke:
+        print("smoke OK" if ok else "smoke FAILED")
+    return 0 if ok else 1
+
+
+def _print_serving_rows(out: dict) -> bool:
+    """Print SLO sweep rows + knees; True iff any technology holds the SLO."""
+    multi_qps = len({r["qps"] for r in out["rows"]}) > 1
     for r in out["rows"]:
         mark = "ok " if r["slo_ok"] else "SLO"
-        print(f"  [{mark}] {r['technology']:>8}@{r['capacity_mb']:<6.0f} "
+        at_qps = f" @{r['qps']:.0f}rps" if multi_qps else ""
+        print(f"  [{mark}] {r['technology']:>8}@{r['capacity_mb']:<6.0f}{at_qps} "
               f"ttft_p99={r['ttft_p99_ms']:.2f}ms tpot_p99={r['tpot_p99_ms']:.3f}ms "
               f"residency={r['residency'] * 100:.0f}% "
               f"energy={r['energy_j']:.3e}J")
+    knee_qps = f" @{max(r['qps'] for r in out['rows']):.0f}rps" if multi_qps else ""
     for tech, cap in out["knee_capacity_mb"].items():
         knee = f"{cap:.0f} MB" if cap is not None else "none (SLO unmet)"
-        print(f"  SLO-knee capacity    : {tech:>8} -> {knee}")
+        print(f"  SLO-knee capacity{knee_qps}: {tech:>8} -> {knee}")
     best = out["best"]
     if best is not None:
         print(f"  min-energy SLO point : {best['technology']}@"
               f"{best['capacity_mb']:.0f}MB energy={best['energy_j']:.3e}J")
-    ok = any(cap is not None for cap in out["knee_capacity_mb"].values())
+    return any(cap is not None for cap in out["knee_capacity_mb"].values())
+
+
+def explore_scenario(args) -> int:
+    """Run a JSON-loaded ``repro.spec.Scenario`` end to end (--scenario)."""
+    sc = load_scenario(args.scenario)
+    if args.smoke:
+        sc = sc.smoke()
+    t0 = time.perf_counter()
+    out = run_scenario(sc, backend=args.backend)
+    dt = time.perf_counter() - t0
+    techs = ",".join(sc.resolve_technologies())
+    qps = (" qps=" + ",".join(f"{q:g}" for q in sc.qps)
+           if sc.mode == "serving" else "")
+    print(f"# scenario {sc.name!r}: mode={sc.mode} techs={techs}{qps} "
+          f"({dt:.1f}s)")
+    if out["kind"] == "serving":
+        ok = _print_serving_rows(out)
+    else:
+        ok = bool(out["rows"])
+        for row in out["rows"]:
+            kp = row["knee_point"]
+            print(f"  {row['workload']} {row['mode']} batch={row['batch']}: "
+                  f"dram-knee {row['knee_capacity_mb']:g} MB, "
+                  f"{len(row['pareto'])} pareto pts, "
+                  f"knee {kp['technology']}@{kp['capacity_mb']:g}MB")
+            for cap, ratios in row["ratios_vs_baseline"].items():
+                pairs = " ".join(f"{k}={v:.2f}" for k, v in ratios.items())
+                print(f"    @{cap:g}MB vs {sc.baseline}: {pairs}")
+            ok = ok and bool(row["pareto"])
+    # Same contract as --serving: exit 1 when the scenario yields nothing
+    # usable (no SLO-holding point / empty frontier), smoke or not.
     if args.smoke:
         print("smoke OK" if ok else "smoke FAILED")
     return 0 if ok else 1
@@ -223,7 +295,16 @@ def main(argv=None) -> int:
     ap.add_argument("--caps",
                     default=",".join(str(c) for c in DEFAULT_CAPACITIES_MB),
                     help="GLB capacities in MB")
-    ap.add_argument("--techs", default=",".join(DEFAULT_TECHNOLOGIES))
+    ap.add_argument("--techs", default=None,
+                    help="comma-separated registered technology names "
+                         f"(default: paper trio; registered: "
+                         f"{','.join(list_techs())})")
+    ap.add_argument("--tech", default=None,
+                    help="alias for --techs; any registered name, honored "
+                         "by --smoke too (e.g. --tech stt --smoke)")
+    ap.add_argument("--scenario", default=None, metavar="PATH",
+                    help="run a repro.spec.Scenario JSON file end to end "
+                         "(--smoke shrinks it to a CI-sized grid)")
     ap.add_argument("--backend", default="auto", choices=["auto", "numpy", "jax"])
     ap.add_argument("--refine", action="store_true",
                     help="re-score the Pareto frontier with the trace simulator")
@@ -246,13 +327,16 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=2)
     args = ap.parse_args(argv)
 
+    if args.scenario:
+        return explore_scenario(args)
+
     if args.serving:
         return explore_serving(args)
 
     if args.smoke:
         spec = GridSpec(
             capacities_mb=(8, 16, 32, 64),
-            technologies=("sram", "sot_opt"),
+            technologies=_resolve_techs(args, tech_group("serving")),
             batches=(16,),
             modes=("inference",),
         )
@@ -269,7 +353,7 @@ def main(argv=None) -> int:
 
     spec = GridSpec(
         capacities_mb=_parse_list(args.caps, float),
-        technologies=_parse_list(args.techs),
+        technologies=_resolve_techs(args, tech_group("paper")),
         batches=_parse_list(args.batches, int),
         modes=_parse_list(args.modes),
     )

@@ -19,11 +19,11 @@ import argparse
 import sys
 import time
 
-from repro.core.memory_system import HybridMemorySystem, glb_array
 from repro.core.workload import NLP_TABLE_V
 from repro.serve import ServeEngineConfig, closed_loop_serving, summarize_report
 from repro.sim import ServingConfig, SimConfig, serving_trace
 from repro.sim.trace import trace_byte_counts
+from repro.spec import UnknownTechnologyError, build_system, list_techs
 
 
 def run(args) -> int:
@@ -32,7 +32,11 @@ def run(args) -> int:
         print(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
         return 2
     spec = specs[args.model]
-    system = HybridMemorySystem(glb=glb_array(args.tech, args.glb_mb))
+    try:
+        system = build_system(args.tech, args.glb_mb)
+    except UnknownTechnologyError as e:
+        print(e)
+        return 2
     cfg = ServingConfig(
         n_requests=args.requests,
         arrival_rate_rps=args.qps,
@@ -90,7 +94,9 @@ def run(args) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", default="gpt2")
-    ap.add_argument("--tech", default="sot_opt", choices=["sram", "sot", "sot_opt"])
+    ap.add_argument("--tech", default="sot_opt",
+                    help="any registered technology "
+                         f"(registered: {','.join(list_techs())})")
     ap.add_argument("--glb-mb", type=float, default=64.0)
     ap.add_argument("--qps", type=float, default=200.0)
     ap.add_argument("--requests", type=int, default=32)

@@ -20,7 +20,6 @@ import argparse
 import sys
 import time
 
-from repro.core.memory_system import HybridMemorySystem, glb_array
 from repro.core.workload import NLP_TABLE_V, cv_model_zoo, nlp_model_zoo
 from repro.sim import (
     ServingConfig,
@@ -30,6 +29,7 @@ from repro.sim import (
     simulate_trace,
     summarize,
 )
+from repro.spec import UnknownTechnologyError, build_system, list_techs
 
 WORKLOAD_SCENARIOS = {
     "cv_inference": ("cv", "inference"),
@@ -45,7 +45,11 @@ def run_workload_scenario(args) -> int:
     if args.model not in zoo:
         print(f"unknown {domain} model {args.model!r}; have {sorted(zoo)}")
         return 2
-    system = HybridMemorySystem(glb=glb_array(args.tech, args.glb_mb))
+    try:
+        system = build_system(args.tech, args.glb_mb)
+    except UnknownTechnologyError as e:
+        print(e)
+        return 2
     t0 = time.time()
     window = args.coalesce_window_ns if args.coalesce_window_ns is not None else 0.0
     r = cross_validate(
@@ -73,7 +77,11 @@ def run_serving_scenario(args) -> int:
     if args.model not in specs:
         print(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
         return 2
-    system = HybridMemorySystem(glb=glb_array(args.tech, args.glb_mb))
+    try:
+        system = build_system(args.tech, args.glb_mb)
+    except UnknownTechnologyError as e:
+        print(e)
+        return 2
     cfg = ServingConfig(
         n_requests=args.requests,
         arrival_rate_rps=args.arrival_rate,
@@ -103,7 +111,9 @@ def main(argv=None) -> int:
                     choices=[*WORKLOAD_SCENARIOS, "serving"])
     ap.add_argument("--model", default=None,
                     help="workload name (default: resnet50 / bert / gpt2)")
-    ap.add_argument("--tech", default="sot_opt", choices=["sram", "sot", "sot_opt"])
+    ap.add_argument("--tech", default="sot_opt",
+                    help="any registered technology "
+                         f"(registered: {','.join(list_techs())})")
     ap.add_argument("--glb-mb", type=float, default=256.0)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--tile-bytes", type=int, default=16384)

@@ -528,6 +528,22 @@ class TechPricer:
         if n_kv_lines:
             self.b.fresh_lines(n_kv_lines)
 
+    @classmethod
+    def for_tech(
+        cls,
+        technology: str,
+        capacity_mb: float,
+        model: ServeModel,
+        n_dram_channels: int = 8,
+        n_prefetch_channels: int = 4,
+    ) -> "TechPricer":
+        """Registry-resolved pricer: the per-tech service/energy table comes
+        from ``repro.spec.get_tech(technology).build(capacity_mb)``."""
+        from repro.spec import build_system
+
+        return cls(build_system(technology, capacity_mb), model,
+                   n_dram_channels, n_prefetch_channels)
+
     def price_step(self, blk: StepBlocks) -> tuple[float, float]:
         """Emit one step's events; returns (max per-bank GLB ns, DRAM ns)."""
         b, glb = self.b, self.system.glb

@@ -42,10 +42,10 @@ import time
 
 import numpy as np
 
-from repro.core.memory_system import HybridMemorySystem, glb_array
 from repro.core.workload import NLP_TABLE_V, NLPModelSpec
 from repro.sim.engine import SimConfig
 from repro.sim.trace import ServingConfig, arrivals_at_qps, draw_request_shape
+from repro.spec import build_system, tech_group
 from repro.serve.lower import (
     BlockEmitter,
     RunStats,
@@ -67,10 +67,23 @@ class ServingGridSpec:
 
     qps: tuple[float, ...] = (100.0, 200.0, 400.0, 800.0)
     capacities_mb: tuple[float, ...] = (32.0, 64.0)
-    technologies: tuple[str, ...] = ("sram", "sot_opt")
+    technologies: tuple[str, ...] = tech_group("serving")
     model: str = "gpt2"
     serving: ServingConfig = ServingConfig()
     engine: ServeEngineConfig = ServeEngineConfig()
+
+    @classmethod
+    def from_scenario(cls, scenario) -> "ServingGridSpec":
+        """The full QPS x capacity x technology grid of a serving
+        :class:`repro.spec.Scenario`."""
+        return cls(
+            qps=tuple(scenario.qps),
+            capacities_mb=tuple(scenario.capacities_mb),
+            technologies=scenario.resolve_technologies(),
+            model=scenario.workloads[0],
+            serving=scenario.serving_config(),
+            engine=scenario.engine_config(),
+        )
 
     def resolve_model(self) -> NLPModelSpec:
         specs = {s.name: s for s in NLP_TABLE_V}
@@ -159,7 +172,7 @@ def sweep_serving_grid(
             cfg = dataclasses.replace(spec.serving, arrival_rate_rps=qps)
             if mode == "exact":
                 for tech in spec.technologies:
-                    system = HybridMemorySystem(glb=glb_array(tech, cap))
+                    system = build_system(tech, cap)
                     # sim_config=None reproduces the closed loop's own
                     # default (4x-cadence coalescing, no kind stats); only a
                     # non-default replay backend needs an explicit config.
@@ -179,9 +192,7 @@ def sweep_serving_grid(
             # One scheduler + allocator + lowering pass per (qps, capacity).
             t0 = time.perf_counter()
             arrivals = arrivals_at_qps(interarrival_std, qps)
-            ref_system = HybridMemorySystem(
-                glb=glb_array(spec.technologies[0], cap)
-            )
+            ref_system = build_system(spec.technologies[0], cap)
             dram = ref_system.dram  # shared by every technology on the grid
             t_dram_acc_ns = (
                 dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
@@ -199,9 +210,10 @@ def sweep_serving_grid(
 
             for tech in spec.technologies:
                 t0 = time.perf_counter()
-                system = HybridMemorySystem(glb=glb_array(tech, cap))
-                pricer = TechPricer(system, model,
-                                    n_dram_channels, n_prefetch_channels)
+                pricer = TechPricer.for_tech(tech, cap, model,
+                                             n_dram_channels,
+                                             n_prefetch_channels)
+                system = pricer.system
                 # The shared clock already carries the (tech-invariant) DRAM
                 # busy term; only the per-bank GLB busy time can push a
                 # technology off the shared schedule — price_run checks every

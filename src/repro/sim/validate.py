@@ -12,10 +12,11 @@ from __future__ import annotations
 
 from repro.core.bandwidth import ArrayConfig
 from repro.core.evaluate import evaluate_system
-from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.memory_system import HybridMemorySystem
 from repro.core.workload import Workload, cv_model_zoo, nlp_model_zoo
 from repro.sim.engine import SimConfig, SimResult, simulate_trace
 from repro.sim.trace import lower_workload
+from repro.spec import build_system, get_tech, list_techs, tech_group
 
 
 def cross_validate(
@@ -75,6 +76,7 @@ def refine_point(
     """Bank-conflict-aware re-score of one design point (the ``repro.dse``
     refinement stage): replay the trace and report the simulated latency
     alongside the congestion metrics the analytic frontier cannot see."""
+    _assert_spec_identity(system.glb)
     tile = tile_bytes or _DOMAIN_TILE_BYTES.get(workload.domain, 16384)
     r = cross_validate(
         workload, batch, system, mode, d_w, tile_bytes=tile,
@@ -90,6 +92,24 @@ def refine_point(
         "mean_queue_depth": r["mean_queue_depth"],
         "n_events": r["n_events"],
     }
+
+
+def _assert_spec_identity(glb) -> None:
+    """Refinement scores feed design decisions, so guard against a stale or
+    hand-mutated ``ArrayPPA``: a GLB claiming a *registered* spec name must
+    be bit-identical to what that spec builds today.  Bespoke arrays (e.g.
+    the ``sot_dtco_device`` point) carry a non-registered ``spec_name`` and
+    are exempt."""
+    name = getattr(glb, "spec_name", glb.technology)
+    if name not in list_techs():
+        return
+    rebuilt = get_tech(name).build(glb.capacity_mb)
+    if rebuilt != glb:
+        raise AssertionError(
+            f"GLB PPA for {name!r}@{glb.capacity_mb}MB does not match the "
+            f"registered spec (got {glb}, spec builds {rebuilt}); rebuild the "
+            "system through repro.spec.build_system"
+        )
 
 
 # The acceptance configurations: Fig. 18 training quadrants.
@@ -108,18 +128,21 @@ _DOMAIN_TILE_BYTES = {"cv": 16384, "nlp": 131072}
 
 def fig18_cross_validation(
     batch: int = 16,
-    technologies: tuple[str, ...] = ("sram", "sot", "sot_opt"),
+    technologies: tuple[str, ...] | None = None,
     tile_bytes: int | None = None,
     configs=FIG18_CONFIGS,
 ) -> list[dict]:
-    """Cross-validate the simulator on the Fig. 18 training configurations."""
+    """Cross-validate the simulator on the Fig. 18 training configurations.
+
+    ``technologies=None`` resolves to the registry's ``"paper"`` group.
+    """
     zoos = {"cv": cv_model_zoo(), "nlp": nlp_model_zoo()}
     rows = []
     for domain, model, mode, cap in configs:
         wl = zoos[domain][model]
         tile = tile_bytes or _DOMAIN_TILE_BYTES[domain]
-        for tech in technologies:
-            system = HybridMemorySystem(glb=glb_array(tech, cap))
+        for tech in technologies or tech_group("paper"):
+            system = build_system(tech, cap)
             r = cross_validate(wl, batch, system, mode, tile_bytes=tile)
             r["domain"] = domain
             rows.append(r)

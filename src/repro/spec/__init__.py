@@ -1,0 +1,52 @@
+"""Unified technology/scenario spec layer.
+
+Technologies and design-space scenarios are *data*, not code: a
+:class:`MemTechSpec` captures one GLB memory technology (area, leakage,
+energy anchors, latency coefficients, optional DTCO device or composite
+recipe) and lives in a validating global registry; a :class:`Scenario`
+captures one co-optimization question (workloads x mode x batch grid x
+capacity grid x technologies x serving QPS/SLO) and threads as a single
+argument through ``core``, ``dse``, ``sim``, ``serve``, and the ``launch``
+CLIs (``--tech``, ``--scenario path.json``).
+
+The builtin paper technologies (``sram``/``sot``/``sot_opt``) reproduce the
+seed array models bit-identically; ``stt`` (companion STT-MRAM paper) and
+``hybrid`` (Section V-E SRAM+SOT GLB) demonstrate that adding a technology
+is pure data.  See docs/spec.md.
+"""
+
+from repro.spec.builtin import (  # noqa: F401
+    BASELINE_TECH,
+    DEFAULT_CAPACITY_GRID_MB,
+)
+from repro.spec.scenario import (  # noqa: F401
+    Scenario,
+    load_scenario,
+    run_scenario,
+)
+from repro.spec.tech import (  # noqa: F401
+    MemTechSpec,
+    UnknownTechnologyError,
+    build_system,
+    get_tech,
+    list_techs,
+    register_group,
+    register_tech,
+    tech_group,
+)
+
+__all__ = [
+    "BASELINE_TECH",
+    "DEFAULT_CAPACITY_GRID_MB",
+    "MemTechSpec",
+    "Scenario",
+    "UnknownTechnologyError",
+    "build_system",
+    "get_tech",
+    "list_techs",
+    "load_scenario",
+    "register_group",
+    "register_tech",
+    "run_scenario",
+    "tech_group",
+]

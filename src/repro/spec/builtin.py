@@ -1,0 +1,133 @@
+"""Builtin technology specs and named groups.
+
+The three paper technologies are registered from the calibrated constants
+in ``repro.core.memory_system`` (the calibration notes live there), so the
+registry-built arrays are bit-identical to the seed ``sram_array``/
+``sot_array`` constructors — pinned by ``tests/test_spec.py``.
+
+Two *extension* technologies prove the registry is the only thing a new
+technology needs:
+
+``stt``
+    STT-MRAM GLB calibrated from the authors' companion STT-MRAM work
+    (Mishty & Sadi 2021, "System and Design Technology Co-optimization of
+    STT-MRAM for High-Performance AI Accelerator Memory System"; see
+    docs/spec.md for the anchor-by-anchor notes).  Two-terminal 1T1MTJ
+    cell: denser than 2T1SOT and near-zero leakage like SOT, read path
+    comparable (slightly heavier sensing at lower TMR), but the shared
+    read/write path through the MTJ makes writes an order of magnitude
+    slower and costlier (~5 ns-class pulses at write currents above I_c0)
+    — exactly the asymmetry that motivates the SOT paper.
+
+``hybrid``
+    The paper Section V-E hybrid GLB: a capacity split between an SRAM
+    partition (hot, latency-critical lines) and a DTCO-opt SOT partition
+    (capacity bulk).  Modeled as the capacity-fraction convex combination
+    of its constituents at iso-capacity; every PPA metric interpolates
+    between ``sram`` and ``sot_opt`` (property-tested).
+
+This module is imported for its side effects by ``repro.spec``; the named
+groups registered here are the **only** place technology-name tuples are
+spelled out — every other layer asks the registry.
+"""
+
+from __future__ import annotations
+
+from repro.core import memory_system as _ms
+from repro.spec.tech import MemTechSpec, register_group, register_tech
+
+#: The reference technology every improvement ratio is computed against.
+BASELINE_TECH = "sram"
+
+#: The paper's candidate GLB capacities (Fig. 9/11 sweep grid), MB.
+DEFAULT_CAPACITY_GRID_MB: tuple[float, ...] = (2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+SRAM = register_tech(MemTechSpec(
+    name="sram",
+    area_um2_per_bit=_ms._SRAM_AREA_UM2_PER_BIT,
+    leakage_w_per_mb=_ms._SRAM_LEAK_W_PER_MB,
+    read_energy_pj_2mb=_ms._SRAM_E_RD_PJ_2MB,
+    write_energy_pj_2mb=_ms._SRAM_E_WR_PJ_2MB,
+    energy_cap_slope=0.70,
+    t0_read_ns=_ms._SRAM_T0_NS,
+    tg_read_ns=_ms._SRAM_TG_NS,
+    t0_write_ns=_ms._SRAM_T0_NS,
+    tg_write_ns=_ms._SRAM_TG_NS,
+    bank_mb=4.0,  # 4 MB SRAM macro banks (14 nm compiler granularity)
+    tags=("paper", "baseline"),
+    description="14 nm 6T SRAM GLB (paper baseline)",
+))
+
+SOT = register_tech(MemTechSpec(
+    name="sot",
+    area_um2_per_bit=_ms._SOT_AREA_UM2_PER_BIT,
+    leakage_w_per_mb=_ms._SOT_LEAK_W_PER_MB,
+    read_energy_pj_2mb=_ms._SOT_E_RD_PJ_2MB,
+    write_energy_pj_2mb=_ms._SOT_E_WR_PJ_2MB,
+    energy_cap_slope=0.35,
+    t0_read_ns=_ms._SOT_T0_RD_NS,
+    tg_read_ns=_ms._SOT_TG_RD_NS,
+    t0_write_ns=_ms._SOT_T0_WR_NS,
+    tg_write_ns=_ms._SOT_TG_WR_NS,
+    bank_mb=2.0,
+    tags=("paper",),
+    description="2T1SOT SOT-MRAM GLB (pre-DTCO, Table VII anchors)",
+))
+
+SOT_OPT = register_tech(MemTechSpec(
+    name="sot_opt",
+    area_um2_per_bit=_ms._SOT_OPT_AREA_UM2_PER_BIT,
+    leakage_w_per_mb=_ms._SOT_LEAK_W_PER_MB,
+    read_energy_pj_2mb=_ms._SOT_OPT_E_RD_PJ_2MB,
+    write_energy_pj_2mb=_ms._SOT_OPT_E_WR_PJ_2MB,
+    energy_cap_slope=0.35,
+    t0_read_ns=_ms._SOT_OPT_T0_RD_NS,
+    tg_read_ns=_ms._SOT_OPT_TG_RD_NS,
+    t0_write_ns=_ms._SOT_OPT_T0_WR_NS,
+    tg_write_ns=_ms._SOT_OPT_TG_WR_NS,
+    bank_mb=1.0,  # DTCO individually optimizes smaller banks
+    tags=("paper",),
+    description="DTCO-optimized SOT-MRAM GLB (250/520 ps cell, Fig. 19 area)",
+))
+
+# -- extension technologies (spec-only; see docs/spec.md calibration) --------
+
+STT = register_tech(MemTechSpec(
+    name="stt",
+    # 1T1MTJ: denser than 2T1SOT (no separate write transistor/channel).
+    area_um2_per_bit=0.090,
+    # NVM array: periphery-only leakage, like SOT.
+    leakage_w_per_mb=0.0006,
+    # Read: same MTJ sensing family; TMR ~150% (vs 240% DTCO-opt) means a
+    # heavier sense amp burn than sot_opt, close to non-opt SOT.
+    read_energy_pj_2mb=64.0,
+    # Write: the STT current runs *through* the MTJ at >I_c0 for ns-class
+    # incubation + precession, ~2.5x the SOT write energy.
+    write_energy_pj_2mb=175.0,
+    energy_cap_slope=0.35,
+    # ~2x density halves wire lengths like SOT -> same flat tg scaling.
+    t0_read_ns=1.15,
+    tg_read_ns=0.150,
+    # 2021 paper's write anchor: ~5 ns switching pulse at 2x overdrive.
+    t0_write_ns=4.80,
+    tg_write_ns=0.160,
+    bank_mb=2.0,
+    tags=("extension", "mram"),
+    description="STT-MRAM GLB (Mishty & Sadi 2021 companion-paper anchors)",
+))
+
+HYBRID = register_tech(MemTechSpec(
+    name="hybrid",
+    components=(("sram", 0.25), ("sot_opt", 0.75)),
+    tags=("extension",),
+    description="Section V-E hybrid GLB: 1/4 SRAM (hot lines) + 3/4 DTCO-opt SOT",
+))
+
+# -- named groups (the only tech-name tuples outside the registry) -----------
+
+# The source paper's Fig. 18 trio, in its canonical order.
+register_group("paper", ("sram", "sot", "sot_opt"))
+# The fast SRAM-vs-best pair the serving sweeps/smokes default to.
+register_group("serving", ("sram", "sot_opt"))
+# Spec-only extensions (not part of any golden grid).
+register_group("extensions", ("stt", "hybrid"))

@@ -1,0 +1,257 @@
+"""Scenario: one co-optimization question as data.
+
+A :class:`Scenario` bundles everything the Fig. 1 loop is parameterized by
+— workload(s), mode, batch grid, GLB capacity grid, technology names, and
+(for serving) the QPS grid and SLO — into a single JSON-serializable value
+that threads through every layer: ``dse.grid.GridSpec.from_scenario``,
+``dse.serving.ServingSweepSpec.from_scenario``,
+``serve.sweep.ServingGridSpec.from_scenario``, and the ``launch`` CLIs'
+``--scenario path.json``.  Technology names resolve exclusively through the
+registry (:mod:`repro.spec.tech`), so a scenario referencing a technology
+registered from a JSON spec file needs no code changes anywhere.
+
+:func:`run_scenario` is the single-argument entry point: batch scenarios
+run the batched DSE (Pareto + knee + improvement ratios vs the scenario's
+``baseline``); serving scenarios run the shared-grid closed-loop sweep and
+report the SLO-knee.  Example files live in ``examples/scenarios/`` and are
+exercised by the CI matrix (``explore --scenario <file> --smoke``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.spec.builtin import BASELINE_TECH, DEFAULT_CAPACITY_GRID_MB
+from repro.spec.tech import get_tech, tech_group
+
+MODES = ("inference", "training", "serving")
+DOMAINS = ("cv", "nlp")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One design-space question: workloads x mode x grids x technologies."""
+
+    name: str = "default"
+    domain: str = "cv"  # workload zoo: "cv" | "nlp" (serving implies nlp)
+    workloads: tuple[str, ...] = ("resnet50",)
+    mode: str = "inference"  # "inference" | "training" | "serving"
+    batches: tuple[int, ...] = (16,)
+    capacities_mb: tuple[float, ...] = DEFAULT_CAPACITY_GRID_MB
+    technologies: tuple[str, ...] = ()  # () -> the registry's "paper" group
+    baseline: str = BASELINE_TECH  # ratio denominator technology
+    d_w: int = 4  # batch-workload datatype width (bytes)
+    # -- serving-only knobs (ignored by batch modes) -----------------------
+    qps: tuple[float, ...] = (800.0,)
+    slo_ttft_p99_ms: float = 50.0
+    slo_tpot_p99_ms: float = 0.35
+    n_requests: int = 24
+    prompt_len: int = 256
+    decode_len: int = 128
+    max_batch: int = 16
+    seed: int = 2
+
+    # -- validation / resolution -------------------------------------------
+
+    def validate(self) -> "Scenario":
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; expected one of {MODES}")
+        if self.domain not in DOMAINS:
+            raise ValueError(
+                f"unknown domain {self.domain!r}; expected one of {DOMAINS}"
+            )
+        if not self.workloads:
+            raise ValueError("scenario needs at least one workload")
+        if not self.capacities_mb:
+            raise ValueError("scenario needs at least one GLB capacity")
+        if not self.qps:
+            raise ValueError("scenario needs at least one QPS point")
+        techs = self.resolve_technologies()  # raises UnknownTechnologyError
+        get_tech(self.baseline)  # unknown baseline -> suggestion error
+        if self.mode != "serving" and self.baseline not in techs:
+            # Batch modes report ratios vs the baseline; a baseline outside
+            # the grid would silently produce none.
+            raise ValueError(
+                f"baseline {self.baseline!r} is not in the scenario's "
+                f"technologies {techs}; add it or change 'baseline'"
+            )
+        if self.mode == "serving" and len(self.workloads) > 1:
+            raise ValueError(
+                "serving scenarios sweep one model; got "
+                f"workloads={self.workloads}"
+            )
+        return self
+
+    def resolve_technologies(self) -> tuple[str, ...]:
+        """The technology names, registry-validated; () means the paper trio."""
+        techs = self.technologies or tech_group("paper")
+        for t in techs:
+            get_tech(t)
+        return tuple(techs)
+
+    def resolve_workloads(self) -> dict:
+        """Name -> ``Workload`` from the scenario's domain zoo (batch modes)."""
+        from repro.core.workload import cv_model_zoo, nlp_model_zoo
+
+        zoo = cv_model_zoo() if self.domain == "cv" else nlp_model_zoo()
+        missing = [w for w in self.workloads if w not in zoo]
+        if missing:
+            raise KeyError(
+                f"unknown {self.domain} workload(s) {missing}; have {sorted(zoo)}"
+            )
+        return {w: zoo[w] for w in self.workloads}
+
+    def serving_config(self, qps: float | None = None):
+        """The ``repro.sim.ServingConfig`` this scenario describes, at one
+        QPS point (default: the first).  Single source for every
+        ``from_scenario`` constructor."""
+        from repro.sim.trace import ServingConfig
+
+        return ServingConfig(
+            n_requests=self.n_requests,
+            arrival_rate_rps=self.qps[0] if qps is None else qps,
+            prompt_len=self.prompt_len,
+            decode_len=self.decode_len,
+            seed=self.seed,
+        )
+
+    def engine_config(self):
+        """The ``repro.serve.ServeEngineConfig`` this scenario describes."""
+        from repro.serve.scheduler import ServeEngineConfig
+
+        return ServeEngineConfig(max_batch=self.max_batch)
+
+    def smoke(self) -> "Scenario":
+        """A shrunk copy for CI smoke runs: one workload/batch/QPS point,
+        at most four capacities, and a small request population."""
+        return dataclasses.replace(
+            self,
+            workloads=self.workloads[:1],
+            batches=self.batches[:1],
+            capacities_mb=self.capacities_mb[-4:],
+            qps=self.qps[:1],
+            n_requests=min(self.n_requests, 16),
+        )
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for key in ("workloads", "batches", "capacities_mb", "technologies", "qps"):
+            d[key] = list(d[key])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown Scenario field(s) {sorted(unknown)}; "
+                f"valid fields: {sorted(known)}"
+            )
+        for key, cast in (
+            ("workloads", str),
+            ("technologies", str),
+            ("batches", int),
+            ("capacities_mb", float),
+            ("qps", float),
+        ):
+            if key in d:
+                d[key] = tuple(cast(x) for x in d[key])
+        return cls(**d).validate()
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=2)
+            fh.write("\n")
+
+
+def load_scenario(path: str) -> Scenario:
+    """Load and validate a Scenario from a JSON file."""
+    with open(path) as fh:
+        return Scenario.from_dict(json.load(fh))
+
+
+# ---------------------------------------------------------------------------
+# Single-argument execution
+# ---------------------------------------------------------------------------
+
+
+def run_scenario(sc: Scenario, backend: str = "auto") -> dict:
+    """Run one scenario end to end; the single-argument Fig. 1 loop.
+
+    Batch modes return one row per (workload, batch) with the DRAM-curve
+    knee, the (energy, latency, area) Pareto frontier + utopia-knee pick,
+    and the improvement ratios of every non-baseline technology over the
+    scenario's ``baseline`` at each capacity.  Serving mode evaluates
+    **every** QPS point of the scenario's grid (rows carry their ``qps``);
+    the reported SLO-knee/best come from the highest QPS — the binding
+    load for capacity sizing.
+    """
+    sc.validate()
+    if sc.mode == "serving":
+        from repro.dse.grid import evaluate_serving_slo
+        from repro.dse.serving import ServingSweepSpec
+
+        rows, knees = [], {}
+        for q in sorted(sc.qps):
+            out = evaluate_serving_slo(
+                ServingSweepSpec.from_scenario(sc, qps=q),
+                backend="numpy" if backend == "auto" else backend,
+            )
+            rows.extend(out["rows"])
+            knees = {"knee_capacity_mb": out["knee_capacity_mb"],
+                     "best": out["best"]}
+        return {"kind": "serving", "scenario": sc.name, "rows": rows, **knees}
+
+    import numpy as np
+
+    from repro.core.evaluate import improvement_ratios
+    from repro.core.stco import knee_capacity
+    from repro.dse import evaluate_workload_grid, knee_index, pareto_indices
+    from repro.dse.grid import GridSpec
+
+    spec = GridSpec.from_scenario(sc)
+    techs = sc.resolve_technologies()
+    rows = []
+    for name, wl in sc.resolve_workloads().items():
+        grid = evaluate_workload_grid(wl, spec, backend=backend)
+        for batch in sc.batches:
+            objs, labels = grid.objective_arrays(sc.mode, batch)
+            front = pareto_indices(objs)
+            ki = knee_index(objs, front)
+            ratios = {}
+            for cap in sc.capacities_mb:  # validate() pinned baseline in techs
+                by_tech = {
+                    t: grid.point(sc.mode, t, batch, cap) for t in techs
+                }
+                ratios[cap] = improvement_ratios(by_tech, baseline=sc.baseline)
+            rows.append({
+                "workload": name,
+                "mode": sc.mode,
+                "batch": batch,
+                "backend": grid.backend,
+                "knee_capacity_mb": knee_capacity(grid.dram_curve(sc.mode, batch)),
+                "pareto": [
+                    {
+                        "technology": labels[i][0],
+                        "capacity_mb": labels[i][1],
+                        "energy_j": float(objs[i, 0]),
+                        "latency_s": float(objs[i, 1]),
+                        "area_mm2": float(objs[i, 2]),
+                    }
+                    for i in front
+                ],
+                "knee_point": {
+                    "technology": labels[ki][0],
+                    "capacity_mb": labels[ki][1],
+                    "energy_j": float(objs[ki, 0]),
+                    "latency_s": float(objs[ki, 1]),
+                    "area_mm2": float(objs[ki, 2]),
+                },
+                "ratios_vs_baseline": ratios,
+            })
+    return {"kind": "batch", "scenario": sc.name, "rows": rows}

@@ -1,0 +1,305 @@
+"""Technology specs and the global registry (the DTCO "technologies are
+data" layer).
+
+A :class:`MemTechSpec` captures everything ``repro.core.memory_system``
+used to hard-code per technology: area/bit, leakage/MB, the 2 MB-reference
+dynamic-energy anchors, the ``t0 + tg * sqrt(cap/2)`` latency coefficients,
+bank granularity, and (optionally) an explicit DTCO :class:`SOTDevice`
+whose bitcell physics override the latency/energy anchors, or a list of
+*components* that make the spec a composite (capacity-fraction convex
+combination of other registered specs — the paper Section V-E hybrid GLB).
+
+``spec.build(capacity_mb)`` reproduces the seed ``sram_array``/``sot_array``
+outputs **bit-identically** (pinned by ``tests/test_spec.py``): the build
+formula is operand-for-operand the one in ``repro.core.memory_system``, so
+registering a technology is pure data — no new code path per technology.
+
+The module-level registry is the single source of technology names for the
+whole stack (``core`` -> ``dse`` -> ``sim`` -> ``serve`` -> ``launch``):
+``repro.core.memory_system.glb_array`` resolves through :func:`get_tech`,
+and every grid default derives from :func:`list_techs`/:func:`tech_group`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+
+from repro.core.dtco import SOTDevice
+from repro.core.memory_system import MB, ArrayPPA, _sqrt_scale, device_array_terms
+
+
+class UnknownTechnologyError(ValueError, KeyError):
+    """Raised for a technology name absent from the registry.
+
+    Subclasses ``ValueError`` so legacy ``except ValueError`` call sites
+    (e.g. ``repro.dse.refine.refine_front`` skipping bespoke technologies)
+    keep working, and ``KeyError`` for mapping-style callers.
+    """
+
+    def __init__(self, name: str, known: tuple[str, ...]):
+        near = difflib.get_close_matches(name, known, n=3, cutoff=0.5)
+        hint = f"; did you mean {', '.join(repr(n) for n in near)}?" if near else ""
+        super().__init__(
+            f"unknown technology {name!r}{hint} "
+            f"(registered: {', '.join(known) or 'none'})"
+        )
+        self.name = name
+        self.suggestions = tuple(near)
+
+    def __str__(self) -> str:  # KeyError would repr() the message otherwise
+        return self.args[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class MemTechSpec:
+    """One GLB memory technology as pure data.
+
+    Leaf specs define the analytical array model directly; composite specs
+    (non-empty ``components``) are capacity-fraction convex combinations of
+    other registered specs; a spec with a ``device`` derives its cell
+    latency/energy from the DTCO bitcell physics (``repro.core.dtco``),
+    keeping this spec's interconnect coefficients.
+    """
+
+    name: str
+    # Leaf array-model constants (see memory_system.py calibration notes).
+    area_um2_per_bit: float = 0.0
+    leakage_w_per_mb: float = 0.0
+    read_energy_pj_2mb: float = 0.0  # dynamic pJ / 256 B access @ 2 MB ref
+    write_energy_pj_2mb: float = 0.0
+    energy_cap_slope: float = 0.35  # energy growth per sqrt-capacity unit
+    t0_read_ns: float = 0.0  # cell/periphery access time
+    tg_read_ns: float = 0.0  # wiring growth coefficient (x sqrt(cap/2))
+    t0_write_ns: float = 0.0
+    tg_write_ns: float = 0.0
+    bank_mb: float = 2.0  # bank granularity (banks = cap // bank_mb)
+    # Optional DTCO device point overriding the cell anchors.
+    device: SOTDevice | None = None
+    # Composite: ((tech_name, capacity_fraction), ...) summing to 1.
+    components: tuple[tuple[str, float], ...] = ()
+    tags: tuple[str, ...] = ()
+    description: str = ""
+
+    @property
+    def is_composite(self) -> bool:
+        return bool(self.components)
+
+    # -- construction ------------------------------------------------------
+
+    def build(self, capacity_mb: float) -> ArrayPPA:
+        """The array-level PPA of one GLB built from this spec.
+
+        Mirrors ``repro.core.memory_system.sram_array``/``sot_array``
+        operand for operand so registry-built PPA is bit-identical to the
+        seed constructors (tests/test_spec.py pins this).
+        """
+        if self.is_composite:
+            return self._build_composite(capacity_mb)
+        s = _sqrt_scale(capacity_mb)
+        banks = max(1, int(capacity_mb // self.bank_mb))
+        t_rd = self.t0_read_ns + self.tg_read_ns * s
+        t_wr = self.t0_write_ns + self.tg_write_ns * s
+        e_rd = self.read_energy_pj_2mb * (1 + self.energy_cap_slope * (s - 1))
+        e_wr = self.write_energy_pj_2mb * (1 + self.energy_cap_slope * (s - 1))
+        if self.device is not None:
+            # DTCO override: cell access from the bitcell physics, wiring
+            # from this spec's growth coefficients (shared formula with
+            # ``sot_array_from_device``).
+            t_rd, t_wr, e_rd, e_wr = device_array_terms(
+                self.device, capacity_mb,
+                tg_rd_ns=self.tg_read_ns, tg_wr_ns=self.tg_write_ns,
+                energy_cap_slope=self.energy_cap_slope,
+            )
+        return ArrayPPA(
+            technology=self.name,
+            capacity_mb=capacity_mb,
+            read_latency_ns=t_rd,
+            write_latency_ns=t_wr,
+            read_energy_pj_per_access=e_rd,
+            write_energy_pj_per_access=e_wr,
+            leakage_w=self.leakage_w_per_mb * capacity_mb,
+            area_mm2=self.area_um2_per_bit * capacity_mb * 8 * MB / 1e6,
+            banks=banks,
+        )
+
+    def _build_composite(self, capacity_mb: float) -> ArrayPPA:
+        """Convex combination of the constituents at the full capacity.
+
+        Every scalar metric is the fraction-weighted mean of the
+        constituents' metrics at ``capacity_mb``, so each lies *between*
+        the constituent values (the interpolation property pinned by
+        tests/test_spec.py); banks round to the nearest integer.
+        """
+        parts = [(get_tech(n).build(capacity_mb), f) for n, f in self.components]
+
+        def mix(field: str) -> float:
+            return sum(f * getattr(p, field) for p, f in parts)
+
+        return ArrayPPA(
+            technology=self.name,
+            capacity_mb=capacity_mb,
+            read_latency_ns=mix("read_latency_ns"),
+            write_latency_ns=mix("write_latency_ns"),
+            read_energy_pj_per_access=mix("read_energy_pj_per_access"),
+            write_energy_pj_per_access=mix("write_energy_pj_per_access"),
+            leakage_w=mix("leakage_w"),
+            area_mm2=mix("area_mm2"),
+            banks=max(1, int(round(mix("banks")))),
+        )
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-ready dict; ``from_dict`` round-trips it bit-identically."""
+        d = {
+            "name": self.name,
+            "area_um2_per_bit": self.area_um2_per_bit,
+            "leakage_w_per_mb": self.leakage_w_per_mb,
+            "read_energy_pj_2mb": self.read_energy_pj_2mb,
+            "write_energy_pj_2mb": self.write_energy_pj_2mb,
+            "energy_cap_slope": self.energy_cap_slope,
+            "t0_read_ns": self.t0_read_ns,
+            "tg_read_ns": self.tg_read_ns,
+            "t0_write_ns": self.t0_write_ns,
+            "tg_write_ns": self.tg_write_ns,
+            "bank_mb": self.bank_mb,
+            "device": (
+                dataclasses.asdict(self.device) if self.device is not None else None
+            ),
+            "components": [[n, f] for n, f in self.components],
+            "tags": list(self.tags),
+            "description": self.description,
+        }
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MemTechSpec":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown MemTechSpec field(s) {sorted(unknown)}; "
+                f"valid fields: {sorted(known)}"
+            )
+        if "name" not in d:
+            raise ValueError("MemTechSpec dict is missing the 'name' field")
+        dev = d.get("device")
+        if dev is not None and not isinstance(dev, SOTDevice):
+            dev_known = {f.name for f in dataclasses.fields(SOTDevice)}
+            dev_unknown = set(dev) - dev_known
+            if dev_unknown:
+                raise ValueError(
+                    f"unknown SOTDevice field(s) {sorted(dev_unknown)}"
+                )
+            dev = SOTDevice(**dev)
+        d["device"] = dev
+        d["components"] = tuple((str(n), float(f)) for n, f in d.get("components", ()))
+        d["tags"] = tuple(d.get("tags", ()))
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, MemTechSpec] = {}
+_GROUPS: dict[str, tuple[str, ...]] = {}
+
+
+def register_tech(spec: MemTechSpec, overwrite: bool = False) -> MemTechSpec:
+    """Validate and register a spec; returns it for chaining.
+
+    Re-registering an existing name requires ``overwrite=True`` so typo'd
+    names cannot silently shadow a builtin.
+    """
+    _validate(spec)
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"technology {spec.name!r} is already registered "
+            "(pass overwrite=True to replace it)"
+        )
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _validate(spec: MemTechSpec) -> None:
+    if not spec.name or not spec.name.strip() or " " in spec.name:
+        raise ValueError(f"invalid technology name {spec.name!r}")
+    if spec.is_composite:
+        fracs = [f for _, f in spec.components]
+        if any(f <= 0 for f in fracs) or abs(sum(fracs) - 1.0) > 1e-9:
+            raise ValueError(
+                f"composite {spec.name!r}: component fractions must be "
+                f"positive and sum to 1 (got {fracs})"
+            )
+        for comp, _ in spec.components:
+            if comp == spec.name:
+                raise ValueError(f"composite {spec.name!r} references itself")
+            if comp not in _REGISTRY:
+                raise UnknownTechnologyError(comp, list_techs())
+        return
+    for field in (
+        "area_um2_per_bit",
+        "read_energy_pj_2mb",
+        "write_energy_pj_2mb",
+        "bank_mb",
+    ):
+        if getattr(spec, field) <= 0:
+            raise ValueError(f"{spec.name!r}: {field} must be positive")
+    for field in ("leakage_w_per_mb", "t0_read_ns", "tg_read_ns",
+                  "t0_write_ns", "tg_write_ns"):
+        if getattr(spec, field) < 0:
+            raise ValueError(f"{spec.name!r}: {field} must be non-negative")
+
+
+def get_tech(name: str) -> MemTechSpec:
+    """Look a spec up by name; unknown names raise with near-miss hints."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownTechnologyError(name, list_techs()) from None
+
+
+def list_techs(tag: str | None = None) -> tuple[str, ...]:
+    """Registered technology names in registration order.
+
+    ``tag`` filters to specs carrying that tag (e.g. ``"paper"`` for the
+    source paper's SRAM/SOT/DTCO-opt trio).
+    """
+    return tuple(
+        n for n, s in _REGISTRY.items() if tag is None or tag in s.tags
+    )
+
+
+def register_group(name: str, members: tuple[str, ...]) -> None:
+    """Name a tuple of registered technologies (the only place tech-name
+    tuples are spelled out; everything downstream asks for the group)."""
+    for m in members:
+        if m not in _REGISTRY:
+            raise UnknownTechnologyError(m, list_techs())
+    _GROUPS[name] = tuple(members)
+
+
+def tech_group(name: str) -> tuple[str, ...]:
+    """A named technology tuple (``"paper"``, ``"serving"``, ...)."""
+    if name == "all":
+        return list_techs()
+    try:
+        return _GROUPS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown technology group {name!r} (have {sorted(_GROUPS)} + 'all')"
+        ) from None
+
+
+def build_system(technology: str, capacity_mb: float):
+    """Registry-resolved ``HybridMemorySystem`` with the given GLB.
+
+    The one-liner every layer (sweep engine, validators, CLIs) uses instead
+    of spelling ``HybridMemorySystem(glb=glb_array(...))`` per call site.
+    """
+    from repro.core.memory_system import HybridMemorySystem
+
+    return HybridMemorySystem(glb=get_tech(technology).build(capacity_mb))

@@ -1,0 +1,363 @@
+"""The spec layer: registry semantics, serialization round-trips, golden
+bit-identity with the seed array constructors, and the Scenario API.
+
+Anchor groups:
+
+  * Registry — unknown names raise ``UnknownTechnologyError`` (a
+    ``ValueError`` with near-miss suggestions), duplicate registration is
+    rejected, composite validation catches bad fractions/references.
+  * Round-trip — ``to_dict``/``from_dict`` reproduce every registered spec
+    (and a device-carrying spec) bit-identically, including through JSON.
+  * Golden — registry-built ``sram``/``sot``/``sot_opt`` arrays equal the
+    seed ``sram_array``/``sot_array`` constructors field for field, and the
+    Fig. 18 improvement ratios through the registry-driven
+    ``compare_technologies`` match the pinned goldens bit-identically.
+  * Hybrid — every PPA metric of the composite GLB interpolates between
+    its constituents at iso-capacity (property test).
+  * Scenario — JSON round-trip, validation errors, and the single-argument
+    ``run_scenario`` end to end for a batch and a serving scenario.
+"""
+
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.core.dtco import SOTDevice
+from repro.core.evaluate import (
+    compare_technologies,
+    fig18_ratio_keys,
+    improvement_ratios,
+)
+from repro.core.memory_system import (
+    glb_array,
+    sot_array,
+    sot_array_from_device,
+    sram_array,
+)
+from repro.core.workload import cv_model_zoo
+from repro.spec import (
+    BASELINE_TECH,
+    MemTechSpec,
+    Scenario,
+    UnknownTechnologyError,
+    build_system,
+    get_tech,
+    list_techs,
+    load_scenario,
+    register_tech,
+    run_scenario,
+    tech_group,
+)
+
+from tests._hypothesis_compat import given, settings, st
+
+CAPS = (2.0, 8.0, 64.0, 256.0, 512.0)
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered_in_order():
+    techs = list_techs()
+    assert techs[:3] == ("sram", "sot", "sot_opt")
+    assert set(tech_group("extensions")) <= set(techs)
+    assert tech_group("paper") == ("sram", "sot", "sot_opt")
+    assert BASELINE_TECH in tech_group("paper")
+
+
+def test_unknown_tech_raises_value_error_with_suggestion():
+    with pytest.raises(UnknownTechnologyError) as ei:
+        get_tech("sotopt")
+    assert "sot_opt" in str(ei.value)
+    assert isinstance(ei.value, ValueError)  # legacy except-ValueError sites
+    with pytest.raises(ValueError):
+        glb_array("no_such_tech", 64.0)
+
+
+def test_duplicate_registration_rejected():
+    spec = get_tech("sram")
+    with pytest.raises(ValueError, match="already registered"):
+        register_tech(spec)
+    # overwrite=True re-registers the identical spec harmlessly.
+    register_tech(spec, overwrite=True)
+    assert get_tech("sram") is spec
+
+
+def test_composite_validation():
+    with pytest.raises(ValueError, match="sum to 1"):
+        register_tech(MemTechSpec(
+            name="bad_mix", components=(("sram", 0.5), ("sot", 0.2)),
+        ))
+    with pytest.raises(UnknownTechnologyError):
+        register_tech(MemTechSpec(
+            name="bad_ref", components=(("sram", 0.5), ("nope", 0.5)),
+        ))
+
+
+def test_leaf_validation():
+    with pytest.raises(ValueError, match="area_um2_per_bit"):
+        register_tech(MemTechSpec(name="zero_area"))
+    with pytest.raises(ValueError, match="invalid technology name"):
+        register_tech(MemTechSpec(name="has space", area_um2_per_bit=1.0))
+
+
+def test_tech_group_unknown():
+    with pytest.raises(KeyError, match="unknown technology group"):
+        tech_group("nope")
+
+
+# ---------------------------------------------------------------------------
+# Serialization round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["sram", "sot", "sot_opt", "stt", "hybrid"])
+def test_to_from_dict_round_trip_bit_equality(name):
+    spec = get_tech(name)
+    again = MemTechSpec.from_dict(spec.to_dict())
+    assert again == spec  # frozen-dataclass equality covers every field
+    # Through an actual JSON encode/decode as well.
+    via_json = MemTechSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert via_json == spec
+    # The builds are bit-identical too.
+    for cap in CAPS:
+        assert via_json.build(cap) == spec.build(cap)
+
+
+def test_device_spec_round_trip():
+    spec = MemTechSpec(
+        name="sot_dev",
+        area_um2_per_bit=0.084,
+        leakage_w_per_mb=0.0005,
+        read_energy_pj_2mb=34.0,
+        write_energy_pj_2mb=42.0,
+        t0_read_ns=0.38, tg_read_ns=0.052,
+        t0_write_ns=0.68, tg_write_ns=0.060,
+        bank_mb=1.0,
+        device=SOTDevice(theta_sh=2.0, t_fl_nm=0.8),
+    )
+    again = MemTechSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert again == spec
+    assert again.build(64.0) == spec.build(64.0)
+
+
+def test_from_dict_rejects_unknown_fields():
+    d = get_tech("sram").to_dict()
+    d["leekage_w_per_mb"] = 1.0  # typo
+    with pytest.raises(ValueError, match="leekage_w_per_mb"):
+        MemTechSpec.from_dict(d)
+    with pytest.raises(ValueError, match="missing the 'name'"):
+        MemTechSpec.from_dict({"area_um2_per_bit": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# Golden: registry rebuild == seed constructors, Fig. 18 ratios unchanged
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cap", CAPS)
+def test_registry_build_bit_identical_to_seed_constructors(cap):
+    assert glb_array("sram", cap) == dataclasses.replace(sram_array(cap))
+    assert glb_array("sot", cap) == sot_array(cap, optimized=False)
+    assert glb_array("sot_opt", cap) == sot_array(cap, optimized=True)
+
+
+def test_fig18_ratio_keys_registry_derived():
+    assert fig18_ratio_keys() == (
+        "sot_energy_x", "sot_latency_x", "sot_opt_energy_x", "sot_opt_latency_x",
+    )
+    assert fig18_ratio_keys(("sram", "stt")) == ("stt_energy_x", "stt_latency_x")
+
+
+def test_fig18_ratios_via_registry_match_seed_formula():
+    """The registry-driven compare/ratios path reproduces the seed's inlined
+    tuple math bit-identically (the Fig. 18 golden stays pinned elsewhere)."""
+    wl = cv_model_zoo()["resnet50"]
+    m = compare_technologies(wl, 16, 64.0, "inference")
+    assert tuple(m) == tech_group("paper")
+    r = improvement_ratios(m)
+    assert tuple(r) == fig18_ratio_keys()
+    assert r["sot_energy_x"] == m["sram"].energy_j / m["sot"].energy_j
+    assert r["sot_opt_latency_x"] == m["sram"].latency_s / m["sot_opt"].latency_s
+    # Any-technology ratios against the scenario-named baseline.
+    m4 = compare_technologies(
+        wl, 16, 64.0, "inference", technologies=("sram", "stt")
+    )
+    r4 = improvement_ratios(m4)
+    assert tuple(r4) == ("stt_energy_x", "stt_latency_x")
+    with pytest.raises(KeyError, match="baseline"):
+        improvement_ratios({"sot": m["sot"]})
+
+
+def test_spec_name_and_identity_assertion():
+    glb = glb_array("sot_opt", 64.0)
+    assert glb.spec_name == "sot_opt"
+    bespoke = sot_array_from_device(64.0, SOTDevice())
+    assert bespoke.spec_name == "sot_dtco_device"
+    assert bespoke.spec_name not in list_techs()
+
+    from repro.sim.validate import _assert_spec_identity
+
+    _assert_spec_identity(glb)  # registered + intact -> fine
+    _assert_spec_identity(bespoke)  # bespoke -> exempt
+    tampered = dataclasses.replace(glb, read_latency_ns=glb.read_latency_ns * 2)
+    with pytest.raises(AssertionError, match="does not match"):
+        _assert_spec_identity(tampered)
+
+
+# ---------------------------------------------------------------------------
+# Extension technologies
+# ---------------------------------------------------------------------------
+
+
+def test_stt_end_to_end():
+    """The STT spec runs the full analytic stack with the expected ordering:
+    denser + cooler than SRAM, but write-limited vs SOT (the companion-paper
+    asymmetry the SOT paper targets)."""
+    from repro.core.evaluate import evaluate_system
+
+    stt = glb_array("stt", 64.0)
+    sram, sot_opt = glb_array("sram", 64.0), glb_array("sot_opt", 64.0)
+    assert stt.area_mm2 < sram.area_mm2
+    assert stt.leakage_w < 0.05 * sram.leakage_w
+    assert stt.write_latency_ns > 3.0 * sot_opt.write_latency_ns
+
+    wl = cv_model_zoo()["resnet50"]
+    m = evaluate_system(wl, 16, build_system("stt", 64.0), "inference")
+    e_sram = evaluate_system(wl, 16, build_system("sram", 64.0), "inference")
+    assert 0 < m.energy_j < e_sram.energy_j  # leakage win dominates
+
+
+@settings(max_examples=25, deadline=None)
+@given(cap=st.floats(min_value=2.0, max_value=512.0))
+def test_hybrid_interpolates_between_constituents(cap):
+    """Every PPA metric of the composite GLB lies between its constituents'
+    values at iso-capacity (inclusive; banks may round)."""
+    hybrid = get_tech("hybrid")
+    names = [n for n, _ in hybrid.components]
+    parts = [glb_array(n, cap) for n in names]
+    mix = glb_array("hybrid", cap)
+    for f in (
+        "read_latency_ns", "write_latency_ns", "read_energy_pj_per_access",
+        "write_energy_pj_per_access", "leakage_w", "area_mm2",
+    ):
+        lo = min(getattr(p, f) for p in parts)
+        hi = max(getattr(p, f) for p in parts)
+        v = getattr(mix, f)
+        assert lo - 1e-12 <= v <= hi + 1e-12, (f, cap, lo, v, hi)
+    assert (min(p.banks for p in parts) - 1
+            <= mix.banks
+            <= max(p.banks for p in parts) + 1)
+
+
+# ---------------------------------------------------------------------------
+# Scenario API
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_round_trip(tmp_path):
+    sc = Scenario(
+        name="rt", domain="nlp", workloads=("bert",), mode="training",
+        capacities_mb=(64.0, 256.0), technologies=("sram", "sot_opt"),
+    )
+    path = str(tmp_path / "sc.json")
+    sc.save(path)
+    assert load_scenario(path) == sc
+
+
+def test_scenario_validation_errors(tmp_path):
+    with pytest.raises(ValueError, match="unknown mode"):
+        Scenario(mode="prod").validate()
+    with pytest.raises(UnknownTechnologyError):
+        Scenario(technologies=("sram", "sot_optt")).validate()
+    with pytest.raises(ValueError, match="unknown Scenario field"):
+        Scenario.from_dict({"workload": "resnet50"})  # singular typo
+    with pytest.raises(KeyError, match="unknown cv workload"):
+        Scenario(workloads=("bert",)).resolve_workloads()
+    # A batch baseline outside the grid would silently yield no ratios.
+    with pytest.raises(ValueError, match="baseline 'sram' is not"):
+        Scenario(technologies=("sot", "sot_opt")).validate()
+    # Serving sweeps one model; extra workloads must not be dropped quietly.
+    with pytest.raises(ValueError, match="one model"):
+        Scenario(mode="serving", domain="nlp",
+                 workloads=("gpt2", "bert")).validate()
+    # A serving grid may exclude the ratio baseline (no ratios are computed).
+    Scenario(mode="serving", domain="nlp", workloads=("gpt2",),
+             technologies=("sot_opt", "hybrid")).validate()
+
+
+def test_device_terms_single_source():
+    """sot_array_from_device and a device-carrying spec share one formula."""
+    dev = SOTDevice(theta_sh=2.0)
+    seed = sot_array_from_device(64.0, dev)
+    opt = get_tech("sot_opt")
+    spec = dataclasses.replace(opt, name="sot_opt_dev", device=dev)
+    built = spec.build(64.0)
+    for f in ("read_latency_ns", "write_latency_ns",
+              "read_energy_pj_per_access", "write_energy_pj_per_access"):
+        assert getattr(built, f) == getattr(seed, f)
+
+
+def test_scenario_defaults_resolve_to_paper_group():
+    sc = Scenario()
+    assert sc.resolve_technologies() == tech_group("paper")
+    smoke = sc.smoke()
+    assert len(smoke.capacities_mb) <= 4
+    assert smoke.workloads == sc.workloads[:1]
+
+
+def test_run_scenario_batch_matches_direct_grid():
+    sc = Scenario(
+        name="batch", workloads=("resnet18",), mode="inference",
+        capacities_mb=(8.0, 16.0, 32.0, 64.0),
+        technologies=("sram", "sot_opt"),
+    )
+    out = run_scenario(sc, backend="numpy")
+    assert out["kind"] == "batch"
+    (row,) = out["rows"]
+    assert row["pareto"] and row["knee_point"]["capacity_mb"] in sc.capacities_mb
+    ratios = row["ratios_vs_baseline"][64.0]
+    assert set(ratios) == {"sot_opt_energy_x", "sot_opt_latency_x"}
+    assert ratios["sot_opt_energy_x"] > 1.0
+    # The ratio equals the direct registry-driven computation bit-for-bit.
+    m = compare_technologies(
+        cv_model_zoo()["resnet18"], 16, 64.0, "inference",
+        technologies=("sram", "sot_opt"),
+    )
+    assert ratios["sot_opt_energy_x"] == improvement_ratios(m)["sot_opt_energy_x"]
+
+
+@pytest.mark.slow
+def test_run_scenario_serving_hybrid_end_to_end():
+    """A JSON-loaded hybrid-GLB serving scenario runs the closed-loop sweep
+    through the registry path (the acceptance-criteria scenario)."""
+    sc = load_scenario("examples/scenarios/serving_hybrid.json").smoke()
+    out = run_scenario(sc)
+    assert out["kind"] == "serving"
+    techs = {r["technology"] for r in out["rows"]}
+    assert techs == {"sram", "sot_opt", "hybrid"}
+    assert all(r["completed"] == r["n_requests"] for r in out["rows"])
+    assert out["knee_capacity_mb"]["hybrid"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Bench coverage gate
+# ---------------------------------------------------------------------------
+
+
+def test_check_bench_tech_coverage():
+    import json as _json
+
+    from benchmarks.check_bench import check_tech_coverage
+
+    with open("benchmarks/BENCH_serving.baseline.json") as fh:
+        baseline = _json.load(fh)
+    assert check_tech_coverage(baseline) == []
+    # Dropping a registered tech from the notes must trip the gate.
+    broken = _json.loads(_json.dumps(baseline))
+    broken["tech_coverage"]["notes"].pop("hybrid")
+    assert any("hybrid" in p for p in check_tech_coverage(broken))
