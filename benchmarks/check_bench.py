@@ -19,6 +19,12 @@ Compares a fresh benchmark record against the committed baseline:
   it is excluded).  Registering a new technology without deciding its
   serving-benchmark status fails CI until the baseline is updated.
 
+Additionally the two files' ``manifest`` blocks (``repro.obs``) are
+compared on versions/seed/config-hash: disagreement **warns** (it means a
+wall-clock delta is not necessarily a code regression — different numpy,
+different request population) but does not fail, since the whole point of
+the gate is to keep working across environment upgrades.
+
 Exit status 0 on pass, 1 on any violation (each violation is printed).
 """
 
@@ -27,6 +33,12 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+# Manifest keys whose drift makes baseline-vs-current wall clocks and
+# metrics incomparable.  git_sha/platform are intentionally absent: the
+# baseline is by definition from an older commit and another runner.
+MANIFEST_WARN_KEYS = ("schema", "seed", "config_hash", "python", "numpy",
+                      "jax")
 
 
 def check(current: dict, baseline: dict, max_regression: float) -> list[str]:
@@ -61,6 +73,21 @@ def check(current: dict, baseline: dict, max_regression: float) -> list[str]:
     return problems
 
 
+def manifest_warnings(current: dict, baseline: dict) -> list[str]:
+    """Human-readable warnings for manifest drift (never failures)."""
+    try:
+        from repro.obs import manifest_diff
+    except ImportError:  # bare-JSON invocation without the package
+        return []
+    diff = manifest_diff(current.get("manifest"), baseline.get("manifest"),
+                         keys=MANIFEST_WARN_KEYS)
+    return [
+        f"manifest: {key} differs (current {cur!r} vs baseline {base!r}) — "
+        "wall-clock/metric deltas may not be code regressions"
+        for key, (cur, base) in diff.items()
+    ]
+
+
 def check_tech_coverage(baseline: dict) -> list[str]:
     """Every registered technology must be accounted for in the baseline.
 
@@ -93,6 +120,8 @@ def main(argv=None) -> int:
         current = json.load(fh)
     with open(args.baseline) as fh:
         baseline = json.load(fh)
+    for w in manifest_warnings(current, baseline):
+        print(f"BENCH WARNING: {w}", file=sys.stderr)
     problems = check(current, baseline, args.max_regression)
     for p in problems:
         print(f"BENCH REGRESSION: {p}", file=sys.stderr)

@@ -9,9 +9,13 @@ per-benchmark detail tables.  ``--smoke`` shrinks the expensive benchmarks
 stays CI-friendly.
 
 ``--bench-json`` (default ``BENCH_serving.json``) records each run's
-wall-clock and key metrics as JSON so the perf trajectory is tracked across
-PRs; ``benchmarks/check_bench.py`` gates CI on it against the committed
-baseline.  Pass an empty string to skip the file.
+wall-clock and key metrics as JSON — manifest-stamped (git sha, seed,
+config hash, library versions via ``repro.obs``) so the perf trajectory is
+tracked across PRs *with provenance*; ``benchmarks/check_bench.py`` gates
+CI on it against the committed baseline and warns when the two manifests
+disagree on versions/seed.  Pass an empty string to skip the file.
+``--json`` emits the same payload on stdout (prose moves to stderr);
+``--quiet`` suppresses prose.
 """
 
 from __future__ import annotations
@@ -21,6 +25,8 @@ import json
 import platform
 import sys
 import time
+
+from repro import obs
 
 from benchmarks import (
     explore,
@@ -144,7 +150,10 @@ def main() -> None:
                     help="shrink the expensive benchmarks for CI")
     ap.add_argument("--bench-json", default="BENCH_serving.json",
                     help="write wall-clock + key metrics here ('' to skip)")
+    obs.add_output_args(ap)
     args = ap.parse_args()
+    obs.enable()
+    con = obs.Console.from_args(args)
 
     selected = [
         (name, fn)
@@ -152,53 +161,58 @@ def main() -> None:
         if not args.only or args.only in name
     ]
     if not selected:
-        print(f"no benchmark matches --only {args.only!r}", file=sys.stderr)
+        con.error(f"no benchmark matches --only {args.only!r}")
         sys.exit(2)
 
-    print("name,us_per_call,derived")
+    con.info("name,us_per_call,derived")
     details = []
     failures = []
     bench_entries = {}
     for name, fn in selected:
         try:
-            if args.smoke and name in SMOKE_AWARE:
-                rows, us = timed(fn, smoke=True)
-            else:
-                rows, us = timed(fn)
+            with obs.span(f"bench/{name}"):
+                if args.smoke and name in SMOKE_AWARE:
+                    rows, us = timed(fn, smoke=True)
+                else:
+                    rows, us = timed(fn)
         except Exception as e:
             failures.append((name, e))
             # Keep the headline CSV 3-column: strip commas/newlines from the
             # message (full detail goes to stderr below).
             msg = str(e).split("\n", 1)[0].replace(",", ";")
-            print(f"{name},FAILED,{type(e).__name__}:{msg}")
+            con.info(f"{name},FAILED,{type(e).__name__}:{msg}")
             continue
         base = name.split("_inf")[0].split("_train")[0] if name.startswith("fig09") else name
-        print(f"{name},{us:.0f},{_derive(base, rows)}")
+        con.info(f"{name},{us:.0f},{_derive(base, rows)}")
         details.append((name, rows))
         if name == "serving_qps":
             bench_entries[name] = serving_qps.bench_payload(rows, us)
         else:
             bench_entries[name] = {"us_per_call": round(us, 1)}
+    payload = {
+        "schema": 1,
+        "created_unix": int(time.time()),
+        "smoke": args.smoke,
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "benchmarks": bench_entries,
+    }
+    # The manifest's seed is the serving request-population seed — the one
+    # RNG input whose drift silently changes every serving metric.
+    obs.stamp(payload, seed=serving_qps.SEED,
+              config={"smoke": args.smoke, "only": args.only})
     if args.bench_json:
-        payload = {
-            "schema": 1,
-            "created_unix": int(time.time()),
-            "smoke": args.smoke,
-            "platform": platform.platform(),
-            "python": platform.python_version(),
-            "benchmarks": bench_entries,
-        }
         with open(args.bench_json, "w") as fh:
-            json.dump(payload, fh, indent=2)
-        print(f"# wrote {args.bench_json} ({len(bench_entries)} entries)",
-              file=sys.stderr)
+            json.dump(payload, fh, indent=2, default=obs.json_default)
+        con.info(f"# wrote {args.bench_json} ({len(bench_entries)} entries)")
+    con.result(payload)
     if args.full:
         for name, rows in details:
-            print(f"\n## {name}")
-            print(rows_to_csv(rows))
+            con.info(f"\n## {name}")
+            con.info(rows_to_csv(rows))
     if failures:
         for name, e in failures:
-            print(f"FAILED {name}: {type(e).__name__}: {e}", file=sys.stderr)
+            con.error(f"FAILED {name}: {type(e).__name__}: {e}")
         sys.exit(1)
 
 

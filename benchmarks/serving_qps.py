@@ -41,6 +41,9 @@ TECHS = tech_group("paper")
 QPS_SWEEP = (100.0, 200.0, 400.0, 800.0, 1600.0)
 SMOKE_TECHS = tech_group("serving")
 SMOKE_QPS_SWEEP = (200.0, 800.0)
+# The request-population seed; stamped into BENCH_serving.json's manifest so
+# check_bench can flag a baseline drawn from a different population.
+SEED = 3
 
 
 def run(smoke: bool = False, glb_mb: float = 64.0) -> list[dict]:
@@ -49,7 +52,7 @@ def run(smoke: bool = False, glb_mb: float = 64.0) -> list[dict]:
         n_requests=12 if smoke else 32,
         prompt_len=128 if smoke else 512,
         decode_len=32 if smoke else 64,
-        seed=3,
+        seed=SEED,
     )
     ecfg = ServeEngineConfig(max_batch=8 if smoke else 16)
     techs = SMOKE_TECHS if smoke else TECHS

@@ -295,7 +295,7 @@ def _eval_arrays(sizes, caps, ppa_fields, t_compute, modes, mem, dram, xp):
 
 
 def evaluate_serving_slo(spec, mode: str = "shared",
-                         backend: str = "numpy") -> dict:
+                         backend: str = "numpy", recorder=None) -> dict:
     """Serving mode of the DSE grid: closed-loop SLO sweep + knee.
 
     Unlike the closed-form ``evaluate_workload_grid``, serving points are
@@ -303,12 +303,14 @@ def evaluate_serving_slo(spec, mode: str = "shared",
     the bank-level simulator — see :mod:`repro.dse.serving` for the spec and
     row schema.  ``mode``/``backend`` route through the shared-grid sweep
     engine (one schedule per capacity, priced per technology when the
-    schedule-invariance certificate holds).  Returns ``{"rows": [...],
-    "knee_capacity_mb": {...}, "best": {...}}``.
+    schedule-invariance certificate holds).  ``recorder`` taps the first
+    grid point's timeline (read-only; rows unchanged).  Returns ``{"rows":
+    [...], "knee_capacity_mb": {...}, "best": {...}}``.
     """
     from repro.dse.serving import evaluate_serving_grid, slo_knee
 
-    rows = evaluate_serving_grid(spec, mode=mode, backend=backend)
+    rows = evaluate_serving_grid(spec, mode=mode, backend=backend,
+                                 recorder=recorder)
     return {"rows": rows, **slo_knee(rows)}
 
 

@@ -76,7 +76,8 @@ class ServingSweepSpec:
 
 
 def evaluate_serving_grid(
-    spec: ServingSweepSpec, mode: str = "shared", backend: str = "numpy"
+    spec: ServingSweepSpec, mode: str = "shared", backend: str = "numpy",
+    recorder=None,
 ) -> list[dict]:
     """Closed-loop-exact evaluation of every (technology, capacity) point.
 
@@ -90,6 +91,10 @@ def evaluate_serving_grid(
     schedule-invariance certificate holds, falling back to a per-point
     closed loop when it does not — the rows are identical either way
     (``mode="exact"`` forces the fallback path everywhere).
+
+    ``recorder`` (a :class:`repro.obs.TimelineRecorder`) captures the first
+    grid point's timeline — see :func:`repro.serve.sweep.sweep_serving_grid`;
+    rows are bit-identical with or without it.
     """
     from repro.serve import ServeEngineConfig
     from repro.serve.sweep import ServingGridSpec, sweep_serving_grid
@@ -103,7 +108,8 @@ def evaluate_serving_grid(
         serving=dataclasses.replace(base, arrival_rate_rps=spec.qps),
         engine=spec.engine or ServeEngineConfig(),
     )
-    sweep = sweep_serving_grid(grid, mode=mode, backend=backend)
+    sweep = sweep_serving_grid(grid, mode=mode, backend=backend,
+                               recorder=recorder)
     by_point = {(r.technology, r.capacity_mb): r for r in sweep}
     rows = []
     for tech in spec.technologies:

@@ -30,6 +30,11 @@ Technologies resolve through the ``repro.spec`` registry: ``--tech`` (or
 ``stt``, ``hybrid``, or anything the user registered), and ``--scenario
 path.json`` loads a full :class:`repro.spec.Scenario` from disk and runs
 it end to end (``--smoke`` shrinks it to a CI-sized grid).
+
+Observability (``repro.obs``): ``--trace-out trace.json`` on ``--serving``
+writes the first grid point's simulated-time timeline as Perfetto JSON;
+``--json`` emits one manifest-stamped JSON record on stdout; ``--quiet``
+suppresses prose.  Recording never changes the reported rows.
 """
 
 from __future__ import annotations
@@ -38,6 +43,7 @@ import argparse
 import sys
 import time
 
+from repro import obs
 from repro.core.stco import knee_capacity
 from repro.core.workload import cv_model_zoo, nlp_model_zoo
 from repro.dse import (
@@ -105,7 +111,8 @@ def explore(
     rows = []
     for name, wl in workloads.items():
         t0 = time.perf_counter()
-        grid = evaluate_workload_grid(wl, spec, backend=backend)
+        with obs.span("dse/grid"):
+            grid = evaluate_workload_grid(wl, spec, backend=backend)
         eval_ms = (time.perf_counter() - t0) * 1e3
         for mode in spec.modes:
             # Knee of the DRAM-access curve (technology-independent).
@@ -141,22 +148,23 @@ def explore(
                     },
                 }
                 if refine:
-                    row["refined"] = refine_front(
-                        wl, batch, mode,
-                        [(labels[i][0], labels[i][1]) for i in front],
-                        d_w=spec.d_w, tile_bytes=tile_bytes,
-                    )
+                    with obs.span("dse/refine"):
+                        row["refined"] = refine_front(
+                            wl, batch, mode,
+                            [(labels[i][0], labels[i][1]) for i in front],
+                            d_w=spec.d_w, tile_bytes=tile_bytes,
+                        )
                 rows.append(row)
     return rows
 
 
-def _print_row(row: dict, full: bool) -> None:
+def _print_row(con: "obs.Console", row: dict, full: bool) -> None:
     kp = row["knee_point"]
-    print(
+    con.info(
         f"# {row['workload']} {row['mode']} batch={row['batch']} "
         f"({row['n_points']} points, {row['eval_ms']:.1f} ms, {row['backend']})"
     )
-    print(
+    con.info(
         f"  dram-curve knee      : {row['knee_capacity_mb']} MB\n"
         f"  pareto frontier      : {len(row['pareto'])} points\n"
         f"  knee point           : {kp['technology']}@{kp['capacity_mb']}MB "
@@ -165,12 +173,12 @@ def _print_row(row: dict, full: bool) -> None:
     )
     if full:
         for p in row["pareto"]:
-            print(
+            con.info(
                 f"    {p['technology']:>16}@{p['capacity_mb']:<6} "
                 f"E={p['energy_j']:.3e} L={p['latency_s']:.3e} A={p['area_mm2']:.1f}"
             )
     for r in row.get("refined", []):
-        print(
+        con.info(
             f"  sim-refined          : {r['technology']}@{r['capacity_mb']}MB "
             f"latency={r['sim_latency_s']:.3e} s "
             f"(analytic err {r['latency_rel_err'] * 100:.1f}%, "
@@ -185,6 +193,7 @@ def explore_serving(args) -> int:
     from repro.serve import ServeEngineConfig
     from repro.sim import ServingConfig
 
+    con = obs.Console.from_args(args)
     if args.smoke:
         spec = ServingSweepSpec(
             capacities_mb=(32.0, 64.0, 128.0, 256.0),
@@ -203,8 +212,8 @@ def explore_serving(args) -> int:
         nlp_names = {s.name for s in NLP_TABLE_V}
         requested = [n for n in _parse_list(args.models) if n in nlp_names]
         if len(requested) > 1:
-            print(f"serving DSE sweeps one model; using {requested[0]!r} "
-                  f"(ignoring {requested[1:]})", file=sys.stderr)
+            con.warn(f"serving DSE sweeps one model; using {requested[0]!r} "
+                     f"(ignoring {requested[1:]})")
         spec = ServingSweepSpec(
             capacities_mb=_parse_list(args.caps, float),
             technologies=_resolve_techs(args, tech_group("paper")),
@@ -215,73 +224,97 @@ def explore_serving(args) -> int:
             serving=ServingConfig(n_requests=args.requests, seed=args.seed),
             engine=ServeEngineConfig(max_batch=args.max_batch),
         )
+    recorder = obs.TimelineRecorder() if args.trace_out else None
     t0 = time.perf_counter()
     backend = "jax" if args.backend == "jax" else "numpy"
-    out = evaluate_serving_slo(spec, mode=args.sweep_mode, backend=backend)
+    with obs.span("dse/serving"):
+        out = evaluate_serving_slo(spec, mode=args.sweep_mode, backend=backend,
+                                   recorder=recorder)
     dt = time.perf_counter() - t0
     n_shared = sum(bool(r.get("schedule_shared")) for r in out["rows"])
-    print(f"# serving DSE {spec.model} @ {spec.qps:.0f} rps "
-          f"(SLO: TTFT p99 <= {spec.slo.ttft_p99_ms} ms, "
-          f"TPOT p99 <= {spec.slo.tpot_p99_ms} ms; {dt:.1f}s, "
-          f"{n_shared}/{len(out['rows'])} points off the shared schedule)")
-    ok = _print_serving_rows(out)
+    con.info(f"# serving DSE {spec.model} @ {spec.qps:.0f} rps "
+             f"(SLO: TTFT p99 <= {spec.slo.ttft_p99_ms} ms, "
+             f"TPOT p99 <= {spec.slo.tpot_p99_ms} ms; {dt:.1f}s, "
+             f"{n_shared}/{len(out['rows'])} points off the shared schedule)")
+    ok = _print_serving_rows(con, out)
+    seed = spec.serving.seed if spec.serving else None
+    if recorder is not None:
+        doc = recorder.save(args.trace_out, manifest=obs.run_manifest(
+            seed=seed, config=spec))
+        con.info(f"wrote {args.trace_out} ({len(doc['traceEvents'])} events; "
+                 "first grid point's timeline)")
+    record = {"cli": "explore", "objective": "serving_slo", "wall_s": dt,
+              "rows": out["rows"], "knee_capacity_mb": out["knee_capacity_mb"],
+              "best": out["best"], "ok": ok}
+    if args.trace_out:
+        record["trace_out"] = args.trace_out
+    con.result(obs.stamp(record, seed=seed, config=spec))
     if args.smoke:
-        print("smoke OK" if ok else "smoke FAILED")
+        con.info("smoke OK" if ok else "smoke FAILED")
     return 0 if ok else 1
 
 
-def _print_serving_rows(out: dict) -> bool:
+def _print_serving_rows(con: "obs.Console", out: dict) -> bool:
     """Print SLO sweep rows + knees; True iff any technology holds the SLO."""
     multi_qps = len({r["qps"] for r in out["rows"]}) > 1
     for r in out["rows"]:
         mark = "ok " if r["slo_ok"] else "SLO"
         at_qps = f" @{r['qps']:.0f}rps" if multi_qps else ""
-        print(f"  [{mark}] {r['technology']:>8}@{r['capacity_mb']:<6.0f}{at_qps} "
-              f"ttft_p99={r['ttft_p99_ms']:.2f}ms tpot_p99={r['tpot_p99_ms']:.3f}ms "
-              f"residency={r['residency'] * 100:.0f}% "
-              f"energy={r['energy_j']:.3e}J")
+        con.info(f"  [{mark}] {r['technology']:>8}@{r['capacity_mb']:<6.0f}{at_qps} "
+                 f"ttft_p99={r['ttft_p99_ms']:.2f}ms tpot_p99={r['tpot_p99_ms']:.3f}ms "
+                 f"residency={r['residency'] * 100:.0f}% "
+                 f"energy={r['energy_j']:.3e}J")
     knee_qps = f" @{max(r['qps'] for r in out['rows']):.0f}rps" if multi_qps else ""
     for tech, cap in out["knee_capacity_mb"].items():
         knee = f"{cap:.0f} MB" if cap is not None else "none (SLO unmet)"
-        print(f"  SLO-knee capacity{knee_qps}: {tech:>8} -> {knee}")
+        con.info(f"  SLO-knee capacity{knee_qps}: {tech:>8} -> {knee}")
     best = out["best"]
     if best is not None:
-        print(f"  min-energy SLO point : {best['technology']}@"
-              f"{best['capacity_mb']:.0f}MB energy={best['energy_j']:.3e}J")
+        con.info(f"  min-energy SLO point : {best['technology']}@"
+                 f"{best['capacity_mb']:.0f}MB energy={best['energy_j']:.3e}J")
     return any(cap is not None for cap in out["knee_capacity_mb"].values())
 
 
 def explore_scenario(args) -> int:
     """Run a JSON-loaded ``repro.spec.Scenario`` end to end (--scenario)."""
+    con = obs.Console.from_args(args)
+    if args.trace_out:
+        con.warn("--trace-out applies to --serving runs only; ignoring it "
+                 "for --scenario")
     sc = load_scenario(args.scenario)
     if args.smoke:
         sc = sc.smoke()
     t0 = time.perf_counter()
-    out = run_scenario(sc, backend=args.backend)
+    with obs.span("scenario"):
+        out = run_scenario(sc, backend=args.backend)
     dt = time.perf_counter() - t0
     techs = ",".join(sc.resolve_technologies())
     qps = (" qps=" + ",".join(f"{q:g}" for q in sc.qps)
            if sc.mode == "serving" else "")
-    print(f"# scenario {sc.name!r}: mode={sc.mode} techs={techs}{qps} "
-          f"({dt:.1f}s)")
+    con.info(f"# scenario {sc.name!r}: mode={sc.mode} techs={techs}{qps} "
+             f"({dt:.1f}s)")
     if out["kind"] == "serving":
-        ok = _print_serving_rows(out)
+        ok = _print_serving_rows(con, out)
     else:
         ok = bool(out["rows"])
         for row in out["rows"]:
             kp = row["knee_point"]
-            print(f"  {row['workload']} {row['mode']} batch={row['batch']}: "
-                  f"dram-knee {row['knee_capacity_mb']:g} MB, "
-                  f"{len(row['pareto'])} pareto pts, "
-                  f"knee {kp['technology']}@{kp['capacity_mb']:g}MB")
+            con.info(f"  {row['workload']} {row['mode']} batch={row['batch']}: "
+                     f"dram-knee {row['knee_capacity_mb']:g} MB, "
+                     f"{len(row['pareto'])} pareto pts, "
+                     f"knee {kp['technology']}@{kp['capacity_mb']:g}MB")
             for cap, ratios in row["ratios_vs_baseline"].items():
                 pairs = " ".join(f"{k}={v:.2f}" for k, v in ratios.items())
-                print(f"    @{cap:g}MB vs {sc.baseline}: {pairs}")
+                con.info(f"    @{cap:g}MB vs {sc.baseline}: {pairs}")
             ok = ok and bool(row["pareto"])
+    record = {"cli": "explore", "objective": "scenario",
+              "scenario": sc.name, "mode": sc.mode, "wall_s": dt,
+              "rows": out["rows"], "ok": ok}
+    con.result(obs.stamp(record, config=sc))
     # Same contract as --serving: exit 1 when the scenario yields nothing
     # usable (no SLO-holding point / empty frontier), smoke or not.
     if args.smoke:
-        print("smoke OK" if ok else "smoke FAILED")
+        con.info("smoke OK" if ok else "smoke FAILED")
     return 0 if ok else 1
 
 
@@ -325,7 +358,13 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--seed", type=int, default=2)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="with --serving: write the first grid point's "
+                         "timeline as Perfetto/Chrome-trace JSON")
+    obs.add_output_args(ap)
     args = ap.parse_args(argv)
+    obs.enable()
+    con = obs.Console.from_args(args)
 
     if args.scenario:
         return explore_scenario(args)
@@ -343,12 +382,14 @@ def main(argv=None) -> int:
         rows = explore(_workloads("cv", "resnet18"), spec,
                        backend=args.backend, refine=True, tile_bytes=65536)
         for row in rows:
-            _print_row(row, full=True)
+            _print_row(con, row, full=True)
         ok = all(row["pareto"] for row in rows) and all(
             r["latency_rel_err"] < 0.25
             for row in rows for r in row.get("refined", [])
         )
-        print("smoke OK" if ok else "smoke FAILED")
+        con.result(obs.stamp({"cli": "explore", "objective": "workload_grid",
+                              "rows": rows, "ok": ok}, config=spec))
+        con.info("smoke OK" if ok else "smoke FAILED")
         return 0 if ok else 1
 
     spec = GridSpec(
@@ -362,10 +403,12 @@ def main(argv=None) -> int:
         backend=args.backend, refine=args.refine, tile_bytes=args.tile_bytes,
     )
     if not rows:
-        print("nothing to explore", file=sys.stderr)
+        con.error("nothing to explore")
         return 2
     for row in rows:
-        _print_row(row, full=args.full)
+        _print_row(con, row, full=args.full)
+    con.result(obs.stamp({"cli": "explore", "objective": "workload_grid",
+                          "rows": rows, "ok": True}, config=spec))
     return 0
 
 

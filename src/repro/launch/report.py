@@ -1,0 +1,159 @@
+"""Render metrics/BENCH JSON artifacts as markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.report metrics.json
+
+    PYTHONPATH=src python -m repro.launch.report run_a.json run_b.json
+
+Works on any JSON the repro CLIs emit — ``serve_sim``/``simulate``/
+``explore --json`` result records, ``benchmarks/run.py --bench-json``
+snapshots, Perfetto trace files (their ``otherData`` block) — without a
+per-producer schema: top-level scalars become a summary table, every
+list-of-dicts field (``rows``, ``pareto``, ``refined``, ...) becomes its
+own table, a ``benchmarks`` mapping becomes a name-keyed table, and the
+``manifest`` block renders as provenance.
+
+With **two** files the manifest comparison leads the output: every
+comparable key (git sha, seed, config hash, library versions — see
+``repro.obs.COMPARABLE_KEYS``) that differs is tabled, which is the first
+thing to check before reading a metric delta as a regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.manifest import COMPARABLE_KEYS, manifest_diff
+
+_MAX_ROWS = 50
+
+
+def _fmt(v) -> str:
+    """One table cell: compact numbers, flat containers elided."""
+    if isinstance(v, bool) or v is None:
+        return str(v)
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    if isinstance(v, (dict, list)):
+        return f"<{type(v).__name__}[{len(v)}]>"
+    return str(v).replace("|", "\\|").replace("\n", " ")
+
+
+def _table(headers: list[str], rows: list[list[str]]) -> list[str]:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    out += ["| " + " | ".join(r) + " |" for r in rows]
+    return out
+
+
+def _kv_table(d: dict, title: str) -> list[str]:
+    rows = [[str(k), _fmt(v)] for k, v in d.items()
+            if not isinstance(v, (dict, list))]
+    if not rows:
+        return []
+    return [f"## {title}", ""] + _table(["key", "value"], rows) + [""]
+
+
+def _rows_table(name: str, rows: list[dict]) -> list[str]:
+    """A list of dicts as one table (union of scalar columns, first-seen
+    order); truncated at ``_MAX_ROWS`` with an explicit footnote."""
+    cols: list[str] = []
+    for r in rows:
+        for k, v in r.items():
+            if not isinstance(v, (dict, list)) and k not in cols:
+                cols.append(k)
+    if not cols:
+        return []
+    body = [[_fmt(r.get(c)) for c in cols] for r in rows[:_MAX_ROWS]]
+    out = [f"## {name} ({len(rows)} rows)", ""] + _table(cols, body)
+    if len(rows) > _MAX_ROWS:
+        out.append(f"\n*... {len(rows) - _MAX_ROWS} more rows elided*")
+    return out + [""]
+
+
+def render(doc: dict, title: str) -> list[str]:
+    """Markdown sections for one artifact."""
+    if "traceEvents" in doc:  # Perfetto export: only otherData is tabular
+        inner = dict(doc.get("otherData", {}))
+        inner.setdefault("n_trace_events", len(doc["traceEvents"]))
+        doc = inner
+    out = [f"# {title}", ""]
+    out += _kv_table(doc, "summary")
+    bench = doc.get("benchmarks")
+    if isinstance(bench, dict):
+        rows = [{"benchmark": name, **vals}
+                for name, vals in sorted(bench.items())
+                if isinstance(vals, dict)]
+        out += _rows_table("benchmarks", rows)
+    for key, val in doc.items():
+        if key == "benchmarks":
+            continue
+        if isinstance(val, list) and val and all(isinstance(r, dict) for r in val):
+            out += _rows_table(key, val)
+        elif isinstance(val, dict) and key not in ("manifest",):
+            out += _kv_table(val, key)
+    manifest = doc.get("manifest")
+    if isinstance(manifest, dict):
+        out += _kv_table(manifest, "manifest")
+        phases = manifest.get("phases_s")
+        if isinstance(phases, dict) and phases:
+            out += _rows_table("manifest.phases_s",
+                               [{"phase": k, "seconds": v}
+                                for k, v in phases.items()])
+    return out
+
+
+def render_diff(a: dict, b: dict, name_a: str, name_b: str) -> list[str]:
+    """Manifest comparison section for a two-file invocation."""
+    ma = a.get("manifest") if isinstance(a, dict) else None
+    mb = b.get("manifest") if isinstance(b, dict) else None
+    out = ["# manifest comparison", ""]
+    diff = manifest_diff(ma, mb)
+    if not ma and not mb:
+        return out + ["*neither artifact carries a manifest*", ""]
+    if not diff:
+        keys = ", ".join(COMPARABLE_KEYS)
+        return out + [f"*manifests agree on all comparable keys ({keys}) — "
+                      "metric deltas are comparable*", ""]
+    rows = [[k, _fmt(va), _fmt(vb)] for k, (va, vb) in diff.items()]
+    return out + (
+        ["**Manifests disagree — metric deltas below may not be "
+         "regressions:**", ""]
+        + _table(["key", name_a, name_b], rows) + [""]
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", metavar="FILE",
+                    help="one or two JSON artifacts (two: manifest diff first)")
+    args = ap.parse_args(argv)
+    if len(args.paths) > 2:
+        ap.error("pass one file to render or two to compare")
+    docs = []
+    for path in args.paths:
+        with open(path) as fh:
+            doc = json.load(fh)
+        if not isinstance(doc, dict):
+            print(f"{path}: top-level JSON is not an object", file=sys.stderr)
+            return 2
+        docs.append(doc)
+    lines: list[str] = []
+    if len(docs) == 2:
+        lines += render_diff(docs[0], docs[1], args.paths[0], args.paths[1])
+    for path, doc in zip(args.paths, docs):
+        lines += render(doc, path)
+    try:
+        print("\n".join(lines).rstrip())
+    except BrokenPipeError:  # `report ... | head` closing stdout is fine
+        sys.stderr.close()   # suppress the interpreter's flush-time warning
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,14 +11,22 @@ schedule to a bank-accurate event stream, replays it with ``repro.sim``,
 and reports TTFT/TPOT p50/p99, bank-conflict rate, and GLB page residency.
 ``--cross-validate`` additionally generates the open-loop ``serving_trace``
 at the same seed/config and prints the aggregate byte-count agreement.
+
+Observability (``repro.obs``): ``--trace-out trace.json`` writes a
+Perfetto-loadable simulated-time timeline of the run (bank busy intervals,
+request lifecycles, residency/spill counters); ``--json`` emits one
+manifest-stamped JSON record on stdout (prose moves to stderr); ``--quiet``
+suppresses prose.  Recording never changes the reported metrics.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
+from repro import obs
 from repro.core.workload import NLP_TABLE_V
 from repro.serve import ServeEngineConfig, closed_loop_serving, summarize_report
 from repro.sim import ServingConfig, SimConfig, serving_trace
@@ -27,15 +35,16 @@ from repro.spec import UnknownTechnologyError, build_system, list_techs
 
 
 def run(args) -> int:
+    con = obs.Console.from_args(args)
     specs = {s.name: s for s in NLP_TABLE_V}
     if args.model not in specs:
-        print(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
+        con.error(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
         return 2
     spec = specs[args.model]
     try:
         system = build_system(args.tech, args.glb_mb)
     except UnknownTechnologyError as e:
-        print(e)
+        con.error(str(e))
         return 2
     cfg = ServingConfig(
         n_requests=args.requests,
@@ -50,45 +59,89 @@ def run(args) -> int:
         prefill_chunk=args.prefill_chunk,
         page_tokens=args.page_tokens,
     )
+    manifest_config = {"model": args.model, "tech": args.tech,
+                      "glb_mb": args.glb_mb, "serving": cfg, "engine": ecfg,
+                      "lowering": args.lowering}
+    recorder = obs.TimelineRecorder() if args.trace_out else None
     t0 = time.time()
     sim_config = None
     if args.coalesce_window_ns is not None:
         sim_config = SimConfig(coalesce_window_ns=args.coalesce_window_ns,
                                backend=args.backend, kind_stats=False)
-    trace, report = closed_loop_serving(system, spec, cfg, ecfg,
-                                        sim_config=sim_config,
-                                        lowering=args.lowering)
+    with obs.span("serve"):
+        trace, report = closed_loop_serving(system, spec, cfg, ecfg,
+                                            sim_config=sim_config,
+                                            lowering=args.lowering,
+                                            recorder=recorder)
     dt = time.time() - t0
-    print(f"# serve_sim {args.model} {args.tech}@{args.glb_mb}MB "
-          f"{args.requests} reqs @ {args.qps}/s max_batch={args.max_batch} "
-          f"({len(trace)} events, {dt:.1f}s, {args.lowering} lowering)")
-    print(f"token interval       : {trace.meta['token_interval_ns'] / 1e3:.1f} us")
-    print(summarize_report(report))
+    con.info(f"# serve_sim {args.model} {args.tech}@{args.glb_mb}MB "
+             f"{args.requests} reqs @ {args.qps}/s max_batch={args.max_batch} "
+             f"({len(trace)} events, {dt:.1f}s, {args.lowering} lowering)")
+    con.info(f"token interval       : {trace.meta['token_interval_ns'] / 1e3:.1f} us")
+    con.info(summarize_report(report))
+
+    rc = 0
+    record = {
+        "cli": "serve_sim",
+        "model": args.model,
+        "technology": args.tech,
+        "glb_mb": args.glb_mb,
+        "lowering": args.lowering,
+        "n_events": len(trace),
+        "wall_s": dt,
+        "report": _report_record(report),
+    }
 
     if args.cross_validate:
         open_trace = serving_trace(system, spec, cfg)
         b_open = trace_byte_counts(open_trace, system)
         b_closed = report.bytes
-        print("byte-count agreement vs open-loop serving_trace:")
+        con.info("byte-count agreement vs open-loop serving_trace:")
         worst = 0.0
         for key in ("glb_bytes", "dram_bytes"):
             rel = abs(b_closed[key] - b_open[key]) / max(b_open[key], 1.0)
             worst = max(worst, rel)
-            print(f"  {key:12s}: closed {b_closed[key] / 1e6:.1f} MB "
-                  f"vs open {b_open[key] / 1e6:.1f} MB (rel err {rel * 100:.2f}%)")
+            con.info(f"  {key:12s}: closed {b_closed[key] / 1e6:.1f} MB "
+                     f"vs open {b_open[key] / 1e6:.1f} MB (rel err {rel * 100:.2f}%)")
         if report.kv_spill_read_frac > 0.05:
-            print(f"  note: {report.kv_spill_read_frac * 100:.0f}% of KV reads "
-                  "spill — the open loop's scalar spill_frac and the paged "
-                  "allocator legitimately diverge here; compare at a "
-                  "capacity that holds the working set")
+            con.info(f"  note: {report.kv_spill_read_frac * 100:.0f}% of KV reads "
+                     "spill — the open loop's scalar spill_frac and the paged "
+                     "allocator legitimately diverge here; compare at a "
+                     "capacity that holds the working set")
+        record["cross_validate"] = {"worst_rel_err": worst,
+                                    "tolerance": args.tolerance}
         if worst > args.tolerance:
-            print(f"FAIL: byte agreement outside {args.tolerance * 100:.0f}%")
-            return 1
-        print("cross-validation OK")
+            con.error(f"FAIL: byte agreement outside {args.tolerance * 100:.0f}%")
+            rc = 1
+        else:
+            con.info("cross-validation OK")
     if report.completed != report.n_requests:
-        print("FAIL: not all requests completed")
-        return 1
-    return 0
+        con.error("FAIL: not all requests completed")
+        rc = 1
+
+    if recorder is not None:
+        doc = recorder.save(args.trace_out, manifest=obs.run_manifest(
+            seed=args.seed, config=manifest_config))
+        con.info(f"wrote {args.trace_out} ({len(doc['traceEvents'])} events, "
+                 f"{doc['otherData']['n_requests']} request tracks)")
+        record["trace_out"] = args.trace_out
+    record["ok"] = rc == 0
+    con.result(obs.stamp(record, seed=args.seed, config=manifest_config))
+    return rc
+
+
+def _report_record(report) -> dict:
+    """The ServeReport as a JSON-ready dict (SimResult flattened shallow)."""
+    d = {f.name: getattr(report, f.name)
+         for f in dataclasses.fields(report) if f.name != "sim"}
+    d["sim"] = {
+        "latency_s": report.sim.latency_s,
+        "energy_j": report.sim.energy_j,
+        "n_simulated": report.sim.n_simulated,
+        "p99_latency_ns": report.sim.p99_latency_ns,
+        "glb_utilization": report.sim.glb_utilization,
+    }
+    return d
 
 
 def main(argv=None) -> int:
@@ -116,16 +169,22 @@ def main(argv=None) -> int:
     ap.add_argument("--cross-validate", action="store_true",
                     help="compare aggregate bytes against serving_trace")
     ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome-trace JSON timeline of the "
+                         "run (metrics are unchanged by recording)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast end-to-end check (tiny workload + cross-validation)")
+    obs.add_output_args(ap)
     args = ap.parse_args(argv)
+    obs.enable()
+    con = obs.Console.from_args(args)
 
     if args.smoke:
         args.requests, args.prompt_len, args.decode_len = 12, 64, 32
         args.qps, args.max_batch = 300.0, 8
         args.cross_validate = True
         rc = run(args)
-        print("smoke OK" if rc == 0 else "smoke FAILED")
+        con.info("smoke OK" if rc == 0 else "smoke FAILED")
         return rc
     return run(args)
 

@@ -12,6 +12,11 @@ Scenarios ``cv_inference``/``cv_training``/``nlp_inference``/``nlp_training``
 replay an Algorithm-1/2 schedule and cross-validate against the analytic
 ``evaluate_system`` model; ``serving`` replays an open-loop LLM prefill +
 decode KV-cache trace that the analytic model cannot express.
+
+Observability (``repro.obs``): ``--trace-out trace.json`` writes the
+replay's bank timeline as Perfetto-loadable Chrome-trace JSON; ``--json``
+emits one manifest-stamped JSON record on stdout; ``--quiet`` suppresses
+prose.  Recording never changes the reported metrics.
 """
 
 from __future__ import annotations
@@ -20,6 +25,7 @@ import argparse
 import sys
 import time
 
+from repro import obs
 from repro.core.workload import NLP_TABLE_V, cv_model_zoo, nlp_model_zoo
 from repro.sim import (
     ServingConfig,
@@ -39,48 +45,74 @@ WORKLOAD_SCENARIOS = {
 }
 
 
+def _save_trace(recorder, args, con, record, config) -> None:
+    if recorder is None:
+        return
+    doc = recorder.save(args.trace_out, manifest=obs.run_manifest(
+        seed=args.seed, config=config))
+    con.info(f"wrote {args.trace_out} ({len(doc['traceEvents'])} events)")
+    record["trace_out"] = args.trace_out
+
+
 def run_workload_scenario(args) -> int:
+    con = obs.Console.from_args(args)
     domain, mode = WORKLOAD_SCENARIOS[args.scenario]
     zoo = cv_model_zoo() if domain == "cv" else nlp_model_zoo()
     if args.model not in zoo:
-        print(f"unknown {domain} model {args.model!r}; have {sorted(zoo)}")
+        con.error(f"unknown {domain} model {args.model!r}; have {sorted(zoo)}")
         return 2
     try:
         system = build_system(args.tech, args.glb_mb)
     except UnknownTechnologyError as e:
-        print(e)
+        con.error(str(e))
         return 2
+    config = {"scenario": args.scenario, "model": args.model,
+              "tech": args.tech, "glb_mb": args.glb_mb, "batch": args.batch,
+              "tile_bytes": args.tile_bytes}
+    recorder = obs.TimelineRecorder() if args.trace_out else None
     t0 = time.time()
     window = args.coalesce_window_ns if args.coalesce_window_ns is not None else 0.0
-    r = cross_validate(
-        zoo[args.model], args.batch, system, mode, tile_bytes=args.tile_bytes,
-        sim_config=SimConfig(coalesce_window_ns=window, backend=args.backend),
-    )
+    with obs.span("simulate"):
+        r = cross_validate(
+            zoo[args.model], args.batch, system, mode,
+            tile_bytes=args.tile_bytes,
+            sim_config=SimConfig(coalesce_window_ns=window,
+                                 backend=args.backend),
+            recorder=recorder,
+        )
     dt = time.time() - t0
-    print(f"# {args.scenario} {args.model} {args.tech}@{args.glb_mb}MB "
-          f"batch={args.batch} ({r['n_events']} events, {dt:.1f}s)")
-    print(summarize(r["sim"]))
-    print(f"analytic latency     : {r['analytic_latency_s'] * 1e3:.3f} ms "
-          f"(rel err {r['latency_rel_err'] * 100:.2f}%)")
-    print(f"analytic energy      : {r['analytic_energy_j'] * 1e3:.3f} mJ "
-          f"(rel err {r['energy_rel_err'] * 100:.2f}%)")
+    con.info(f"# {args.scenario} {args.model} {args.tech}@{args.glb_mb}MB "
+             f"batch={args.batch} ({r['n_events']} events, {dt:.1f}s)")
+    con.info(summarize(r["sim"]))
+    con.info(f"analytic latency     : {r['analytic_latency_s'] * 1e3:.3f} ms "
+             f"(rel err {r['latency_rel_err'] * 100:.2f}%)")
+    con.info(f"analytic energy      : {r['analytic_energy_j'] * 1e3:.3f} mJ "
+             f"(rel err {r['energy_rel_err'] * 100:.2f}%)")
+    record = {"cli": "simulate", "wall_s": dt,
+              **{k: v for k, v in r.items() if k not in ("sim", "analytic")}}
     tol = args.tolerance
+    rc = 0
     if r["latency_rel_err"] > tol or r["energy_rel_err"] > tol:
-        print(f"FAIL: cross-validation outside {tol * 100:.0f}% tolerance")
-        return 1
-    print("cross-validation OK")
-    return 0
+        con.error(f"FAIL: cross-validation outside {tol * 100:.0f}% tolerance")
+        rc = 1
+    else:
+        con.info("cross-validation OK")
+    _save_trace(recorder, args, con, record, config)
+    record["ok"] = rc == 0
+    con.result(obs.stamp(record, seed=args.seed, config=config))
+    return rc
 
 
 def run_serving_scenario(args) -> int:
+    con = obs.Console.from_args(args)
     specs = {s.name: s for s in NLP_TABLE_V}
     if args.model not in specs:
-        print(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
+        con.error(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
         return 2
     try:
         system = build_system(args.tech, args.glb_mb)
     except UnknownTechnologyError as e:
-        print(e)
+        con.error(str(e))
         return 2
     cfg = ServingConfig(
         n_requests=args.requests,
@@ -89,19 +121,38 @@ def run_serving_scenario(args) -> int:
         decode_len=args.decode_len,
         seed=args.seed,
     )
+    config = {"scenario": "serving", "model": args.model, "tech": args.tech,
+              "glb_mb": args.glb_mb, "serving": cfg}
+    recorder = obs.TimelineRecorder() if args.trace_out else None
     t0 = time.time()
-    trace = serving_trace(system, specs[args.model], cfg)
-    window = (args.coalesce_window_ns if args.coalesce_window_ns is not None
-              else 4 * trace.meta["token_interval_ns"])
-    result = simulate_trace(trace, SimConfig(coalesce_window_ns=window,
-                                             backend=args.backend))
+    with obs.span("simulate"):
+        trace = serving_trace(system, specs[args.model], cfg)
+        window = (args.coalesce_window_ns if args.coalesce_window_ns is not None
+                  else 4 * trace.meta["token_interval_ns"])
+        result = simulate_trace(trace, SimConfig(coalesce_window_ns=window,
+                                                 backend=args.backend),
+                                recorder=recorder)
     dt = time.time() - t0
-    print(f"# serving {args.model} {args.tech}@{args.glb_mb}MB "
-          f"{args.requests} reqs @ {args.arrival_rate}/s "
-          f"({len(trace)} events, {dt:.1f}s)")
-    print(f"token interval       : {trace.meta['token_interval_ns'] / 1e3:.1f} us "
-          f"(kv spill frac {trace.meta['kv_spill_frac']:.2f})")
-    print(summarize(result))
+    con.info(f"# serving {args.model} {args.tech}@{args.glb_mb}MB "
+             f"{args.requests} reqs @ {args.arrival_rate}/s "
+             f"({len(trace)} events, {dt:.1f}s)")
+    con.info(f"token interval       : {trace.meta['token_interval_ns'] / 1e3:.1f} us "
+             f"(kv spill frac {trace.meta['kv_spill_frac']:.2f})")
+    con.info(summarize(result))
+    record = {
+        "cli": "simulate", "scenario": "serving", "model": args.model,
+        "technology": args.tech, "glb_mb": args.glb_mb,
+        "n_events": len(trace), "wall_s": dt,
+        "latency_s": result.latency_s, "energy_j": result.energy_j,
+        "bank_conflict_rate": result.bank_conflict_rate,
+        "p50_latency_ns": result.p50_latency_ns,
+        "p99_latency_ns": result.p99_latency_ns,
+        "mean_queue_depth": result.mean_queue_depth,
+        "glb_utilization": result.glb_utilization,
+    }
+    _save_trace(recorder, args, con, record, config)
+    record["ok"] = True
+    con.result(obs.stamp(record, seed=args.seed, config=config))
     return 0
 
 
@@ -127,9 +178,15 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=256)
     ap.add_argument("--decode-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the replay's bank timeline as Perfetto/"
+                         "Chrome-trace JSON (metrics unchanged by recording)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast end-to-end check: tiny CV replay + tiny serving trace")
+    obs.add_output_args(ap)
     args = ap.parse_args(argv)
+    obs.enable()
+    con = obs.Console.from_args(args)
 
     if args.smoke:
         rc = 0
@@ -141,8 +198,8 @@ def main(argv=None) -> int:
             sub.requests, sub.decode_len = 8, 32
             rc |= (run_serving_scenario(sub) if scenario == "serving"
                    else run_workload_scenario(sub))
-            print()
-        print("smoke OK" if rc == 0 else "smoke FAILED")
+            con.info("")
+        con.info("smoke OK" if rc == 0 else "smoke FAILED")
         return rc
 
     if args.model is None:

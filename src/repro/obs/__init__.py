@@ -1,0 +1,66 @@
+"""repro.obs: zero-dependency observability for the sim/serve/dse engines.
+
+Two faces (see docs/observability.md):
+
+* **Host-side** — hierarchical :func:`span`/:func:`count` instrumentation
+  with a near-zero-overhead disabled path (``core``), a run manifest
+  stamped into every JSON artifact (``manifest``: git sha, seed, config
+  hash, library versions, wall-time per phase), and the shared
+  :class:`Console` logger giving every CLI the same ``--quiet``/``--json``
+  contract (``console``).
+* **Simulated-time** — the opt-in :class:`TimelineRecorder` that taps the
+  replay engine and the serving closed loop and exports a
+  Chrome-trace/Perfetto JSON timeline: per-bank busy intervals and queue
+  depth, per-request admit/prefill/first-token/decode/evict lifecycles,
+  and GLB-residency / DRAM-spill counter tracks (``timeline``).
+
+Everything here is stdlib + the numpy the engines already require; nothing
+imports jax.
+"""
+
+from repro.obs.console import Console, add_output_args, json_default
+from repro.obs.core import (
+    count,
+    counters,
+    disable,
+    enable,
+    enabled,
+    phase_times,
+    reset,
+    snapshot,
+    span,
+)
+from repro.obs.manifest import (
+    COMPARABLE_KEYS,
+    config_hash,
+    environment,
+    git_sha,
+    manifest_diff,
+    run_manifest,
+    stamp,
+)
+from repro.obs.timeline import TimelineRecorder, validate_chrome_trace
+
+__all__ = [
+    "COMPARABLE_KEYS",
+    "Console",
+    "TimelineRecorder",
+    "add_output_args",
+    "config_hash",
+    "count",
+    "counters",
+    "disable",
+    "enable",
+    "enabled",
+    "environment",
+    "git_sha",
+    "json_default",
+    "manifest_diff",
+    "phase_times",
+    "reset",
+    "run_manifest",
+    "snapshot",
+    "span",
+    "stamp",
+    "validate_chrome_trace",
+]

@@ -1,0 +1,12 @@
+"""``python -m repro.obs trace.json [...]`` — validate Chrome-trace files.
+
+Thin alias for :func:`repro.obs.timeline.main` that avoids the
+runpy double-import warning ``-m repro.obs.timeline`` would print (the
+package ``__init__`` already imports the submodule).
+"""
+
+import sys
+
+from repro.obs.timeline import main
+
+sys.exit(main())

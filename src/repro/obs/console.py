@@ -1,0 +1,85 @@
+"""Shared console logger for the launch CLIs and the benchmark harness.
+
+One contract, three modes:
+
+* **text** (default) — prose goes to stdout, exactly like the historical
+  ``print()`` output;
+* **--quiet** — prose is suppressed (warnings/errors still reach stderr);
+* **--json** — stdout carries *machine-parseable output only*: one JSON
+  document per :meth:`Console.result` call, nothing else.  Prose is
+  rerouted to stderr so ``explore --smoke --json | jq .`` works.
+
+Errors and warnings always go to stderr in every mode, so exit-status
+consumers and humans see diagnostics without contaminating piped stdout.
+
+Numpy scalars/arrays inside result records are converted by a ``default``
+hook, so engines can hand their row dicts over without scrubbing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def json_default(obj):
+    """JSON fallback: numpy scalars/arrays, dataclasses, sets."""
+    item = getattr(obj, "item", None)
+    if callable(item) and getattr(obj, "ndim", 1) == 0:
+        return obj.item()
+    tolist = getattr(obj, "tolist", None)
+    if callable(tolist):
+        return tolist()
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return dataclasses.asdict(obj)
+    if isinstance(obj, (set, frozenset)):
+        return sorted(obj)
+    return repr(obj)
+
+
+class Console:
+    """Mode-aware writer the CLIs route every line of output through."""
+
+    def __init__(self, quiet: bool = False, json_mode: bool = False,
+                 stream=None, err=None):
+        self.quiet = quiet
+        self.json_mode = json_mode
+        self._out = stream if stream is not None else sys.stdout
+        self._err = err if err is not None else sys.stderr
+
+    @classmethod
+    def from_args(cls, args) -> "Console":
+        return cls(quiet=getattr(args, "quiet", False),
+                   json_mode=getattr(args, "json", False))
+
+    def info(self, msg: str = "") -> None:
+        """Prose.  text -> stdout; --json -> stderr; --quiet -> dropped."""
+        if self.quiet:
+            return
+        print(msg, file=self._err if self.json_mode else self._out)
+
+    def warn(self, msg: str) -> None:
+        print(f"warning: {msg}", file=self._err)
+
+    def error(self, msg: str) -> None:
+        print(msg, file=self._err)
+
+    def result(self, record: dict) -> None:
+        """The run's structured outcome; emitted on stdout in --json mode
+        only (text mode already printed the human rendering via info)."""
+        if self.json_mode:
+            json.dump(record, self._out, indent=2, default=json_default)
+            self._out.write("\n")
+            self._out.flush()
+
+
+def add_output_args(parser: argparse.ArgumentParser) -> None:
+    """Attach the shared ``--quiet`` / ``--json`` flags to a CLI parser."""
+    g = parser.add_argument_group("output")
+    g.add_argument("--quiet", action="store_true",
+                   help="suppress prose output (errors still go to stderr)")
+    g.add_argument("--json", action="store_true",
+                   help="emit machine-parseable JSON only on stdout "
+                        "(prose moves to stderr)")

@@ -1,0 +1,353 @@
+"""Simulated-time timeline recording and Chrome-trace/Perfetto export.
+
+The engines compute exact event timelines (the segmented max-plus replay
+knows every bank's busy intervals; the serving loop knows every request's
+admit/prefill/first-token/finish) and then reduce them to scalar metrics.
+:class:`TimelineRecorder` is the opt-in tap that keeps them: pass one to
+``repro.sim.simulate_trace`` / ``repro.serve.closed_loop_serving`` /
+``repro.serve.sweep.sweep_serving_grid`` (or just ``--trace-out trace.json``
+on the ``simulate`` / ``serve_sim`` / ``explore`` CLIs) and ``save()`` writes
+a Chrome-trace JSON loadable in https://ui.perfetto.dev.
+
+Track layout (Chrome trace event format, timestamps in microseconds of
+*simulated* time):
+
+* **pid 1 "memory system"** — one thread per resource (GLB bank, DRAM
+  channel, prefetch channel).  Busy intervals are complete (``ph:"X"``)
+  events named by event kind with wait/queue-depth args; per-resource
+  queue depth is a counter (``ph:"C"``) track.
+* **pid 2 "requests"** — one thread per request: ``queued`` (arrival ->
+  admitted), ``prefill``, ``decode`` spans plus ``first_token`` and
+  ``evict`` instants.
+* **pid 3 "serving counters"** — GLB page residency (%), cumulative KV
+  pages spilled, cumulative KV read bytes served from DRAM, active batch
+  size, sampled at every scheduler step.
+
+Recording is strictly read-only — it never touches RNG state, event
+buffers, or the clock — so metrics with a recorder attached are
+bit-identical to metrics without one (pinned by ``tests/test_obs.py``).
+
+``validate_chrome_trace`` is the schema gate (required keys per phase type,
+monotone per-track timestamps); CI runs it over the smoke trace via
+``python -m repro.obs.timeline trace.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+PID_MEMORY = 1
+PID_REQUESTS = 2
+PID_COUNTERS = 3
+
+_NS_TO_US = 1e-3
+
+
+class TimelineRecorder:
+    """Collects simulated-time tracks; ``export()`` renders Chrome-trace JSON.
+
+    ``max_events`` bounds the (dominant) per-bank busy-interval track; a
+    replay longer than the cap keeps the first ``max_events`` schedule rows
+    per ``record_replay`` call and reports the remainder in
+    ``otherData.dropped_events`` rather than silently truncating.
+    """
+
+    def __init__(self, max_events: int = 500_000):
+        self.max_events = max_events
+        self.dropped_events = 0
+        self._bank_events: list[dict] = []
+        self._resource_names: list[str] = []
+        self._req: dict[int, dict] = {}
+        self._counters: list[tuple[str, float, float]] = []  # (name, t_ns, v)
+        self._kv_dram_bytes = 0.0
+        self._n_replays = 0
+        self._meta: dict = {}
+
+    # -- recording hooks (called by the engines; all read-only) --------------
+
+    def record_replay(self, sched, trace) -> None:
+        """Bank busy intervals + queue depth from a ``ReplaySchedule``."""
+        from repro.sim.trace import KIND_NAMES
+
+        names = _resource_names(trace.n_glb_banks, trace.n_dram_channels,
+                                trace.n_prefetch_channels)
+        if len(names) > len(self._resource_names):
+            self._resource_names = names
+        self._n_replays += 1
+        self._meta.setdefault("trace_meta", dict(trace.meta))
+
+        n = int(sched.resource.shape[0])
+        take = max(0, self.max_events - len(self._bank_events))
+        if n > take:
+            self.dropped_events += n - take
+            n = take
+        res = sched.resource[:n]
+        start = sched.start_ns[:n]
+        finish = sched.finish_ns[:n]
+        wait = sched.wait_ns[:n]
+        depth = sched.queue_depth[:n]
+        kind = sched.kind[:n]
+        ev = self._bank_events
+        for i in range(n):
+            r = int(res[i])
+            t0 = float(start[i])
+            ev.append({
+                "ph": "X", "pid": PID_MEMORY, "tid": r,
+                "name": KIND_NAMES.get(int(kind[i]), f"kind{int(kind[i])}"),
+                "cat": "bank",
+                "ts": t0 * _NS_TO_US,
+                "dur": (float(finish[i]) - t0) * _NS_TO_US,
+                "args": {"wait_us": float(wait[i]) * _NS_TO_US,
+                         "queue_depth": int(depth[i])},
+            })
+            ev.append({
+                "ph": "C", "pid": PID_MEMORY, "tid": r,
+                "name": f"queue:{names[r] if r < len(names) else r}",
+                "ts": float(sched.t_issue_ns[i]) * _NS_TO_US,
+                "args": {"depth": int(depth[i])},
+            })
+
+    def record_step(self, t_start_ns: float, t_end_ns: float, plan, blocks,
+                    alloc, finished) -> None:
+        """One serving-loop step: request lifecycle edges + counter samples."""
+        for r, _toks in plan.prefill:
+            rec = self._request(r)
+            rec["prefill_t0"] = min(rec.get("prefill_t0", math.inf), t_start_ns)
+            rec["prefill_t1"] = max(rec.get("prefill_t1", -math.inf), t_end_ns)
+        for r in plan.decode:
+            self._request(r)
+        for r in finished:
+            rec = self._request(r)
+            rec["first"] = r.first_token_ns
+            rec["finish"] = r.finish_ns
+        self._kv_dram_bytes += blocks.kv_rd_bytes_dram
+        c = self._counters
+        c.append(("glb_residency_pct", t_end_ns, blocks.residency * 100.0))
+        c.append(("kv_pages_spilled", t_end_ns, float(alloc.spill_count)))
+        c.append(("kv_dram_read_bytes", t_end_ns, self._kv_dram_bytes))
+        c.append(("active_requests", t_end_ns,
+                  float(len(plan.decode) + len(plan.prefill))))
+
+    def counter(self, name: str, t_ns: float, value: float) -> None:
+        """Free-form counter sample on the serving-counters process."""
+        self._counters.append((name, t_ns, float(value)))
+
+    def _request(self, r) -> dict:
+        rec = self._req.get(r.rid)
+        if rec is None:
+            rec = self._req[r.rid] = {
+                "arrival": r.arrival_ns,
+                "admitted": r.admitted_ns,
+            }
+        return rec
+
+    # -- export --------------------------------------------------------------
+
+    @property
+    def n_events(self) -> int:
+        return len(self._bank_events)
+
+    def export(self, manifest: dict | None = None) -> dict:
+        """Render everything recorded so far as a Chrome-trace document."""
+        events: list[dict] = []
+        _add_process_meta(events, PID_MEMORY, "memory system")
+        for r, name in enumerate(self._resource_names):
+            events.append({"ph": "M", "pid": PID_MEMORY, "tid": r,
+                           "name": "thread_name", "args": {"name": name}})
+        if self._req:
+            _add_process_meta(events, PID_REQUESTS, "requests")
+            for rid in sorted(self._req):
+                events.append({"ph": "M", "pid": PID_REQUESTS, "tid": rid,
+                               "name": "thread_name",
+                               "args": {"name": f"req {rid:04d}"}})
+        if self._counters:
+            _add_process_meta(events, PID_COUNTERS, "serving counters")
+
+        events.extend(self._bank_events)
+
+        for rid in sorted(self._req):
+            events.extend(_request_events(rid, self._req[rid]))
+
+        # Counter samples are appended in simulated-step order, which is the
+        # per-name monotone order the validator checks.
+        for name, t_ns, value in self._counters:
+            events.append({"ph": "C", "pid": PID_COUNTERS, "name": name,
+                           "ts": t_ns * _NS_TO_US, "args": {"value": value}})
+
+        other = {
+            "n_bank_events": len(self._bank_events),
+            "n_requests": len(self._req),
+            "n_counter_samples": len(self._counters),
+            "n_replays": self._n_replays,
+            "dropped_events": self.dropped_events,
+            **self._meta,
+        }
+        if manifest is not None:
+            other["manifest"] = manifest
+        return {"traceEvents": events, "displayTimeUnit": "ms",
+                "otherData": other}
+
+    def save(self, path: str, manifest: dict | None = None) -> dict:
+        """Write the Perfetto-loadable JSON to ``path``; returns the doc."""
+        doc = self.export(manifest=manifest)
+        with open(path, "w") as fh:
+            json.dump(doc, fh)
+        return doc
+
+
+def _resource_names(n_glb: int, n_dram: int, n_pref: int) -> list[str]:
+    return (
+        [f"glb_bank_{b:03d}" for b in range(n_glb)]
+        + [f"dram_ch_{c}" for c in range(n_dram)]
+        + [f"prefetch_{c}" for c in range(n_pref)]
+    )
+
+
+def _add_process_meta(events: list, pid: int, name: str) -> None:
+    events.append({"ph": "M", "pid": pid, "name": "process_name",
+                   "args": {"name": name}})
+
+
+def _request_events(rid: int, rec: dict) -> list[dict]:
+    """Lifecycle spans of one request, in monotone timestamp order."""
+    out: list[dict] = []
+
+    def _x(name, t0_ns, t1_ns):
+        if _bad(t0_ns) or _bad(t1_ns) or t1_ns < t0_ns:
+            return
+        out.append({"ph": "X", "pid": PID_REQUESTS, "tid": rid, "name": name,
+                    "cat": "request", "ts": t0_ns * _NS_TO_US,
+                    "dur": (t1_ns - t0_ns) * _NS_TO_US})
+
+    def _i(name, t_ns):
+        if _bad(t_ns):
+            return
+        out.append({"ph": "i", "pid": PID_REQUESTS, "tid": rid, "name": name,
+                    "s": "t", "ts": t_ns * _NS_TO_US})
+
+    arrival, admitted = rec.get("arrival"), rec.get("admitted")
+    pf0, pf1 = rec.get("prefill_t0"), rec.get("prefill_t1")
+    first, finish = rec.get("first"), rec.get("finish")
+    _x("queued", arrival, admitted)
+    if pf0 is not None and pf1 is not None:
+        _x("prefill", pf0, pf1)
+        _x("decode", pf1, finish)
+    elif not _bad(admitted):
+        _x("decode", admitted, finish)
+    _i("first_token", first)
+    _i("evict", finish)
+    return out
+
+
+def _bad(t) -> bool:
+    return t is None or not math.isfinite(t)
+
+
+# ---------------------------------------------------------------------------
+# Schema validation (the CI gate for exported traces)
+# ---------------------------------------------------------------------------
+
+
+def validate_chrome_trace(doc: dict, max_problems: int = 20) -> list[str]:
+    """Check a Chrome-trace document; returns human-readable problems.
+
+    Enforced: ``traceEvents`` is a list of dicts; every event carries
+    ``ph``/``pid`` (plus ``ts`` for non-metadata phases); ``X`` events have
+    ``tid``/``name`` and a non-negative ``dur``; ``C`` events have ``name``
+    and numeric ``args``; timestamps are finite and **monotone per track**
+    (track = ``(pid, tid)`` for ``X``, ``(pid, name)`` for ``C``).
+    """
+    problems: list[str] = []
+
+    def add(msg):
+        if len(problems) < max_problems:
+            problems.append(msg)
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    last_ts: dict[tuple, float] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            add(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph is None or "pid" not in ev:
+            add(f"event {i}: missing ph/pid")
+            continue
+        if ph == "M":
+            if "name" not in ev:
+                add(f"event {i}: metadata event without name")
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            add(f"event {i}: ph={ph} missing/non-finite ts")
+            continue
+        if ph == "X":
+            if "tid" not in ev or "name" not in ev:
+                add(f"event {i}: X event missing tid/name")
+                continue
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or not math.isfinite(dur) or dur < 0:
+                add(f"event {i}: X event missing/negative dur")
+                continue
+            key = ("X", ev["pid"], ev["tid"])
+        elif ph == "C":
+            args = ev.get("args")
+            if "name" not in ev or not isinstance(args, dict) or not args:
+                add(f"event {i}: C event missing name/args")
+                continue
+            if not all(isinstance(v, (int, float)) and math.isfinite(v)
+                       for v in args.values()):
+                add(f"event {i}: C event with non-numeric args")
+                continue
+            key = ("C", ev["pid"], ev["name"])
+        elif ph == "i":
+            if "name" not in ev:
+                add(f"event {i}: instant event without name")
+                continue
+            key = ("i", ev["pid"], ev.get("tid"))
+        else:
+            # Unknown phases are legal Chrome-trace; only check ts presence.
+            continue
+        prev = last_ts.get(key)
+        if prev is not None and ts < prev:
+            add(f"event {i}: non-monotone ts on track {key} "
+                f"({ts} after {prev})")
+        else:
+            last_ts[key] = ts
+    return problems
+
+
+def main(argv=None) -> int:
+    """``python -m repro.obs.timeline trace.json [...]`` — schema-validate."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Validate Chrome-trace/Perfetto JSON files")
+    ap.add_argument("paths", nargs="+")
+    args = ap.parse_args(argv)
+    rc = 0
+    for path in args.paths:
+        with open(path) as fh:
+            doc = json.load(fh)
+        problems = validate_chrome_trace(doc)
+        n = len(doc.get("traceEvents", []))
+        if problems:
+            rc = 1
+            print(f"{path}: INVALID ({n} events)")
+            for p in problems:
+                print(f"  {p}")
+        else:
+            other = doc.get("otherData", {})
+            print(f"{path}: OK ({n} events, "
+                  f"{other.get('n_requests', 0)} request tracks, "
+                  f"{other.get('n_counter_samples', 0)} counter samples)")
+    return rc
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -688,12 +688,16 @@ class RunStats:
 
 
 def drive_serving_loop(sched: ContinuousBatchScheduler, emitter, step_time_fn,
-                       alloc: PagedKVAllocator):
+                       alloc: PagedKVAllocator, recorder=None):
     """Run the scheduler to completion, yielding ``(blocks, dt)`` per step.
 
     ``step_time_fn(blocks)`` maps one step's lowered blocks to its duration:
     the closed loop prices the blocks and folds in the GLB/DRAM busy times;
     the sweep engine's shared mode uses the technology-invariant terms alone.
+
+    ``recorder`` (a :class:`repro.obs.TimelineRecorder`) observes every
+    committed step — request lifecycle edges plus residency/spill counter
+    samples — without touching the clock, the allocator, or RNG state.
     """
     t = sched.next_arrival_ns()
     n_steps = 0
@@ -708,8 +712,11 @@ def drive_serving_loop(sched: ContinuousBatchScheduler, emitter, step_time_fn,
         blocks = emitter.emit(plan)
         dt = step_time_fn(blocks)
         t_end = t + dt
-        for r in sched.commit_step(plan, t_end):
+        finished = sched.commit_step(plan, t_end)
+        for r in finished:
             alloc.free(r.rid)
+        if recorder is not None:
+            recorder.record_step(t, t_end, plan, blocks, alloc, finished)
         t = t_end
         n_steps += 1
         if n_steps > _MAX_STEPS:  # pragma: no cover
@@ -727,6 +734,7 @@ def closed_loop_serving(
     n_prefetch_channels: int = 4,
     lowering: str = "block",
     timing: dict | None = None,
+    recorder=None,
 ) -> tuple[Trace, ServeReport]:
     """Run the continuous-batching loop to completion and score the replay.
 
@@ -736,6 +744,10 @@ def closed_loop_serving(
     the ``benchmarks/serving_qps`` speedup baseline).  Pass a dict as
     ``timing`` to receive the ``loop_s`` (scheduler + allocator + lowering +
     pricing) vs ``score_s`` (trace build + replay + report) wall-clock split.
+    ``recorder`` (a :class:`repro.obs.TimelineRecorder`) taps the loop's
+    request lifecycles/counters and the replay's bank timeline for Perfetto
+    export; all recorder hooks are read-only, so the returned trace and
+    report are bit-identical with the recorder on or off.
     """
     t_loop0 = time.perf_counter()
     rng = np.random.default_rng(cfg.seed)
@@ -756,7 +768,8 @@ def closed_loop_serving(
         decode_ns = model.interval_ns if blocks.has_decode else 0.0
         return max(decode_ns, blocks.prefill_ns, glb_ns, dram_ns)
 
-    for blocks, dt in drive_serving_loop(sched, emitter, step_time, model.alloc):
+    for blocks, dt in drive_serving_loop(sched, emitter, step_time, model.alloc,
+                                         recorder=recorder):
         stats.account(blocks, dt)
     t_score0 = time.perf_counter()
 
@@ -768,7 +781,8 @@ def closed_loop_serving(
     sim_config = sim_config or SimConfig(
         coalesce_window_ns=4 * model.interval_ns, kind_stats=False
     )
-    report = score_run(trace, sched, model, stats, system, sim_config)
+    report = score_run(trace, sched, model, stats, system, sim_config,
+                       recorder=recorder)
     if timing is not None:
         timing["loop_s"] = timing.get("loop_s", 0.0) + (t_score0 - t_loop0)
         timing["score_s"] = (
@@ -815,10 +829,12 @@ def score_run(
     stats: RunStats,
     system: HybridMemorySystem,
     sim_config: SimConfig,
+    recorder=None,
 ) -> ServeReport:
     """Replay a lowered serving trace and distill the :class:`ServeReport`."""
     result, schedule, orig_idx = simulate_trace(trace, sim_config,
-                                                return_schedule=True)
+                                                return_schedule=True,
+                                                recorder=recorder)
 
     # Per-request token-completion times from the replay (tagged events).
     tags = trace.tag[orig_idx]

@@ -104,13 +104,15 @@ class SweepRow:
 
 
 def _shared_run(model: ServeModel, sched: ContinuousBatchScheduler,
-                lowering: str, t_dram_acc_ns: float):
+                lowering: str, t_dram_acc_ns: float, recorder=None):
     """Drive the loop once with the technology-invariant clock.
 
     The step feedback's DRAM term is ``total accesses x access time`` — no
     per-channel max — so it is identical for every technology and can be
     folded into the shared clock exactly.  Only the per-bank GLB busy time
     is technology-dependent; it is what the certificate checks per tech.
+    ``recorder`` taps the shared loop's request lifecycles and residency
+    counters (read-only, no effect on the schedule).
     """
     emitter = (BlockEmitter if lowering == "block" else ScalarEmitter)(model)
     stats = RunStats()
@@ -128,7 +130,7 @@ def _shared_run(model: ServeModel, sched: ContinuousBatchScheduler,
         return max(decode_ns, blocks.prefill_ns, dram_acc * t_dram_acc_ns)
 
     for blocks, dt in drive_serving_loop(sched, emitter, shared_dt,
-                                         model.alloc):
+                                         model.alloc, recorder=recorder):
         stats.account(blocks, dt)
         blocks_list.append(blocks)
         dts.append(dt)
@@ -143,6 +145,7 @@ def sweep_serving_grid(
     n_prefetch_channels: int = 4,
     lowering: str = "block",
     timing: dict | None = None,
+    recorder=None,
 ) -> list[SweepRow]:
     """Evaluate the whole grid; rows ordered (capacity, qps, technology).
 
@@ -155,6 +158,13 @@ def sweep_serving_grid(
     ``loop_s`` (scheduler + allocator + lowering + per-tech pricing) vs
     ``score_s`` (trace build + replay + report) — the benchmark harness uses
     it to separate the serving-loop speedup from the shared replay cost.
+
+    ``recorder`` (a :class:`repro.obs.TimelineRecorder`) records the *first*
+    grid point only — its serving loop and its first technology's replay —
+    because one timeline per (capacity, qps, technology) triple would bury
+    the interesting tracks; sweep timelines exist to inspect one
+    representative schedule.  Hooks are read-only: rows are bit-identical
+    with the recorder on or off.
     """
     if mode not in ("shared", "exact"):
         raise ValueError(f"unknown sweep mode {mode!r}")
@@ -167,9 +177,11 @@ def sweep_serving_grid(
     interarrival_std, prompts, decodes = draw_request_shape(spec.serving, rng)
 
     rows: list[SweepRow] = []
+    rec_pending = recorder  # consumed by the first grid point
     for cap in spec.capacities_mb:
         for qps in spec.qps:
             cfg = dataclasses.replace(spec.serving, arrival_rate_rps=qps)
+            rec, rec_pending = rec_pending, None
             if mode == "exact":
                 for tech in spec.technologies:
                     system = build_system(tech, cap)
@@ -185,7 +197,9 @@ def sweep_serving_grid(
                         n_prefetch_channels=n_prefetch_channels,
                         lowering=lowering,
                         timing=timing,
+                        recorder=rec,
                     )
+                    rec = None
                     rows.append(SweepRow(tech, cap, qps, False, rep))
                 continue
 
@@ -201,7 +215,7 @@ def sweep_serving_grid(
             sched = ContinuousBatchScheduler(arrivals, prompts, decodes,
                                              spec.engine)
             blocks_list, dts, stats = _shared_run(model, sched, lowering,
-                                                  t_dram_acc_ns)
+                                                  t_dram_acc_ns, recorder=rec)
             timing["loop_s"] += time.perf_counter() - t0
             sim_config = SimConfig(
                 coalesce_window_ns=4 * model.interval_ns, backend=backend,
@@ -229,12 +243,14 @@ def sweep_serving_grid(
                                               schedule="shared"),
                     )
                     rep = score_run(trace, sched, model, stats, system,
-                                    sim_config)
+                                    sim_config, recorder=rec)
                     timing["score_s"] += time.perf_counter() - t0
                     rows.append(SweepRow(tech, cap, qps, True, rep))
                 else:
                     # Congestion would have stretched this technology's
                     # steps: replay its own closed loop (still block-lowered).
+                    # The shared loop already recorded this grid point's
+                    # lifecycles, so the fallback only taps the replay.
                     _, rep = closed_loop_serving(
                         system, nlp, cfg, spec.engine,
                         sim_config=sim_config,
@@ -244,6 +260,7 @@ def sweep_serving_grid(
                         timing=timing,
                     )
                     rows.append(SweepRow(tech, cap, qps, False, rep))
+                rec = None
     return rows
 
 

@@ -229,7 +229,8 @@ def replay_schedule(
 
 
 def simulate_trace(
-    trace: Trace, config: SimConfig = SimConfig(), return_schedule: bool = False
+    trace: Trace, config: SimConfig = SimConfig(), return_schedule: bool = False,
+    recorder=None,
 ):
     """Replay a trace; returns a :class:`SimResult`.
 
@@ -237,6 +238,11 @@ def simulate_trace(
     where ``orig_idx[i]`` is the original trace index of schedule row ``i``
     (coalesced-away writes excluded) — the join key for per-event side
     arrays such as ``Trace.tag``.
+
+    ``recorder`` (a :class:`repro.obs.TimelineRecorder`) taps the solved
+    schedule for Perfetto export — per-bank busy intervals and queue depth.
+    Recording is read-only: every metric is bit-identical with or without
+    a recorder attached (pinned by ``tests/test_obs.py``).
     """
     n_total = len(trace)
     t_issue, resource = trace.t_issue_ns, trace.resource
@@ -273,6 +279,8 @@ def simulate_trace(
 
     # --- per-bank FIFO replay (sort + segmented max-plus scan) -------------
     sched = replay_schedule(t_issue, resource, service, kind, config.backend)
+    if recorder is not None:
+        recorder.record_replay(sched, trace)
     res_s, t_s = sched.resource, sched.t_issue_ns
     svc_s, kind_s = sched.service_ns, sched.kind
     finish, wait, depth = sched.finish_ns, sched.wait_ns, sched.queue_depth

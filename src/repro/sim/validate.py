@@ -28,13 +28,17 @@ def cross_validate(
     tile_bytes: int = 4096,
     arr: ArrayConfig | None = None,
     sim_config: SimConfig = SimConfig(),
+    recorder=None,
 ) -> dict:
-    """Replay one configuration and compare against ``evaluate_system``."""
+    """Replay one configuration and compare against ``evaluate_system``.
+
+    ``recorder`` (a :class:`repro.obs.TimelineRecorder`) taps the replay's
+    bank timeline for Perfetto export (``simulate --trace-out``)."""
     analytic = evaluate_system(workload, batch, system, mode, d_w, arr)
     trace = lower_workload(
         workload, batch, system, mode, d_w, arr=arr, tile_bytes=tile_bytes
     )
-    sim = simulate_trace(trace, sim_config)
+    sim = simulate_trace(trace, sim_config, recorder=recorder)
     lat_err = _rel_err(sim.latency_s, analytic.latency_s)
     e_err = _rel_err(sim.energy_j, analytic.energy_j)
     return {
