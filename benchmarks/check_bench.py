@@ -1,7 +1,9 @@
-"""CI gate for BENCH_serving.json: fail on wall-clock or correctness drift.
+"""CI gate for BENCH_serving.json / BENCH_replay.json: fail on drift.
 
     PYTHONPATH=src python -m benchmarks.check_bench BENCH_serving.json \
-        benchmarks/BENCH_serving.baseline.json [--max-regression 2.0]
+        benchmarks/BENCH_serving.baseline.json [--max-regression 2.0] \
+        [--replay-current BENCH_replay.json \
+         --replay-baseline benchmarks/BENCH_replay.baseline.json]
 
 Compares a fresh benchmark record against the committed baseline:
 
@@ -13,6 +15,13 @@ Compares a fresh benchmark record against the committed baseline:
   vectorized paths must still produce identical metrics
   (``all_scalar_identical``), and the vectorized path must remain faster
   than the scalar reference (``grid_speedup_x > 1``);
+* **replay gate** (``--replay-current``/``--replay-baseline``): the replay
+  benchmark's backends must still be bit-identical (``numpy``/``jax``/
+  ``pallas`` sweep reports, and shared-vs-exact row agreement), its batched
+  events/sec must stay above half the baseline's, and its end-to-end
+  speedup over the scalar serving baseline must not fall below the floor
+  recorded in the baseline (``speedup_floor_x``);
+
 * **technology coverage**: every technology registered in ``repro.spec``
   must appear in the baseline's ``tech_coverage`` block — either in
   ``covered`` (part of the benchmark grid) or in ``notes`` (with a reason
@@ -73,6 +82,50 @@ def check(current: dict, baseline: dict, max_regression: float) -> list[str]:
     return problems
 
 
+def check_replay(current: dict, baseline: dict,
+                 max_regression: float) -> list[str]:
+    """Gate BENCH_replay.json against its committed baseline."""
+    problems = []
+    cur = current.get("benchmarks", {}).get("replay")
+    base = baseline.get("benchmarks", {}).get("replay")
+    if cur is None:
+        return ["replay: missing from current record"]
+    if base is None:
+        return ["replay: missing from baseline record"]
+    b_us, c_us = base.get("us_per_call"), cur.get("us_per_call")
+    if b_us and c_us and c_us > max_regression * b_us:
+        problems.append(
+            f"replay: wall-clock {c_us / 1e6:.2f}s vs baseline "
+            f"{b_us / 1e6:.2f}s (> {max_regression:.1f}x regression)"
+        )
+    if not cur.get("bit_identical_backends", False):
+        problems.append(
+            "replay: numpy/jax/pallas sweep reports are no longer "
+            "bit-identical"
+        )
+    if not cur.get("per_point_identical", False):
+        problems.append(
+            "replay: batched shared sweep diverged from the per-point "
+            "closed-loop reference on the pinned metrics"
+        )
+    eps_base = base.get("events_per_sec") or 0.0
+    eps_cur = cur.get("events_per_sec") or 0.0
+    if eps_base and eps_cur < eps_base / 2:
+        problems.append(
+            f"replay: batched replay throughput {eps_cur / 1e6:.2f}M "
+            f"events/s fell below half the baseline "
+            f"({eps_base / 1e6:.2f}M events/s)"
+        )
+    floor = baseline.get("speedup_floor_x")
+    speedup = cur.get("end_to_end_speedup_x") or 0.0
+    if floor and speedup < floor:
+        problems.append(
+            f"replay: end-to-end speedup over the scalar serving baseline "
+            f"is {speedup}x, below the recorded floor ({floor}x)"
+        )
+    return problems
+
+
 def manifest_warnings(current: dict, baseline: dict) -> list[str]:
     """Human-readable warnings for manifest drift (never failures)."""
     try:
@@ -114,6 +167,10 @@ def main(argv=None) -> int:
     ap.add_argument("current", help="freshly produced BENCH_serving.json")
     ap.add_argument("baseline", help="committed baseline json")
     ap.add_argument("--max-regression", type=float, default=2.0)
+    ap.add_argument("--replay-current", default=None,
+                    help="freshly produced BENCH_replay.json")
+    ap.add_argument("--replay-baseline", default=None,
+                    help="committed replay baseline json")
     args = ap.parse_args(argv)
 
     with open(args.current) as fh:
@@ -123,6 +180,21 @@ def main(argv=None) -> int:
     for w in manifest_warnings(current, baseline):
         print(f"BENCH WARNING: {w}", file=sys.stderr)
     problems = check(current, baseline, args.max_regression)
+    if bool(args.replay_current) != bool(args.replay_baseline):
+        problems.append(
+            "replay: --replay-current and --replay-baseline must be "
+            "passed together"
+        )
+    elif args.replay_current:
+        with open(args.replay_current) as fh:
+            replay_cur = json.load(fh)
+        with open(args.replay_baseline) as fh:
+            replay_base = json.load(fh)
+        for w in manifest_warnings(replay_cur, replay_base):
+            print(f"BENCH WARNING: {w}", file=sys.stderr)
+        problems.extend(
+            check_replay(replay_cur, replay_base, args.max_regression)
+        )
     for p in problems:
         print(f"BENCH REGRESSION: {p}", file=sys.stderr)
     if not problems:

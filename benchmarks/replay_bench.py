@@ -1,0 +1,181 @@
+"""Segmented-replay benchmark: batched sweep vs per-point closed loops.
+
+The perf gate for the fused serving replay (``repro.serve.replay`` +
+``repro.kernels.segmented_replay``).  One QPS x capacity x technology grid
+is evaluated four ways:
+
+* the **batched shared sweep** once per replay backend (``numpy``, ``jax``,
+  ``pallas``) — one scheduler/allocator/lowering pass per grid point, all
+  technologies priced off the neutral run and replayed in one segmented
+  scan; the three backends' full reports must be *bitwise identical*;
+* the **per-point block closed loop** (``mode="exact"``) — the PR-4 default
+  path: one closed loop per (technology, capacity, qps) triple;
+* the **per-request scalar closed loop** — the original reference lowering;
+  the end-to-end speedup denominator.
+
+The payload lands in ``BENCH_replay.json`` (manifest-stamped by
+``benchmarks/run.py``) and is gated by ``benchmarks/check_bench.py``: a
+>2x wall regression, any backend bit-divergence, or the end-to-end speedup
+falling below the recorded floor fails CI.  See docs/perf.md.
+"""
+
+import dataclasses
+import time
+
+from repro.core.memory_system import HybridMemorySystem, glb_array
+from repro.core.workload import NLP_TABLE_V
+from repro.serve import (
+    ServeEngineConfig,
+    ServingGridSpec,
+    closed_loop_serving,
+    sweep_serving_grid,
+)
+from repro.sim import ServingConfig
+from repro.spec import list_techs
+
+try:
+    import jax  # noqa: F401
+
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+QPS_SWEEP = (200.0, 400.0, 800.0)
+SMOKE_QPS_SWEEP = (400.0,)
+# Same request-population seed as serving_qps; stamped into the manifest.
+SEED = 3
+
+# The metric subset the exact-vs-shared comparison pins (matches
+# tests/test_serve.py): TTFT/TPOT percentiles, byte counts, step count.
+# Full-report equality is reserved for the backend trio, where it holds
+# bitwise; exact mode builds its trace per-step, so reassociating energy
+# sums differ from the shared path in the last ulp by construction.
+_PINNED = ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms", "tpot_p99_ms",
+           "n_steps")
+
+
+def _pinned_equal(a, b) -> bool:
+    return all(getattr(a, f) == getattr(b, f) for f in _PINNED) and (
+        a.bytes["glb_bytes"] == b.bytes["glb_bytes"]
+        and a.bytes["dram_bytes"] == b.bytes["dram_bytes"]
+    )
+
+
+def run(smoke: bool = False, glb_mb: float = 64.0) -> list[dict]:
+    spec = next(s for s in NLP_TABLE_V if s.name == "gpt2")
+    base = ServingConfig(
+        n_requests=16 if smoke else 32,
+        prompt_len=128 if smoke else 512,
+        decode_len=32 if smoke else 64,
+        seed=SEED,
+    )
+    ecfg = ServeEngineConfig(max_batch=8 if smoke else 16)
+    qps_sweep = SMOKE_QPS_SWEEP if smoke else QPS_SWEEP
+    techs = tuple(list_techs())
+    grid = ServingGridSpec(qps=qps_sweep, capacities_mb=(glb_mb,),
+                           technologies=techs, model="gpt2",
+                           serving=base, engine=ecfg)
+
+    # -- batched shared sweep, once per backend ------------------------------
+    backends = ("numpy", "jax", "pallas") if HAVE_JAX else ("numpy",)
+    walls: dict[str, dict] = {}
+    by_backend: dict[str, list] = {}
+    for backend in backends:
+        # Untimed warmup: first-call import/jit-compile costs would otherwise
+        # swamp the smoke-sized grids (the jit cache is keyed on padded
+        # shapes, so the timed pass replays the compiled programs).
+        sweep_serving_grid(grid, backend=backend)
+        timing: dict = {}
+        t0 = time.perf_counter()
+        rows = sweep_serving_grid(grid, backend=backend, timing=timing)
+        walls[backend] = {
+            "wall_s": round(time.perf_counter() - t0, 4),
+            "loop_s": round(timing["loop_s"], 4),
+            "score_s": round(timing["score_s"], 4),
+        }
+        by_backend[backend] = rows
+
+    ref_rows = by_backend["numpy"]
+    bit_identical = all(
+        dataclasses.asdict(a.report) == dataclasses.asdict(b.report)
+        and a.shared == b.shared
+        for backend in backends[1:]
+        for a, b in zip(ref_rows, by_backend[backend])
+    )
+    best_backend = min(walls, key=lambda b: walls[b]["wall_s"])
+    best_wall = walls[best_backend]["wall_s"]
+    n_events = sum(r.report.sim.n_events for r in ref_rows)
+    score_s = walls[best_backend]["score_s"]
+    events_per_sec = n_events / score_s if score_s else 0.0
+
+    # -- per-point block closed loops (mode="exact"): the PR-4 path ----------
+    t0 = time.perf_counter()
+    exact_rows = sweep_serving_grid(grid, mode="exact", backend="numpy")
+    per_point_wall_s = time.perf_counter() - t0
+    per_point_identical = all(
+        _pinned_equal(a.report, b.report)
+        for a, b in zip(ref_rows, exact_rows)
+    )
+
+    # -- per-request scalar closed loops: the end-to-end denominator ---------
+    scalar_timing: dict = {}
+    for tech in techs:
+        system = HybridMemorySystem(glb=glb_array(tech, glb_mb))
+        for qps in qps_sweep:
+            cfg = dataclasses.replace(base, arrival_rate_rps=qps)
+            closed_loop_serving(system, spec, cfg, ecfg, lowering="scalar",
+                                timing=scalar_timing)
+    scalar_wall_s = scalar_timing["loop_s"] + scalar_timing["score_s"]
+
+    replay_speedup = per_point_wall_s / best_wall if best_wall else 0.0
+    end_to_end = scalar_wall_s / best_wall if best_wall else 0.0
+
+    rows = []
+    for row in ref_rows:
+        r = row.report
+        rows.append({
+            "tech": row.technology,
+            "glb_mb": glb_mb,
+            "qps": row.qps,
+            "ttft_p99_ms": round(r.ttft_p99_ms, 3),
+            "tpot_p99_ms": round(r.tpot_p99_ms, 4),
+            "energy_mj": round(r.sim.energy_j * 1e3, 3),
+            "n_events": r.sim.n_events,
+            "shared_schedule": row.shared,
+            # Grid-level facts, repeated so the CSV stays rectangular.
+            "best_backend": best_backend,
+            "best_wall_s": round(best_wall, 4),
+            "per_point_wall_s": round(per_point_wall_s, 4),
+            "scalar_wall_s": round(scalar_wall_s, 4),
+            "replay_speedup_x": round(replay_speedup, 2),
+            "end_to_end_speedup_x": round(end_to_end, 2),
+            "events_per_sec": round(events_per_sec),
+            "bit_identical_backends": bit_identical,
+            "per_point_identical": per_point_identical,
+        })
+    # Stash the per-backend wall split on the first row for bench_payload.
+    if rows:
+        rows[0]["backend_walls"] = walls
+    return rows
+
+
+def bench_payload(rows: list[dict], us_per_call: float) -> dict:
+    """BENCH_replay.json entry: wall-clock split + correctness flags."""
+    first = rows[0] if rows else {}
+    return {
+        "us_per_call": round(us_per_call, 1),
+        "grid_points": len(rows),
+        "backends": first.get("backend_walls", {}),
+        "best_backend": first.get("best_backend"),
+        "events_per_sec": first.get("events_per_sec"),
+        "replay_speedup_x": first.get("replay_speedup_x"),
+        "end_to_end_speedup_x": first.get("end_to_end_speedup_x"),
+        "best_wall_s": first.get("best_wall_s"),
+        "per_point_wall_s": first.get("per_point_wall_s"),
+        "scalar_wall_s": first.get("scalar_wall_s"),
+        "bit_identical_backends": bool(first.get("bit_identical_backends")),
+        "per_point_identical": bool(first.get("per_point_identical")),
+        "n_events_total": sum(r.get("n_events", 0) for r in rows),
+        "rows": [{k: v for k, v in r.items() if k != "backend_walls"}
+                 for r in rows],
+    }

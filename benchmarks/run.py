@@ -42,6 +42,7 @@ from benchmarks import (
     fig16_pt_variation,
     fig18_system_ppa,
     fig19_area,
+    replay_bench,
     roofline,
     serving_qps,
     sim_vs_analytic,
@@ -50,7 +51,7 @@ from benchmarks import (
 from benchmarks.common import rows_to_csv, timed
 
 # Benchmarks whose run() accepts a ``smoke`` flag.
-SMOKE_AWARE = {"sim_vs_analytic", "explore", "serving_qps"}
+SMOKE_AWARE = {"sim_vs_analytic", "explore", "serving_qps", "replay"}
 
 
 def _derive(name: str, rows: list[dict]) -> str:
@@ -107,6 +108,14 @@ def _derive(name: str, rows: list[dict]) -> str:
                 f"grid_speedup_x={r0.get('grid_speedup_x')},"
                 f"scalar_identical={ident}"
             )
+        if name == "replay":
+            r0 = rows[0]
+            return (
+                f"cells={len(rows)},best={r0.get('best_backend')},"
+                f"events_per_sec={r0.get('events_per_sec')},"
+                f"e2e_speedup_x={r0.get('end_to_end_speedup_x')},"
+                f"bit_identical={r0.get('bit_identical_backends')}"
+            )
         if name == "roofline":
             if "note" in rows[0]:
                 return rows[0]["note"]
@@ -138,6 +147,7 @@ BENCHMARKS = [
     ("sim_vs_analytic", sim_vs_analytic.run),
     ("explore", explore.run),
     ("serving_qps", serving_qps.run),
+    ("replay", replay_bench.run),
 ]
 
 
@@ -145,20 +155,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="print detail tables")
     ap.add_argument("--only", default=None,
-                    help="run only benchmarks whose name contains this substring")
+                    help="run only benchmarks whose name contains one of "
+                         "these comma-separated substrings")
     ap.add_argument("--smoke", action="store_true",
                     help="shrink the expensive benchmarks for CI")
     ap.add_argument("--bench-json", default="BENCH_serving.json",
                     help="write wall-clock + key metrics here ('' to skip)")
+    ap.add_argument("--replay-json", default="BENCH_replay.json",
+                    help="write the replay benchmark's own stamped record "
+                         "here ('' to skip; requires the replay benchmark "
+                         "to be selected)")
     obs.add_output_args(ap)
     args = ap.parse_args()
     obs.enable()
     con = obs.Console.from_args(args)
 
+    wanted = args.only.split(",") if args.only else []
     selected = [
         (name, fn)
         for name, fn in BENCHMARKS
-        if not args.only or args.only in name
+        if not wanted or any(w and w in name for w in wanted)
     ]
     if not selected:
         con.error(f"no benchmark matches --only {args.only!r}")
@@ -187,6 +203,8 @@ def main() -> None:
         details.append((name, rows))
         if name == "serving_qps":
             bench_entries[name] = serving_qps.bench_payload(rows, us)
+        elif name == "replay":
+            bench_entries[name] = replay_bench.bench_payload(rows, us)
         else:
             bench_entries[name] = {"us_per_call": round(us, 1)}
     payload = {
@@ -205,6 +223,20 @@ def main() -> None:
         with open(args.bench_json, "w") as fh:
             json.dump(payload, fh, indent=2, default=obs.json_default)
         con.info(f"# wrote {args.bench_json} ({len(bench_entries)} entries)")
+    if args.replay_json and "replay" in bench_entries:
+        replay_payload = {
+            "schema": 1,
+            "created_unix": int(time.time()),
+            "smoke": args.smoke,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "benchmarks": {"replay": bench_entries["replay"]},
+        }
+        obs.stamp(replay_payload, seed=replay_bench.SEED,
+                  config={"smoke": args.smoke})
+        with open(args.replay_json, "w") as fh:
+            json.dump(replay_payload, fh, indent=2, default=obs.json_default)
+        con.info(f"# wrote {args.replay_json}")
     con.result(payload)
     if args.full:
         for name, rows in details:

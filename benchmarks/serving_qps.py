@@ -64,7 +64,10 @@ def run(smoke: bool = False, glb_mb: float = 64.0) -> list[dict]:
                            serving=base, engine=ecfg)
     vec_timing: dict = {}
     t0 = time.perf_counter()
-    sweep_rows = sweep_serving_grid(grid, timing=vec_timing)
+    # backend pinned to numpy: this benchmark compares lowering paths on
+    # equal footing (replay_bench owns the backend comparison), and the
+    # wall must not absorb a first-call jax import on CPU runners.
+    sweep_rows = sweep_serving_grid(grid, backend="numpy", timing=vec_timing)
     vec_wall_s = time.perf_counter() - t0
     vec_loop_s = vec_timing["loop_s"]
 

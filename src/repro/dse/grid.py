@@ -295,7 +295,7 @@ def _eval_arrays(sizes, caps, ppa_fields, t_compute, modes, mem, dram, xp):
 
 
 def evaluate_serving_slo(spec, mode: str = "shared",
-                         backend: str = "numpy", recorder=None) -> dict:
+                         backend: str = "auto", recorder=None) -> dict:
     """Serving mode of the DSE grid: closed-loop SLO sweep + knee.
 
     Unlike the closed-form ``evaluate_workload_grid``, serving points are

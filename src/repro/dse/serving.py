@@ -76,7 +76,7 @@ class ServingSweepSpec:
 
 
 def evaluate_serving_grid(
-    spec: ServingSweepSpec, mode: str = "shared", backend: str = "numpy",
+    spec: ServingSweepSpec, mode: str = "shared", backend: str = "auto",
     recorder=None,
 ) -> list[dict]:
     """Closed-loop-exact evaluation of every (technology, capacity) point.

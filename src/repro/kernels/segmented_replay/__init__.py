@@ -1,0 +1,22 @@
+"""Segmented-replay cummax kernel + fused replay scan (see ops.py).
+
+The numpy reference (:mod:`.ref`) imports without jax; the device ops
+(:mod:`.ops`) need it and are loaded lazily so a ``backend="numpy"``
+replay never pays the jax import (~0.5 s on a cold CPU runner).
+"""
+
+from repro.kernels.segmented_replay.ref import replay_scan_np  # noqa: F401
+
+_OPS = ("cummax", "replay_scan")
+
+
+def __getattr__(name):
+    if name in _OPS:
+        from repro.kernels.segmented_replay import ops
+
+        return getattr(ops, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_OPS))

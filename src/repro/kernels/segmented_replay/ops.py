@@ -1,0 +1,191 @@
+"""Public segmented-replay ops: device cummax + the fused replay scan.
+
+Two entry points, both returning numpy arrays bit-identical to the numpy
+reference path in ``repro.sim.engine``:
+
+* :func:`cummax` — row-wise running max via the Pallas kernel (or
+  ``jax.lax.cummax``); what ``SimConfig(backend="pallas")`` routes the 1-D
+  replay's scan through.
+* :func:`replay_scan` — the batched sweep replay's device stage: offset
+  encode -> cummax -> decode -> finish/start/wait -> queue depth, two jitted
+  XLA programs per shape (scan + depth), no per-technology host round-trips.
+
+Only association-free operations run on-device: the running max
+(comparisons), elementwise add/sub of *inputs* (single IEEE ops),
+max/min reductions, and ``searchsorted`` (comparisons).  Two families of
+float ops are deliberately kept host-side in numpy:
+
+* Reassociating reductions — ``cumsum``, float ``sum``/``mean`` — are not
+  bitwise-stable across numpy and XLA.
+* **Multiplies that feed adds**: XLA's CPU fusion contracts
+  ``v + seg_id * big`` into an FMA (one rounding instead of two), which
+  silently changes low bits relative to numpy — and
+  ``lax.optimization_barrier`` does not stop the LLVM-level contraction.
+  The segment offsets ``seg_id * big`` / ``seg_id * big2`` are therefore
+  multiplied out host-side and passed in as arrays, so the device programs
+  contain no multiply at all.
+
+This split is what makes every backend's sweep report bit-identical (pinned
+by ``tests/test_replay_kernel.py``).
+
+The replay offsets need float64 (offsets ~1e11 ns; float32 resolution there
+is ~10 us), so everything runs under ``jax.experimental.enable_x64`` — on
+CPU natively, on real TPUs via ``interpret=True`` (auto-selected off-TPU,
+same shim as ``ssd_scan``).
+
+To bound recompiles across a sweep (event counts differ per grid point),
+``replay_scan`` pads rows to the next power of two with a *neutral tail
+segment*: pad values chosen so the padded entries form their own trailing
+segment whose finish/issue values stay inside the real data's range — the
+big2 span, every real output, and every real queue depth are bit-identical
+to the unpadded computation (see ``_pad_neutral``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.kernels.segmented_replay.segmented_replay import cummax_2d
+
+DEFAULT_CHUNK = 1024
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cummax(
+    x: np.ndarray,
+    *,
+    scan: str = "pallas",
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Row-wise running max of a 2D array, bitwise ``np.maximum.accumulate``."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    with enable_x64():
+        xs = jnp.asarray(np.asarray(x), jnp.float64)
+        if scan == "pallas":
+            out = cummax_2d(xs, chunk=chunk, interpret=interpret)
+        else:
+            out = jax.lax.cummax(xs, axis=1)
+        return np.asarray(out)
+
+
+@functools.partial(jax.jit, static_argnames=("scan", "chunk", "interpret"))
+def _scan_jit(v, off, s_local, svc, t_s, scan, chunk, interpret):
+    """Scan stage: add/sub of inputs + cummax + max/min reductions only."""
+    aug = v + off
+    if scan == "pallas":
+        running_max = cummax_2d(aug, chunk=chunk, interpret=interpret) - off
+    else:
+        running_max = jax.lax.cummax(aug, axis=1) - off
+    finish = s_local + running_max
+    start = finish - svc
+    wait = start - t_s
+    fmax = jnp.maximum(jnp.max(finish, axis=1), jnp.max(t_s, axis=1))
+    fmin = jnp.minimum(jnp.min(finish, axis=1), jnp.min(t_s, axis=1))
+    return finish, start, wait, fmax, fmin
+
+
+@jax.jit
+def _depth_jit(finish, off2, t_s):
+    """Depth stage: searchsorted over the offset-augmented finish times."""
+    idx = jax.vmap(
+        lambda f, q: jnp.searchsorted(f, q, side="left")
+    )(finish + off2, t_s + off2)
+    return jnp.arange(finish.shape[1], dtype=jnp.int64) - idx
+
+
+def _next_pow2(n: int, floor: int = 4096) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad_neutral(v, seg_id, s_local, svc, t_s, npad):
+    """Pad ``(R, n)`` inputs to ``(R, npad)`` without perturbing real outputs.
+
+    The pad entries form one extra trailing segment per row (``seg_id`` one
+    past the row's last) with ``t = t_max`` (the row's latest issue time),
+    ``svc = s_local = 0`` and hence ``v = finish = t_max``.  Consequences,
+    all exact: the cummax never feeds pads back into real lanes (pads come
+    last); ``t_max`` lies inside ``[min(t), max(finish)]`` so the big2 span
+    is unchanged; and the pads' augmented finish times sort strictly above
+    every real entry, so real searchsorted insertion points are unchanged.
+    """
+    R, n = v.shape
+    pad = npad - n
+    t_max = t_s.max(axis=1, keepdims=True)
+    zeros = np.zeros((R, pad))
+
+    def cat(a, p):
+        return np.concatenate([a, p], axis=1)
+
+    return (
+        cat(v, np.broadcast_to(t_max, (R, pad))),
+        cat(seg_id, np.broadcast_to(seg_id[:, -1:] + 1, (R, pad))),
+        cat(s_local, zeros),
+        cat(svc, zeros),
+        cat(t_s, np.broadcast_to(t_max, (R, pad))),
+    )
+
+
+def replay_scan(
+    v: np.ndarray,
+    seg_id: np.ndarray,
+    s_local: np.ndarray,
+    svc: np.ndarray,
+    t_s: np.ndarray,
+    big: np.ndarray,
+    *,
+    scan: str = "lax",
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Fused batched replay scan; bitwise-equal to ``ref.replay_scan_np``.
+
+    ``scan="lax"`` uses ``jax.lax.cummax``; ``scan="pallas"`` the chunked
+    Pallas kernel.  Returns numpy ``(finish, start, wait, depth)``.  The
+    segment offsets are multiplied out host-side (see module docstring) and
+    the ``big2`` span derivation happens between the two device stages on
+    the stage-1 reductions — the ``(R, n)`` arrays stay on device.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    R, n = v.shape
+    if n == 0:
+        e = np.empty((R, 0))
+        return e, e.copy(), e.copy(), np.empty((R, 0), np.int64)
+    npad = _next_pow2(n)
+    if npad != n:
+        v, seg_id, s_local, svc, t_s = _pad_neutral(
+            v, seg_id, s_local, svc, t_s, npad
+        )
+    off = seg_id * big[:, None]
+    with enable_x64():
+        t_dev = jnp.asarray(t_s, jnp.float64)
+        finish, start, wait, fmax, fmin = _scan_jit(
+            jnp.asarray(v, jnp.float64),
+            jnp.asarray(off, jnp.float64),
+            jnp.asarray(s_local, jnp.float64),
+            jnp.asarray(svc, jnp.float64),
+            t_dev,
+            scan=scan,
+            chunk=chunk,
+            interpret=interpret,
+        )
+        big2 = (np.asarray(fmax) - np.asarray(fmin)) + 1.0
+        off2 = seg_id * big2[:, None]
+        depth = _depth_jit(finish, jnp.asarray(off2, jnp.float64), t_dev)
+        out = tuple(
+            np.asarray(a)[:, :n] for a in (finish, start, wait, depth)
+        )
+    return out

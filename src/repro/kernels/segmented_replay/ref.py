@@ -1,0 +1,51 @@
+"""NumPy reference for the batched segmented replay scan.
+
+Pure numpy (no jax import): this is both the bit-exactness anchor the
+jax/pallas backends are tested against and the fallback the no-jax CI leg
+runs.  Row ``r`` of every array is one independent pricing of the same
+event stream (one technology), already sorted into ``(resource, t_issue)``
+order; the math is operand-for-operand the 1-D path in
+``repro.sim.engine.replay_schedule``, so per-row outputs are bit-identical
+to replaying each row alone (pinned by ``tests/test_replay_kernel.py``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def replay_scan_np(v, seg_id, s_local, svc, t_s, big):
+    """Solve the segmented max-plus recurrence for a batch of rows.
+
+    Inputs are ``(R, n)`` float64/int64 arrays (``big`` is ``(R,)``); see
+    ``repro.sim.engine.replay_schedule`` for their derivation.  Returns
+    ``(finish, start, wait, depth)``, each ``(R, n)``.
+    """
+    # In-place updates below are bitwise-neutral: they only reuse buffers
+    # (same elementwise ops) and swap addend order (IEEE + is commutative;
+    # only *re-association* changes results).
+    off = seg_id * big[:, None]
+    aug = v + off
+    np.maximum.accumulate(aug, axis=1, out=aug)
+    aug -= off  # running max, decoded in place
+    finish = aug
+    finish += s_local  # s_local + running_max
+    start = finish - svc
+    wait = start - t_s
+
+    # Queue depth via the same offset trick: one searchsorted per row over
+    # the segment-augmented finish times (identical arithmetic to the 1-D
+    # path's ``big2`` construction).
+    fmax = np.maximum(finish.max(axis=1), t_s.max(axis=1))
+    fmin = np.minimum(finish.min(axis=1), t_s.min(axis=1))
+    big2 = (fmax - fmin) + 1.0
+    off2 = seg_id * big2[:, None]
+    finish_aug = finish + off2
+    query = off2
+    query += t_s  # t_s + off2, reusing the offset buffer
+    R, n = v.shape
+    ar = np.arange(n)
+    depth = np.empty((R, n), np.int64)
+    for r in range(R):
+        depth[r] = ar - np.searchsorted(finish_aug[r], query[r], side="left")
+    return finish, start, wait, depth

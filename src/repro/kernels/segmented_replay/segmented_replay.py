@@ -1,0 +1,89 @@
+"""Segmented-replay cummax kernel (Pallas TPU).
+
+The FIFO replay in ``repro.sim.engine`` reduces the per-bank recurrence to a
+single running max over the offset-augmented array ``v + seg_id * big``
+(``big`` separates bank segments so earlier banks can never win).  This
+kernel computes that running max — a plain row-wise cummax — in the same
+chunked associative-scan idiom as ``ssd_scan``: grid ``(rows, chunks)`` with
+the chunk axis innermost and sequential, an SMEM scalar carrying the
+inter-chunk running max, and a log2(Q) doubling-shift max-scan inside each
+chunk.
+
+Bitwise contract: every operation is a comparison-select (``jnp.maximum``)
+— no reassociated additions — so the output is bit-identical to
+``np.maximum.accumulate`` for any chunk size, which is what lets the Pallas
+backend share the numpy reference's goldens (pinned by
+``tests/test_replay_kernel.py``).  The offset encode/decode stays outside
+the kernel (single elementwise IEEE add/sub, also exact).
+
+The tail is padded with ``-inf`` (a max identity), so padded lanes never
+leak into real outputs.  Replay offsets reach ~1e11 ns, where float32
+resolution is ~10 us — the kernel therefore runs in float64, which on real
+TPUs requires interpret mode (documented in docs/perf.md); CI always runs
+``interpret=True`` so tier-1 stays hardware-independent.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
+
+
+def _cummax_kernel(x_ref, o_ref, carry, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        carry[0, 0] = jnp.array(-jnp.inf, carry.dtype)
+
+    y = x_ref[...]  # (1, Q)
+    # Doubling-shift max-scan: after step s, y[i] = max(x[i-2s+1 .. i]).
+    s = 1
+    while s < chunk:
+        shifted = jnp.concatenate(
+            [jnp.full((1, s), -jnp.inf, y.dtype), y[:, :-s]], axis=1
+        )
+        y = jnp.maximum(y, shifted)
+        s *= 2
+    y = jnp.maximum(y, carry[0, 0])  # fold in earlier chunks of this row
+    o_ref[...] = y
+    carry[0, 0] = y[0, -1]
+
+
+def cummax_2d(
+    x: jax.Array, *, chunk: int = 1024, interpret: bool = False
+) -> jax.Array:
+    """Row-wise running maximum of a 2D float array.
+
+    Bit-identical to ``np.maximum.accumulate(x, axis=1)`` (comparisons
+    only).  ``chunk`` is the in-block scan length; rows are padded to a
+    multiple of it with ``-inf`` and the pad is sliced off the output.
+    """
+    R, n = x.shape
+    if n == 0:
+        return x
+    Q = min(chunk, n)
+    npad = -(-n // Q) * Q
+    if npad != n:
+        x = jnp.pad(x, ((0, 0), (0, npad - n)), constant_values=-jnp.inf)
+    nc = npad // Q
+
+    out = pl.pallas_call(
+        functools.partial(_cummax_kernel, chunk=Q),
+        grid=(R, nc),
+        in_specs=[pl.BlockSpec((1, Q), lambda r, c: (r, c))],
+        out_specs=pl.BlockSpec((1, Q), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((R, npad), x.dtype),
+        scratch_shapes=[pltpu.SMEM((1, 1), x.dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x)
+    return out[:, :n] if npad != n else out

@@ -100,6 +100,13 @@ def _workloads(domain: str, models: str):
     return picked
 
 
+def _grid_backend(args) -> str:
+    """Backend for the closed-form workload grid, which has no Pallas path
+    ("pallas" asks for the kernel-accelerated replay; jax is its grid
+    counterpart)."""
+    return "jax" if args.backend == "pallas" else args.backend
+
+
 def explore(
     workloads,
     spec: GridSpec,
@@ -226,7 +233,7 @@ def explore_serving(args) -> int:
         )
     recorder = obs.TimelineRecorder() if args.trace_out else None
     t0 = time.perf_counter()
-    backend = "jax" if args.backend == "jax" else "numpy"
+    backend = args.backend
     with obs.span("dse/serving"):
         out = evaluate_serving_slo(spec, mode=args.sweep_mode, backend=backend,
                                    recorder=recorder)
@@ -338,7 +345,8 @@ def main(argv=None) -> int:
     ap.add_argument("--scenario", default=None, metavar="PATH",
                     help="run a repro.spec.Scenario JSON file end to end "
                          "(--smoke shrinks it to a CI-sized grid)")
-    ap.add_argument("--backend", default="auto", choices=["auto", "numpy", "jax"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "numpy", "jax", "pallas"])
     ap.add_argument("--refine", action="store_true",
                     help="re-score the Pareto frontier with the trace simulator")
     ap.add_argument("--tile-bytes", type=int, default=None)
@@ -380,7 +388,8 @@ def main(argv=None) -> int:
             modes=("inference",),
         )
         rows = explore(_workloads("cv", "resnet18"), spec,
-                       backend=args.backend, refine=True, tile_bytes=65536)
+                       backend=_grid_backend(args), refine=True,
+                       tile_bytes=65536)
         for row in rows:
             _print_row(con, row, full=True)
         ok = all(row["pareto"] for row in rows) and all(
@@ -400,7 +409,8 @@ def main(argv=None) -> int:
     )
     rows = explore(
         _workloads(args.domain, args.models), spec,
-        backend=args.backend, refine=args.refine, tile_bytes=args.tile_bytes,
+        backend=_grid_backend(args), refine=args.refine,
+        tile_bytes=args.tile_bytes,
     )
     if not rows:
         con.error("nothing to explore")

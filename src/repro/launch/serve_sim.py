@@ -162,7 +162,8 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--coalesce-window-ns", type=float, default=None,
                     help="write-combining window (default: 4x token interval)")
-    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "numpy", "jax", "pallas"])
     ap.add_argument("--lowering", default="block", choices=["block", "scalar"],
                     help="step lowering: vectorized blocks (default) or the "
                          "per-request scalar reference (bit-identical output)")

@@ -172,7 +172,8 @@ def main(argv=None) -> int:
     ap.add_argument("--coalesce-window-ns", type=float, default=None,
                     help="write-combining window; 0 disables "
                          "(serving default: 4x token interval)")
-    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "numpy", "jax", "pallas"])
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--arrival-rate", type=float, default=100.0)
     ap.add_argument("--prompt-len", type=int, default=256)

@@ -10,10 +10,14 @@ bit-identical per-request reference), prices them per GLB technology
 (``TechPricer``) through ``repro.sim``'s TraceBuilder, and scores the FIFO
 replay — TTFT/TPOT p50/p99, bank-conflict rate, GLB page residency.  The
 sweep engine (``sweep``) evaluates QPS x capacity x technology grids off
-one shared request draw, re-pricing one lowered schedule across
-technologies under a schedule-invariance certificate; ``repro.dse.serving``
-uses it to find the SLO-knee capacity.  See docs/serving.md and
-docs/perf.md.
+one shared request draw: the lowered blocks are gathered once into a
+technology-neutral column run (``replay.NeutralRun``), priced vectorially
+per technology, and every certified technology's replay is scored in one
+batched segmented scan (``replay.score_shared_batch``, numpy/jax/pallas
+backends, bit-identical reports); points whose schedule-invariance
+certificate fails fall back to the per-point closed loop.
+``repro.dse.serving`` uses it to find the SLO-knee capacity.  See
+docs/serving.md and docs/perf.md.
 """
 
 from repro.serve.kv_pages import PagedKVAllocator
@@ -26,6 +30,11 @@ from repro.serve.lower import (
     TechPricer,
     closed_loop_serving,
     summarize_report,
+)
+from repro.serve.replay import (
+    NeutralRun,
+    TechPricing,
+    score_shared_batch,
 )
 from repro.serve.scheduler import (
     ContinuousBatchScheduler,
@@ -42,6 +51,7 @@ from repro.serve.sweep import (
 __all__ = [
     "BlockEmitter",
     "ContinuousBatchScheduler",
+    "NeutralRun",
     "PagedKVAllocator",
     "RequestState",
     "ScalarEmitter",
@@ -53,7 +63,9 @@ __all__ = [
     "StepPlan",
     "SweepRow",
     "TechPricer",
+    "TechPricing",
     "closed_loop_serving",
+    "score_shared_batch",
     "summarize_report",
     "sweep_serving_grid",
 ]

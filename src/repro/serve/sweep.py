@@ -29,10 +29,18 @@ its steps) falls back to its own closed loop, so ``sweep_serving_grid``
 always returns closed-loop-exact rows; ``shared`` on each row records which
 path produced it.
 
-Scoring replays each priced trace through ``repro.sim``; ``backend="jax"``
-routes the replay's segmented scan through ``jax.lax.cummax`` (mirroring
-``repro.dse.grid``'s optional jitted backend) for device offload of very
-large grids.
+Scoring is batched: per (qps, capacity) the shared run's step blocks are
+flattened **once** into technology-neutral trace columns
+(:class:`repro.serve.replay.NeutralRun`), priced per technology with a few
+vectorized multiplies, and every *certified* technology is replayed in a
+single :func:`repro.sim.engine.replay_schedule_batch` call — the
+write-combining mask, the time sort, and the segmented max-plus scan are
+shared or batched instead of recomputed per technology.  ``backend`` picks
+the scan implementation: ``"numpy"`` (``np.maximum.accumulate``), ``"jax"``
+(one fused jitted XLA program around ``jax.lax.cummax``), ``"pallas"`` (the
+chunked ``repro.kernels.segmented_replay`` kernel), or ``"auto"`` (jax when
+importable, else numpy).  All backends produce bit-identical rows — pinned
+by ``tests/test_replay_kernel.py``.
 """
 
 from __future__ import annotations
@@ -43,7 +51,7 @@ import time
 import numpy as np
 
 from repro.core.workload import NLP_TABLE_V, NLPModelSpec
-from repro.sim.engine import SimConfig
+from repro.sim.engine import SimConfig, resolve_backend
 from repro.sim.trace import ServingConfig, arrivals_at_qps, draw_request_shape
 from repro.spec import build_system, tech_group
 from repro.serve.lower import (
@@ -52,12 +60,11 @@ from repro.serve.lower import (
     ScalarEmitter,
     ServeModel,
     ServeReport,
-    TechPricer,
     closed_loop_serving,
     drive_serving_loop,
-    score_run,
     serving_run_meta,
 )
+from repro.serve.replay import NeutralRun, score_shared_batch
 from repro.serve.scheduler import ContinuousBatchScheduler, ServeEngineConfig
 
 
@@ -140,7 +147,7 @@ def _shared_run(model: ServeModel, sched: ContinuousBatchScheduler,
 def sweep_serving_grid(
     spec: ServingGridSpec,
     mode: str = "shared",
-    backend: str = "numpy",
+    backend: str = "auto",
     n_dram_channels: int = 8,
     n_prefetch_channels: int = 4,
     lowering: str = "block",
@@ -154,10 +161,16 @@ def sweep_serving_grid(
     closed-loop fallback; ``mode="exact"`` runs every triple through its own
     closed loop (the reference path the certificate is validated against).
 
+    ``backend`` selects the replay-scan implementation (``"auto"`` picks
+    jax on an accelerator and numpy on CPU — see
+    :func:`repro.sim.engine.resolve_backend`); every backend yields
+    bit-identical rows, so this is purely a performance knob.
+
     Pass a dict as ``timing`` to receive the wall-clock split:
     ``loop_s`` (scheduler + allocator + lowering + per-tech pricing) vs
-    ``score_s`` (trace build + replay + report) — the benchmark harness uses
-    it to separate the serving-loop speedup from the shared replay cost.
+    ``score_s`` (trace build + batched replay + report) — the benchmark
+    harness uses it to separate the serving-loop speedup from the shared
+    replay cost.
 
     ``recorder`` (a :class:`repro.obs.TimelineRecorder`) records the *first*
     grid point only — its serving loop and its first technology's replay —
@@ -168,6 +181,7 @@ def sweep_serving_grid(
     """
     if mode not in ("shared", "exact"):
         raise ValueError(f"unknown sweep mode {mode!r}")
+    backend = resolve_backend(backend)
     if timing is None:
         timing = {}
     timing.setdefault("loop_s", 0.0)
@@ -216,43 +230,58 @@ def sweep_serving_grid(
                                              spec.engine)
             blocks_list, dts, stats = _shared_run(model, sched, lowering,
                                                   t_dram_acc_ns, recorder=rec)
+            # Flatten the run's blocks once (class-major neutral columns),
+            # then price every technology off the same columns.  The shared
+            # clock already carries the (tech-invariant) DRAM busy term;
+            # only the per-bank GLB busy time can push a technology off the
+            # shared schedule — the pricing certificate checks every step.
+            run = NeutralRun(blocks_list, dts, model,
+                             n_dram_channels, n_prefetch_channels)
+            pricings = [run.price(build_system(tech, cap))
+                        for tech in spec.technologies]
             timing["loop_s"] += time.perf_counter() - t0
             sim_config = SimConfig(
                 coalesce_window_ns=4 * model.interval_ns, backend=backend,
                 kind_stats=False,
             )
 
-            for tech in spec.technologies:
-                t0 = time.perf_counter()
-                pricer = TechPricer.for_tech(tech, cap, model,
-                                             n_dram_channels,
-                                             n_prefetch_channels)
-                system = pricer.system
-                # The shared clock already carries the (tech-invariant) DRAM
-                # busy term; only the per-bank GLB busy time can push a
-                # technology off the shared schedule — price_run checks every
-                # step in one segmented pass.
-                certified = pricer.price_run(blocks_list, dts)
-                timing["loop_s"] += time.perf_counter() - t0
-                if certified:
-                    t0 = time.perf_counter()
-                    trace = pricer.b.build(
-                        compute_time_s=0.0,
-                        meta=serving_run_meta(nlp, cfg, spec.engine, system,
-                                              model, stats, lowering,
-                                              schedule="shared"),
-                    )
-                    rep = score_run(trace, sched, model, stats, system,
-                                    sim_config, recorder=rec)
-                    timing["score_s"] += time.perf_counter() - t0
-                    rows.append(SweepRow(tech, cap, qps, True, rep))
+            # All certified technologies replay in one batched pass.
+            t0 = time.perf_counter()
+            certified = [(tech, p) for tech, p in
+                         zip(spec.technologies, pricings) if p.certified]
+            shared_reports: dict[str, ServeReport] = {}
+            if certified:
+                traces = [
+                    run.build_trace(p, serving_run_meta(
+                        nlp, cfg, spec.engine, p.system, model, stats,
+                        lowering, schedule="shared"))
+                    for _, p in certified
+                ]
+                reports = score_shared_batch(
+                    traces, [p.system for _, p in certified], sched, model,
+                    stats, sim_config,
+                    # The recorder taps the first technology's replay only
+                    # when that technology is certified (first certified
+                    # trace == first technology then).
+                    recorder=(rec if pricings[0].certified else None),
+                )
+                shared_reports = {
+                    tech: rep for (tech, _), rep in zip(certified, reports)
+                }
+            timing["score_s"] += time.perf_counter() - t0
+
+            for tech, pricing in zip(spec.technologies, pricings):
+                if pricing.certified:
+                    rows.append(SweepRow(tech, cap, qps, True,
+                                         shared_reports[tech]))
                 else:
                     # Congestion would have stretched this technology's
-                    # steps: replay its own closed loop (still block-lowered).
-                    # The shared loop already recorded this grid point's
-                    # lifecycles, so the fallback only taps the replay.
+                    # steps: replay its own closed loop (still
+                    # block-lowered).  The shared loop already recorded this
+                    # grid point's lifecycles, so the fallback only taps the
+                    # replay.
                     _, rep = closed_loop_serving(
-                        system, nlp, cfg, spec.engine,
+                        pricing.system, nlp, cfg, spec.engine,
                         sim_config=sim_config,
                         n_dram_channels=n_dram_channels,
                         n_prefetch_channels=n_prefetch_channels,
@@ -260,7 +289,7 @@ def sweep_serving_grid(
                         timing=timing,
                     )
                     rows.append(SweepRow(tech, cap, qps, False, rep))
-                rec = None
+            rec = None
     return rows
 
 

@@ -18,13 +18,24 @@ A write-coalescing pre-pass merges repeated writes to the same ``line``
 within a time window (the KV-append pattern in serving traces), modelling a
 simple write-combining buffer in front of the banks.
 
-``backend="jax"`` runs the scan with ``jax.lax.cummax`` instead of numpy —
-same math, useful for device offload of very large traces.
+``backend="jax"`` runs the scan with ``jax.lax.cummax`` instead of numpy;
+``backend="pallas"`` routes it through the chunked associative-scan kernel
+in ``repro.kernels.segmented_replay`` (interpret mode off-TPU).  Both are
+**bit-identical** to the numpy path: the scan is comparisons only, and the
+offset encode/decode are single elementwise IEEE ops — see
+``repro.kernels.segmented_replay.ops`` for the exactness argument and
+``tests/test_replay_kernel.py`` for the differential pin.
+
+:func:`replay_schedule_batch` replays many pricings of one shared event
+stream (the serving sweep's per-technology traces) in a single batched
+pass — shared time sort, batched per-row segment bookkeeping, and one fused
+device scan instead of per-technology host round-trips.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import difflib
 
 import numpy as np
 
@@ -40,14 +51,63 @@ from repro.sim.trace import (
 )
 
 
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+class UnknownBackendError(ValueError):
+    """Raised for a replay backend name outside :data:`BACKENDS`.
+
+    A typo used to fall through every ``backend == ...`` branch and silently
+    run numpy; now it fails loudly with a near-miss suggestion (same idiom
+    as ``repro.spec.UnknownTechnologyError``).
+    """
+
+    def __init__(self, name: str, known: tuple[str, ...] = BACKENDS):
+        near = difflib.get_close_matches(name, known, n=3, cutoff=0.5)
+        hint = f"; did you mean {', '.join(repr(n) for n in near)}?" if near else ""
+        super().__init__(
+            f"unknown replay backend {name!r}{hint} "
+            f"(available: {', '.join(known)})"
+        )
+        self.name = name
+        self.suggestions = tuple(near)
+
+
+def resolve_backend(backend: str) -> str:
+    """Map ``"auto"`` to the fastest backend for this platform and validate
+    everything else.
+
+    On an accelerator (``jax.default_backend() != "cpu"``) that is the
+    fused jax program; on CPU it is numpy — a serial
+    ``np.maximum.accumulate`` beats XLA's O(n log n) associative-scan
+    lowering plus transfer overhead there (measured in
+    ``benchmarks/replay_bench.py``; every backend is bit-identical, so this
+    is purely a performance choice).
+    """
+    if backend == "auto":
+        try:
+            import jax
+        except ImportError:
+            return "numpy"
+        return "jax" if jax.default_backend() != "cpu" else "numpy"
+    if backend not in BACKENDS:
+        raise UnknownBackendError(backend)
+    return backend
+
+
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     coalesce_window_ns: float = 0.0  # 0 disables the write-combining buffer
-    backend: str = "numpy"  # "numpy" | "jax"
+    backend: str = "numpy"  # "numpy" | "jax" | "pallas" | "auto"
     # Per-kind latency histograms cost several masked percentile passes; the
     # serving scorers (which only consume the headline metrics) switch them
     # off.  ``per_kind`` is {} when disabled.
     kind_stats: bool = True
+
+    def __post_init__(self):
+        # "auto" is resolved eagerly so every downstream branch sees a
+        # concrete backend name; anything else must be a known backend.
+        object.__setattr__(self, "backend", resolve_backend(self.backend))
 
 
 _EXPOSED_LUT = np.zeros(8, bool)
@@ -102,40 +162,58 @@ def _cummax(x: np.ndarray, backend: str) -> np.ndarray:
         # float32 resolution there is ~10 us.
         with enable_x64():
             return np.asarray(jax.lax.cummax(jax.numpy.asarray(x, jax.numpy.float64)))
+    if backend == "pallas":
+        from repro.kernels.segmented_replay.ops import cummax
+
+        return cummax(np.asarray(x)[None], scan="pallas")[0]
     return np.maximum.accumulate(x)
+
+
+def coalesce_dropped_indices(
+    t_issue_ns: np.ndarray, kind: np.ndarray, line: np.ndarray,
+    window_ns: float,
+) -> np.ndarray:
+    """Indices of writes absorbed by the combining buffer.
+
+    The first write of each (line, window-bucket) group is kept (one
+    physical write-back); later ones are dropped.  Depends only on issue
+    times, kinds, and line ids — all technology-invariant in the serving
+    sweep, which is why the batched replay computes this mask once and
+    shares it across technologies.
+    """
+    is_write = (
+        ((kind == KIND_GLB_WR) | (kind == KIND_DRAM_WR) | (kind == KIND_PREFETCH_WR))
+        & (line >= 0)
+    )
+    idx = np.flatnonzero(is_write)
+    if idx.size == 0:
+        return idx
+    bucket = (t_issue_ns[idx] // window_ns).astype(np.int64)
+    lines = line[idx]
+    # Combined-key radix sort when (line, bucket) packs into int64 —
+    # identical permutation to the two-key lexsort (distinct pairs map to
+    # distinct keys; ties keep input order under the stable sort).
+    bspan = int(bucket.max()) - int(bucket.min()) + 1
+    lmax = int(lines.max()) + 1
+    if lmax * bspan < 2**62:
+        key = lines * bspan + (bucket - bucket.min())
+        order = np.argsort(key, kind="stable")
+    else:  # pragma: no cover - astronomically sparse time axis
+        order = np.lexsort((bucket, lines))
+    ls, bs = lines[order], bucket[order]
+    dup = np.zeros(idx.size, bool)
+    dup[1:] = (ls[1:] == ls[:-1]) & (bs[1:] == bs[:-1])
+    return idx[order][dup]
 
 
 def _coalesce_writes(trace: Trace, window_ns: float):
     """Merge writes to the same line within one window bucket.
 
-    Returns (keep_mask, n_dropped, dropped_energy_pj).  The first write of
-    each (line, bucket) group is kept (one physical write-back); later ones
-    are absorbed by the combining buffer.
+    Returns (keep_mask, n_dropped, dropped_energy_pj).
     """
-    is_write = (
-        ((trace.kind == KIND_GLB_WR) | (trace.kind == KIND_DRAM_WR) | (trace.kind == KIND_PREFETCH_WR))
-        & (trace.line >= 0)
-    )
-    idx = np.flatnonzero(is_write)
-    if idx.size == 0:
-        return np.ones(len(trace), bool), 0, 0.0
-    bucket = (trace.t_issue_ns[idx] // window_ns).astype(np.int64)
-    line = trace.line[idx]
-    # Combined-key radix sort when (line, bucket) packs into int64 —
-    # identical permutation to the two-key lexsort (distinct pairs map to
-    # distinct keys; ties keep input order under the stable sort).
-    bspan = int(bucket.max()) - int(bucket.min()) + 1 if idx.size else 1
-    lmax = int(line.max()) + 1
-    if lmax * bspan < 2**62:
-        key = line * bspan + (bucket - bucket.min())
-        order = np.argsort(key, kind="stable")
-    else:  # pragma: no cover - astronomically sparse time axis
-        order = np.lexsort((bucket, line))
-    ls, bs = line[order], bucket[order]
-    dup = np.zeros(idx.size, bool)
-    dup[1:] = (ls[1:] == ls[:-1]) & (bs[1:] == bs[:-1])
+    dropped = coalesce_dropped_indices(trace.t_issue_ns, trace.kind,
+                                       trace.line, window_ns)
     keep = np.ones(len(trace), bool)
-    dropped = idx[order][dup]
     keep[dropped] = False
     return keep, int(dropped.size), float(trace.energy_pj[dropped].sum())
 
@@ -172,6 +250,8 @@ def replay_schedule(
     backend: str = "numpy",
 ) -> ReplaySchedule:
     """Solve the per-resource FIFO recurrence (segmented max-plus scan)."""
+    if backend not in BACKENDS:
+        raise UnknownBackendError(backend)
     n = t_issue.shape[0]
     if n == 0:
         e = np.empty(0, np.float64)
@@ -224,6 +304,120 @@ def replay_schedule(
         finish_ns=finish,
         wait_ns=wait,
         queue_depth=depth,
+        order=order,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedReplaySchedule:
+    """R independent pricings of one event stream, replayed in one pass.
+
+    Every array is ``(R, n)``; row ``r`` is bit-identical to
+    ``replay_schedule`` on that row's 1-D inputs (pinned by
+    ``tests/test_replay_kernel.py``).  :meth:`row` materializes one row as a
+    plain :class:`ReplaySchedule` (e.g. for the timeline recorder).
+    """
+
+    resource: np.ndarray
+    t_issue_ns: np.ndarray
+    service_ns: np.ndarray
+    kind: np.ndarray
+    start_ns: np.ndarray
+    finish_ns: np.ndarray
+    wait_ns: np.ndarray
+    queue_depth: np.ndarray
+    order: np.ndarray
+
+    def row(self, i: int) -> ReplaySchedule:
+        return ReplaySchedule(
+            resource=self.resource[i], t_issue_ns=self.t_issue_ns[i],
+            service_ns=self.service_ns[i], kind=self.kind[i],
+            start_ns=self.start_ns[i], finish_ns=self.finish_ns[i],
+            wait_ns=self.wait_ns[i], queue_depth=self.queue_depth[i],
+            order=self.order[i],
+        )
+
+
+def replay_schedule_batch(
+    t_issue: np.ndarray,
+    resource: np.ndarray,
+    service: np.ndarray,
+    kind: np.ndarray,
+    backend: str = "numpy",
+) -> BatchedReplaySchedule:
+    """Replay ``R`` pricings of one shared event stream in a batched pass.
+
+    ``t_issue`` and ``kind`` are shared ``(n,)`` columns (issue times and
+    event kinds are technology-invariant); ``resource`` and ``service`` are
+    ``(R, n)`` — one row per pricing.  Per-row results are bit-identical to
+    ``replay_schedule`` on that row because every batched step is the exact
+    per-row operation:
+
+    * the time sort is shared: ``lexsort((t, res)) == ord1[argsort(res[ord1],
+      stable)]`` with ``ord1 = argsort(t, stable)`` computed once (stable
+      sorts compose), and the sorted-input radix fast path is per-row
+      ``argsort(res, stable)`` exactly as in 1-D;
+    * ``argsort``/``cumsum``/``maximum.accumulate`` along ``axis=1`` equal
+      their per-row 1-D calls bit-for-bit (independent rows);
+    * the segment base forward-fill ``maximum.accumulate(where(new_seg,
+      cs - svc, -inf))`` propagates exact copies of the per-segment values
+      (``cs`` is nondecreasing);
+    * the scan stage runs only association-free ops (see
+      ``repro.kernels.segmented_replay.ops``), so ``backend="jax"`` /
+      ``"pallas"`` fuse it into one jitted device program while staying
+      bitwise equal to numpy.
+    """
+    if backend not in BACKENDS:
+        raise UnknownBackendError(backend)
+    R, n = resource.shape
+    if n == 0:
+        e = np.empty((R, 0))
+        return BatchedReplaySchedule(
+            resource=np.empty((R, 0), resource.dtype), t_issue_ns=e,
+            service_ns=e.copy(), kind=np.empty((R, 0), kind.dtype),
+            start_ns=e.copy(), finish_ns=e.copy(), wait_ns=e.copy(),
+            queue_depth=np.empty((R, 0), np.int64),
+            order=np.empty((R, 0), np.int64),
+        )
+    if n > 1 and t_issue[0] <= t_issue[-1] and np.all(np.diff(t_issue) >= 0):
+        order = np.argsort(resource, axis=1, kind="stable")
+    else:
+        ord1 = np.argsort(t_issue, kind="stable")
+        order = ord1[np.argsort(resource[:, ord1], axis=1, kind="stable")]
+    res_s = np.take_along_axis(resource, order, axis=1)
+    svc_s = np.take_along_axis(service, order, axis=1)
+    t_s = t_issue[order]
+    kind_s = kind[order]
+
+    new_seg = np.empty((R, n), bool)
+    new_seg[:, 0] = True
+    new_seg[:, 1:] = res_s[:, 1:] != res_s[:, :-1]
+    seg_id = np.cumsum(new_seg, axis=1) - 1
+    cs = np.cumsum(svc_s, axis=1)
+    seg_base = np.maximum.accumulate(
+        np.where(new_seg, cs - svc_s, -np.inf), axis=1
+    )
+    s_local = cs - seg_base
+    v = t_s - (s_local - svc_s)
+    big = (v.max(axis=1) - v.min(axis=1)) + 1.0
+
+    if backend == "numpy":
+        from repro.kernels.segmented_replay.ref import replay_scan_np
+
+        finish, start, wait, depth = replay_scan_np(
+            v, seg_id, s_local, svc_s, t_s, big
+        )
+    else:
+        from repro.kernels.segmented_replay.ops import replay_scan
+
+        finish, start, wait, depth = replay_scan(
+            v, seg_id, s_local, svc_s, t_s, big,
+            scan="pallas" if backend == "pallas" else "lax",
+        )
+
+    return BatchedReplaySchedule(
+        resource=res_s, t_issue_ns=t_s, service_ns=svc_s, kind=kind_s,
+        start_ns=start, finish_ns=finish, wait_ns=wait, queue_depth=depth,
         order=order,
     )
 

@@ -200,7 +200,7 @@ def run_scenario(sc: Scenario, backend: str = "auto") -> dict:
         for q in sorted(sc.qps):
             out = evaluate_serving_slo(
                 ServingSweepSpec.from_scenario(sc, qps=q),
-                backend="numpy" if backend == "auto" else backend,
+                backend=backend,
             )
             rows.extend(out["rows"])
             knees = {"knee_capacity_mb": out["knee_capacity_mb"],
@@ -214,6 +214,9 @@ def run_scenario(sc: Scenario, backend: str = "auto") -> dict:
     from repro.dse import evaluate_workload_grid, knee_index, pareto_indices
     from repro.dse.grid import GridSpec
 
+    # The closed-form grid has no Pallas path; "pallas" means "the
+    # kernel-accelerated replay" and maps to its jax counterpart here.
+    backend = "jax" if backend == "pallas" else backend
     spec = GridSpec.from_scenario(sc)
     techs = sc.resolve_technologies()
     rows = []

@@ -369,6 +369,32 @@ def test_recorder_leaves_sweep_metrics_bit_identical():
                            dataclasses.asdict(b.report))
 
 
+def test_sweep_reports_bit_identical_across_backends():
+    """Golden backend trio: the whole sweep report — every float in every
+    row — must be bitwise identical for numpy, jax, and pallas replays,
+    with and without a recorder attached."""
+    import pytest
+
+    pytest.importorskip("jax", reason="backend trio needs jax")
+    from repro.serve import ServingGridSpec, sweep_serving_grid
+
+    grid = ServingGridSpec(qps=(200.0, 400.0), capacities_mb=(32.0,),
+                           technologies=("sot_opt", "sram"), model="gpt2",
+                           serving=_SERVE_CFG, engine=_ENGINE_CFG)
+    ref = sweep_serving_grid(grid, backend="numpy")
+    for backend in ("jax", "pallas"):
+        rec = TimelineRecorder()
+        rows = sweep_serving_grid(grid, backend=backend, recorder=rec)
+        assert rec.n_events > 0
+        assert len(rows) == len(ref)
+        for a, b in zip(ref, rows):
+            assert (a.technology, a.capacity_mb, a.qps, a.shared) == (
+                b.technology, b.capacity_mb, b.qps, b.shared), backend
+            assert _deep_equal(dataclasses.asdict(a.report),
+                               dataclasses.asdict(b.report)), (
+                backend, a.technology, a.qps)
+
+
 # ---------------------------------------------------------------------------
 # console: output-mode contract
 # ---------------------------------------------------------------------------
