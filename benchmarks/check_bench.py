@@ -21,6 +21,11 @@ Compares a fresh benchmark record against the committed baseline:
   events/sec must stay above half the baseline's, and its end-to-end
   speedup over the scalar serving baseline must not fall below the floor
   recorded in the baseline (``speedup_floor_x``);
+* **fleet gate** (``--fleet-current``/``--fleet-baseline``): the 1-replica
+  fleet must stay bit-identical to the single-accelerator closed loop
+  (``fleet_identity``), every technology in the baseline's fleet grid must
+  still be covered with a positive ``cost_per_token``, all requests must
+  complete, and the fleet wall must stay within ``max_regression``;
 
 * **technology coverage**: every technology registered in ``repro.spec``
   must appear in the baseline's ``tech_coverage`` block — either in
@@ -126,6 +131,46 @@ def check_replay(current: dict, baseline: dict,
     return problems
 
 
+def check_fleet(current: dict, baseline: dict,
+                max_regression: float) -> list[str]:
+    """Gate BENCH_fleet.json against its committed baseline."""
+    problems = []
+    cur = current.get("benchmarks", {}).get("fleet")
+    base = baseline.get("benchmarks", {}).get("fleet")
+    if cur is None:
+        return ["fleet: missing from current record"]
+    if base is None:
+        return ["fleet: missing from baseline record"]
+    b_us, c_us = base.get("us_per_call"), cur.get("us_per_call")
+    if b_us and c_us and c_us > max_regression * b_us:
+        problems.append(
+            f"fleet: wall-clock {c_us / 1e6:.2f}s vs baseline "
+            f"{b_us / 1e6:.2f}s (> {max_regression:.1f}x regression)"
+        )
+    if not cur.get("fleet_identity", False):
+        problems.append(
+            "fleet: 1-replica fleet is no longer bit-identical to the "
+            "single-accelerator closed loop"
+        )
+    if not cur.get("all_completed", False):
+        problems.append(
+            "fleet: a disaggregated fleet run left requests uncompleted"
+        )
+    missing = set(base.get("techs", ())) - set(cur.get("techs", ()))
+    if missing:
+        problems.append(
+            f"fleet: technologies {sorted(missing)} covered by the baseline "
+            "are missing from the current record"
+        )
+    for tech, cost in (cur.get("cost_per_token") or {}).items():
+        if not cost or cost <= 0:
+            problems.append(
+                f"fleet: cost_per_token for {tech!r} is {cost!r} "
+                "(expected a positive index)"
+            )
+    return problems
+
+
 def manifest_warnings(current: dict, baseline: dict) -> list[str]:
     """Human-readable warnings for manifest drift (never failures)."""
     try:
@@ -171,6 +216,10 @@ def main(argv=None) -> int:
                     help="freshly produced BENCH_replay.json")
     ap.add_argument("--replay-baseline", default=None,
                     help="committed replay baseline json")
+    ap.add_argument("--fleet-current", default=None,
+                    help="freshly produced BENCH_fleet.json")
+    ap.add_argument("--fleet-baseline", default=None,
+                    help="committed fleet baseline json")
     args = ap.parse_args(argv)
 
     with open(args.current) as fh:
@@ -194,6 +243,21 @@ def main(argv=None) -> int:
             print(f"BENCH WARNING: {w}", file=sys.stderr)
         problems.extend(
             check_replay(replay_cur, replay_base, args.max_regression)
+        )
+    if bool(args.fleet_current) != bool(args.fleet_baseline):
+        problems.append(
+            "fleet: --fleet-current and --fleet-baseline must be "
+            "passed together"
+        )
+    elif args.fleet_current:
+        with open(args.fleet_current) as fh:
+            fleet_cur = json.load(fh)
+        with open(args.fleet_baseline) as fh:
+            fleet_base = json.load(fh)
+        for w in manifest_warnings(fleet_cur, fleet_base):
+            print(f"BENCH WARNING: {w}", file=sys.stderr)
+        problems.extend(
+            check_fleet(fleet_cur, fleet_base, args.max_regression)
         )
     for p in problems:
         print(f"BENCH REGRESSION: {p}", file=sys.stderr)

@@ -1,0 +1,143 @@
+"""Fleet-scale serving benchmark: replicas, routing, disaggregation, cost.
+
+Drives the fleet simulator (``repro.serve.fleet``) and records the three
+facts CI gates on in BENCH_fleet.json:
+
+* ``fleet_identity`` — the 1-replica fleet must stay **bit-identical** to
+  the single-accelerator closed loop (every trace column plus every report
+  field compared bitwise).  This is the refactor's conservation law: the
+  replica axis must be free when it is not used.
+* per-technology fleet metrics — a 4-replica disaggregated fleet (1
+  prefill + 3 decode, least-loaded router) per technology, reporting fleet
+  p99 TTFT/TPOT, KV-stream traffic, and the cost-per-token index
+  (mean alive chips x per-chip GLB area x energy per generated token) the
+  DSE knee selects on.
+* wall-clock for both passes, tracked across PRs against the committed
+  baseline by ``benchmarks/check_bench.py --fleet-current/--fleet-baseline``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.workload import NLP_TABLE_V
+from repro.serve import (
+    FleetConfig,
+    ServeEngineConfig,
+    closed_loop_serving,
+    fleet_serving,
+)
+from repro.sim import ServingConfig
+from repro.spec import build_system, tech_group
+
+TECHS = tech_group("serving") + ("hybrid",)
+# The fleet leg is cheap even with three techs, so smoke keeps the full
+# sram / sot_opt / hybrid coverage and only shrinks the request population.
+SMOKE_TECHS = TECHS
+# The request-population seed; stamped into BENCH_fleet.json's manifest so
+# check_bench can flag a baseline drawn from a different population.
+SEED = 11
+FLEET = FleetConfig(n_replicas=4, router="least_loaded",
+                    disaggregation=True, n_prefill_replicas=1)
+
+
+def _trace_equal(a, b) -> bool:
+    return all(
+        np.array_equal(getattr(a, f.name), getattr(b, f.name))
+        if isinstance(getattr(a, f.name), np.ndarray)
+        else getattr(a, f.name) == getattr(b, f.name)
+        for f in dataclasses.fields(a)
+    )
+
+
+def _report_equal(a, b) -> bool:
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if f.name == "sim":
+            if dataclasses.astuple(va) != dataclasses.astuple(vb):
+                return False
+        elif va != vb:
+            return False
+    return True
+
+
+def run(smoke: bool = False, glb_mb: float = 16.0) -> list[dict]:
+    spec = next(s for s in NLP_TABLE_V if s.name == "gpt2")
+    base = ServingConfig(
+        n_requests=12 if smoke else 32,
+        arrival_rate_rps=300.0 if smoke else 400.0,
+        prompt_len=64 if smoke else 256,
+        decode_len=32 if smoke else 64,
+        seed=SEED,
+    )
+    ecfg = ServeEngineConfig(max_batch=8 if smoke else 16)
+    techs = SMOKE_TECHS if smoke else TECHS
+
+    # -- conservation law: 1-replica fleet == closed loop --------------------
+    system = build_system(techs[-1], glb_mb)
+    t0 = time.perf_counter()
+    tr_ref, rep_ref = closed_loop_serving(system, spec, base, ecfg)
+    loop_wall_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tr_one, fr_one = fleet_serving(system, spec, base, ecfg, FleetConfig())
+    one_wall_s = time.perf_counter() - t0
+    identity = (_trace_equal(tr_ref, tr_one)
+                and _report_equal(rep_ref, fr_one.report))
+
+    # -- per-technology disaggregated fleet ----------------------------------
+    fleet_wall_s = 0.0
+    rows = []
+    for tech in techs:
+        sysT = build_system(tech, glb_mb)
+        t0 = time.perf_counter()
+        _, fr = fleet_serving(sysT, spec, base, ecfg, FLEET)
+        wall = time.perf_counter() - t0
+        fleet_wall_s += wall
+        r = fr.report
+        rows.append(
+            {
+                "tech": tech,
+                "glb_mb": glb_mb,
+                "qps": base.arrival_rate_rps,
+                "n_replicas": fr.n_replicas,
+                "router": fr.router,
+                "disaggregated": fr.disaggregated,
+                "completed": r.completed,
+                "ttft_p99_ms": round(r.ttft_p99_ms, 3),
+                "tpot_p99_ms": round(r.tpot_p99_ms, 4),
+                "kv_xfer_transfers": fr.kv_xfer_transfers,
+                "kv_xfer_mb": round(fr.kv_xfer_bytes / 2**20, 2),
+                "energy_per_token_uj": round(fr.energy_per_token_j * 1e6, 4),
+                "cost_per_token": round(fr.cost_per_token, 6),
+                "wall_s": round(wall, 3),
+                # Identity-pass facts, repeated per row so the CSV stays
+                # rectangular.
+                "fleet_identity": identity,
+                "loop_wall_s": round(loop_wall_s, 3),
+                "one_replica_wall_s": round(one_wall_s, 3),
+            }
+        )
+    return rows
+
+
+def bench_payload(rows: list[dict], us_per_call: float) -> dict:
+    """BENCH_fleet.json entry: wall-clock + key metrics of one run."""
+    first = rows[0] if rows else {}
+    return {
+        "us_per_call": round(us_per_call, 1),
+        "fleet_identity": all(r.get("fleet_identity") for r in rows),
+        "techs": [r["tech"] for r in rows],
+        "n_replicas": first.get("n_replicas"),
+        "router": first.get("router"),
+        "disaggregated": first.get("disaggregated"),
+        "all_completed": all(r["completed"] for r in rows),
+        "worst_ttft_p99_ms": max((r["ttft_p99_ms"] for r in rows),
+                                 default=0.0),
+        "cost_per_token": {r["tech"]: r["cost_per_token"] for r in rows},
+        "fleet_wall_s": round(sum(r["wall_s"] for r in rows), 3),
+        "loop_wall_s": first.get("loop_wall_s"),
+        "rows": rows,
+    }

@@ -5,8 +5,10 @@
 
 Prints ``name,us_per_call,derived`` CSV (one line per benchmark) followed by
 per-benchmark detail tables.  ``--smoke`` shrinks the expensive benchmarks
-(``sim_vs_analytic``, ``explore``, ``serving_qps``) so the whole harness
-stays CI-friendly.
+(``sim_vs_analytic``, ``explore``, ``serving_qps``, ``replay``, ``fleet``)
+so the whole harness stays CI-friendly.  Every ``--only`` token must match
+at least one benchmark name; unknown tokens fail with a suggestion instead
+of silently running nothing.
 
 ``--bench-json`` (default ``BENCH_serving.json``) records each run's
 wall-clock and key metrics as JSON — manifest-stamped (git sha, seed,
@@ -21,6 +23,7 @@ disagree on versions/seed.  Pass an empty string to skip the file.
 from __future__ import annotations
 
 import argparse
+import difflib
 import json
 import platform
 import sys
@@ -42,6 +45,7 @@ from benchmarks import (
     fig16_pt_variation,
     fig18_system_ppa,
     fig19_area,
+    fleet_qps,
     replay_bench,
     roofline,
     serving_qps,
@@ -51,7 +55,7 @@ from benchmarks import (
 from benchmarks.common import rows_to_csv, timed
 
 # Benchmarks whose run() accepts a ``smoke`` flag.
-SMOKE_AWARE = {"sim_vs_analytic", "explore", "serving_qps", "replay"}
+SMOKE_AWARE = {"sim_vs_analytic", "explore", "serving_qps", "replay", "fleet"}
 
 
 def _derive(name: str, rows: list[dict]) -> str:
@@ -116,6 +120,13 @@ def _derive(name: str, rows: list[dict]) -> str:
                 f"e2e_speedup_x={r0.get('end_to_end_speedup_x')},"
                 f"bit_identical={r0.get('bit_identical_backends')}"
             )
+        if name == "fleet":
+            worst = max(r["ttft_p99_ms"] for r in rows)
+            ident = all(r.get("fleet_identity") for r in rows)
+            return (
+                f"techs={len(rows)},worst_ttft_p99_ms={worst},"
+                f"fleet_identity={ident}"
+            )
         if name == "roofline":
             if "note" in rows[0]:
                 return rows[0]["note"]
@@ -148,6 +159,7 @@ BENCHMARKS = [
     ("explore", explore.run),
     ("serving_qps", serving_qps.run),
     ("replay", replay_bench.run),
+    ("fleet", fleet_qps.run),
 ]
 
 
@@ -165,16 +177,31 @@ def main() -> None:
                     help="write the replay benchmark's own stamped record "
                          "here ('' to skip; requires the replay benchmark "
                          "to be selected)")
+    ap.add_argument("--fleet-json", default="BENCH_fleet.json",
+                    help="write the fleet benchmark's own stamped record "
+                         "here ('' to skip; requires the fleet benchmark "
+                         "to be selected)")
     obs.add_output_args(ap)
     args = ap.parse_args()
     obs.enable()
     con = obs.Console.from_args(args)
 
-    wanted = args.only.split(",") if args.only else []
+    wanted = [w for w in (args.only.split(",") if args.only else []) if w]
+    known = [name for name, _ in BENCHMARKS]
+    # Every --only token must select at least one benchmark: a misspelled
+    # name used to be silently skipped, which reads as "benchmark passed"
+    # in CI while running nothing.
+    for w in wanted:
+        if not any(w in name for name in known):
+            hint = difflib.get_close_matches(w, known, n=3, cutoff=0.5)
+            suffix = f"; did you mean {', '.join(hint)}?" if hint else ""
+            con.error(f"--only: {w!r} matches no benchmark{suffix} "
+                      f"(known: {', '.join(known)})")
+            sys.exit(2)
     selected = [
         (name, fn)
         for name, fn in BENCHMARKS
-        if not wanted or any(w and w in name for w in wanted)
+        if not wanted or any(w in name for w in wanted)
     ]
     if not selected:
         con.error(f"no benchmark matches --only {args.only!r}")
@@ -205,6 +232,8 @@ def main() -> None:
             bench_entries[name] = serving_qps.bench_payload(rows, us)
         elif name == "replay":
             bench_entries[name] = replay_bench.bench_payload(rows, us)
+        elif name == "fleet":
+            bench_entries[name] = fleet_qps.bench_payload(rows, us)
         else:
             bench_entries[name] = {"us_per_call": round(us, 1)}
     payload = {
@@ -237,6 +266,20 @@ def main() -> None:
         with open(args.replay_json, "w") as fh:
             json.dump(replay_payload, fh, indent=2, default=obs.json_default)
         con.info(f"# wrote {args.replay_json}")
+    if args.fleet_json and "fleet" in bench_entries:
+        fleet_payload = {
+            "schema": 1,
+            "created_unix": int(time.time()),
+            "smoke": args.smoke,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "benchmarks": {"fleet": bench_entries["fleet"]},
+        }
+        obs.stamp(fleet_payload, seed=fleet_qps.SEED,
+                  config={"smoke": args.smoke})
+        with open(args.fleet_json, "w") as fh:
+            json.dump(fleet_payload, fh, indent=2, default=obs.json_default)
+        con.info(f"# wrote {args.fleet_json}")
     con.result(payload)
     if args.full:
         for name, rows in details:

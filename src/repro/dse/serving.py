@@ -45,6 +45,7 @@ class ServingSweepSpec:
     slo: ServingSLO = ServingSLO()
     serving: ServingConfig = None  # arrival/prompt/decode draws; None = default
     engine: object = None  # ServeEngineConfig; None = default
+    fleet: object = None  # repro.serve.FleetConfig; None = 1-replica default
 
     @classmethod
     def from_scenario(cls, scenario, qps: float | None = None) -> "ServingSweepSpec":
@@ -66,6 +67,7 @@ class ServingSweepSpec:
             ),
             serving=scenario.serving_config(qps),
             engine=scenario.engine_config(),
+            fleet=scenario.fleet_config(),
         )
 
     def resolve_model(self) -> NLPModelSpec:
@@ -97,6 +99,7 @@ def evaluate_serving_grid(
     rows are bit-identical with or without it.
     """
     from repro.serve import ServeEngineConfig
+    from repro.serve.fleet import FleetConfig
     from repro.serve.sweep import ServingGridSpec, sweep_serving_grid
 
     base = spec.serving or ServingConfig()
@@ -107,6 +110,7 @@ def evaluate_serving_grid(
         model=spec.model,
         serving=dataclasses.replace(base, arrival_rate_rps=spec.qps),
         engine=spec.engine or ServeEngineConfig(),
+        fleet=spec.fleet or FleetConfig(),
     )
     sweep = sweep_serving_grid(grid, mode=mode, backend=backend,
                                recorder=recorder)
@@ -116,7 +120,7 @@ def evaluate_serving_grid(
         for cap in sorted(spec.capacities_mb):
             r = by_point[(tech, cap)]
             rep = r.report
-            rows.append({
+            row = {
                 "technology": tech,
                 "capacity_mb": cap,
                 "qps": spec.qps,
@@ -130,7 +134,19 @@ def evaluate_serving_grid(
                 "n_requests": rep.n_requests,
                 "slo_ok": spec.slo.holds(rep),
                 "schedule_shared": r.shared,
-            })
+            }
+            if r.fleet is not None:
+                # Fleet grids rank designs by fleet cost, not chip energy:
+                # chips x per-chip area x energy per generated token.
+                row.update({
+                    "n_replicas": r.fleet.n_replicas,
+                    "n_replicas_peak": r.fleet.n_replicas_peak,
+                    "mean_alive_replicas": r.fleet.mean_alive_replicas,
+                    "kv_xfer_bytes": r.fleet.kv_xfer_bytes,
+                    "energy_per_token_j": r.fleet.energy_per_token_j,
+                    "cost_per_token": r.fleet.cost_per_token,
+                })
+            rows.append(row)
     return rows
 
 
@@ -138,10 +154,16 @@ def slo_knee(rows: list[dict]) -> dict:
     """Per-technology SLO-knee capacity, plus the overall cheapest point.
 
     The knee is the *smallest* capacity whose replay holds the SLO (None if
-    no capacity does); ``best`` is the minimum-energy SLO-holding point
+    no capacity does); ``best`` is the minimum-cost SLO-holding point
     across all technologies — the serving counterpart of the paper's
-    64 MB/256 MB workload knees.
+    64 MB/256 MB workload knees.  On fleet grids the cost is
+    ``cost_per_token`` (chips x area x energy/token); on single-accelerator
+    grids it is the replay energy.
     """
+
+    def _cost(row: dict) -> float:
+        return row.get("cost_per_token", row["energy_j"])
+
     knees: dict[str, float | None] = {}
     best = None
     for row in rows:
@@ -151,6 +173,6 @@ def slo_knee(rows: list[dict]) -> dict:
             continue
         if knees[tech] is None or row["capacity_mb"] < knees[tech]:
             knees[tech] = row["capacity_mb"]
-        if best is None or row["energy_j"] < best["energy_j"]:
+        if best is None or _cost(row) < _cost(best):
             best = row
     return {"knee_capacity_mb": knees, "best": best}

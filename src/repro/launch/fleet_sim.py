@@ -1,0 +1,228 @@
+"""Fleet-scale serving simulation driver (replicas / routing / autoscaling).
+
+    PYTHONPATH=src python -m repro.launch.fleet_sim --model gpt2 \
+        --tech sot_opt --glb-mb 64 --qps 800 --replicas 4 --router least_loaded
+
+    PYTHONPATH=src python -m repro.launch.fleet_sim --replicas 4 \
+        --disaggregate --prefill-replicas 1 --transfer-gb-s 64
+
+    PYTHONPATH=src python -m repro.launch.fleet_sim --autoscale \
+        --max-replicas 8 --ttft-slo-ms 5
+
+    PYTHONPATH=src python -m repro.launch.fleet_sim --smoke
+
+Runs the ``repro.serve.fleet`` simulator: N closed-loop replicas (each with
+its own GLB banks and paged KV cache) behind a pluggable router, optionally
+split into prefill/decode pools with cross-replica KV-page streaming, and
+optionally autoscaled against the TTFT SLO.  The whole fleet is priced in
+one resource space and scored by a single bank-level replay; reported
+fleet metrics include p99 TTFT/TPOT over all replicas and the
+cost-per-token index (mean alive chips x per-chip GLB area x energy per
+generated token).
+
+``--smoke`` cross-validates the 1-replica fleet against the
+single-accelerator closed loop — the two must be **bit-identical** — then
+runs a small multi-replica fleet.  ``--trace-out`` writes a Perfetto
+timeline with per-replica track groups (replica step spans, KV-transfer
+deliveries, router queue-depth / alive-replica counters).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core.workload import NLP_TABLE_V
+from repro.serve import (
+    FleetConfig,
+    ServeEngineConfig,
+    UnknownRouterPolicyError,
+    closed_loop_serving,
+    fleet_serving,
+    summarize_fleet,
+)
+from repro.serve.fleet import ROUTER_POLICIES
+from repro.sim import ServingConfig
+from repro.spec import UnknownTechnologyError, build_system, list_techs
+
+
+def _fleet_config(args) -> FleetConfig:
+    return FleetConfig(
+        n_replicas=args.replicas,
+        router=args.router,
+        disaggregation=args.disaggregate,
+        n_prefill_replicas=args.prefill_replicas,
+        transfer_gb_s=args.transfer_gb_s,
+        autoscale=args.autoscale,
+        min_replicas=args.min_replicas,
+        max_replicas=args.max_replicas,
+        autoscale_window_ms=args.autoscale_window_ms,
+        autoscale_ttft_slo_ms=args.ttft_slo_ms,
+    )
+
+
+def run(args) -> int:
+    con = obs.Console.from_args(args)
+    specs = {s.name: s for s in NLP_TABLE_V}
+    if args.model not in specs:
+        con.error(f"unknown NLP spec {args.model!r}; have {sorted(specs)}")
+        return 2
+    spec = specs[args.model]
+    try:
+        system = build_system(args.tech, args.glb_mb)
+        fcfg = _fleet_config(args)
+        fcfg.validate()
+    except (UnknownTechnologyError, UnknownRouterPolicyError, ValueError) as e:
+        con.error(str(e))
+        return 2
+    cfg = ServingConfig(
+        n_requests=args.requests,
+        arrival_rate_rps=args.qps,
+        prompt_len=args.prompt_len,
+        decode_len=args.decode_len,
+        seed=args.seed,
+    )
+    ecfg = ServeEngineConfig(max_batch=args.max_batch)
+    manifest_config = {"model": args.model, "tech": args.tech,
+                       "glb_mb": args.glb_mb, "serving": cfg, "engine": ecfg,
+                       "fleet": fcfg.to_dict(), "lowering": args.lowering}
+    recorder = obs.TimelineRecorder() if args.trace_out else None
+    t0 = time.time()
+    with obs.span("fleet"):
+        trace, fr = fleet_serving(system, spec, cfg, ecfg, fcfg,
+                                  lowering=args.lowering, recorder=recorder)
+    dt = time.time() - t0
+    con.info(f"# fleet_sim {args.model} {args.tech}@{args.glb_mb}MB "
+             f"{fcfg.n_replicas} replicas ({fcfg.router}"
+             f"{', disaggregated' if fcfg.disaggregation else ''}"
+             f"{', autoscale' if fcfg.autoscale else ''}) "
+             f"{args.requests} reqs @ {args.qps}/s "
+             f"({len(trace)} events, {dt:.1f}s)")
+    con.info(summarize_fleet(fr))
+
+    rc = 0
+    if fr.report.completed != fr.report.n_requests:
+        con.error("FAIL: not all requests completed")
+        rc = 1
+
+    record = {
+        "cli": "fleet_sim",
+        "model": args.model,
+        "technology": args.tech,
+        "glb_mb": args.glb_mb,
+        "fleet": fcfg.to_dict(),
+        "n_events": len(trace),
+        "wall_s": dt,
+        "report": _fleet_record(fr),
+    }
+    if recorder is not None:
+        doc = recorder.save(args.trace_out, manifest=obs.run_manifest(
+            seed=args.seed, config=manifest_config))
+        con.info(f"wrote {args.trace_out} ({len(doc['traceEvents'])} events)")
+        record["trace_out"] = args.trace_out
+    record["ok"] = rc == 0
+    con.result(obs.stamp(record, seed=args.seed, config=manifest_config))
+    return rc
+
+
+def _fleet_record(fr) -> dict:
+    """The FleetReport as a JSON-ready dict (nested ServeReport flattened)."""
+    d = {f.name: getattr(fr, f.name)
+         for f in dataclasses.fields(fr) if f.name != "report"}
+    d["routed_per_replica"] = list(fr.routed_per_replica)
+    d["completed_per_replica"] = list(fr.completed_per_replica)
+    d["busy_frac_per_replica"] = list(fr.busy_frac_per_replica)
+    d["autoscale_events"] = [list(e) for e in fr.autoscale_events]
+    rep = {f.name: getattr(fr.report, f.name)
+           for f in dataclasses.fields(fr.report) if f.name != "sim"}
+    rep["sim"] = {
+        "latency_s": fr.report.sim.latency_s,
+        "energy_j": fr.report.sim.energy_j,
+        "n_simulated": fr.report.sim.n_simulated,
+    }
+    d["report"] = rep
+    return d
+
+
+def _smoke(args, con) -> int:
+    """1-replica bit-identity vs the closed loop, then a multi-replica run."""
+    specs = {s.name: s for s in NLP_TABLE_V}
+    spec = specs[args.model]
+    system = build_system(args.tech, args.glb_mb)
+    cfg = ServingConfig(n_requests=12, arrival_rate_rps=300.0,
+                        prompt_len=64, decode_len=32, seed=args.seed)
+    ecfg = ServeEngineConfig(max_batch=8)
+    tr_ref, rep_ref = closed_loop_serving(system, spec, cfg, ecfg)
+    tr_one, fr_one = fleet_serving(system, spec, cfg, ecfg, FleetConfig())
+    same = all(
+        np.array_equal(getattr(tr_ref, f.name), getattr(tr_one, f.name))
+        if isinstance(getattr(tr_ref, f.name), np.ndarray)
+        else getattr(tr_ref, f.name) == getattr(tr_one, f.name)
+        for f in dataclasses.fields(tr_ref)
+    ) and rep_ref.ttft_p99_ms == fr_one.report.ttft_p99_ms
+    if not same:
+        con.error("smoke FAILED: 1-replica fleet is not bit-identical "
+                  "to the closed loop")
+        return 1
+    con.info("1-replica fleet == closed loop: bit-identical")
+    args.requests, args.prompt_len, args.decode_len = 12, 64, 32
+    args.qps, args.max_batch = 300.0, 8
+    args.replicas = max(args.replicas, 2)
+    return run(args)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="gpt2")
+    ap.add_argument("--tech", default="sot_opt",
+                    help="any registered technology "
+                         f"(registered: {','.join(list_techs())})")
+    ap.add_argument("--glb-mb", type=float, default=64.0)
+    ap.add_argument("--qps", type=float, default=400.0)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--decode-len", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    # Fleet knobs.
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--router", default="round_robin",
+                    help=f"routing policy: {', '.join(ROUTER_POLICIES)}")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split the fleet into prefill and decode pools with "
+                         "cross-replica KV-page streaming")
+    ap.add_argument("--prefill-replicas", type=int, default=1)
+    ap.add_argument("--transfer-gb-s", type=float, default=64.0,
+                    help="prefill->decode KV interconnect bandwidth")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="scale replicas against the TTFT SLO")
+    ap.add_argument("--min-replicas", type=int, default=1)
+    ap.add_argument("--max-replicas", type=int, default=8)
+    ap.add_argument("--autoscale-window-ms", type=float, default=5.0)
+    ap.add_argument("--ttft-slo-ms", type=float, default=50.0)
+    ap.add_argument("--lowering", default="block", choices=["block", "scalar"])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome-trace JSON timeline with "
+                         "per-replica track groups")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast end-to-end check (1-replica bit-identity vs "
+                         "the closed loop + a small multi-replica fleet)")
+    obs.add_output_args(ap)
+    args = ap.parse_args(argv)
+    obs.enable()
+    con = obs.Console.from_args(args)
+
+    if args.smoke:
+        rc = _smoke(args, con)
+        con.info("smoke OK" if rc == 0 else "smoke FAILED")
+        return rc
+    return run(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

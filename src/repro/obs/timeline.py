@@ -22,6 +22,12 @@ Track layout (Chrome trace event format, timestamps in microseconds of
 * **pid 3 "serving counters"** — GLB page residency (%), cumulative KV
   pages spilled, cumulative KV read bytes served from DRAM, active batch
   size, sampled at every scheduler step.
+* **pid 4 "fleet replicas"** (fleet runs only) — one thread per replica
+  with its step spans (``decode``/``prefill`` batch sizes as args) and
+  KV-transfer delivery instants; fleet-wide counters (router backlog,
+  alive replicas, cumulative cross-replica KV-transfer bytes) land on
+  pid 3.  The fleet loop processes events in global simulated-time order,
+  which is what keeps these shared counter tracks monotone.
 
 Recording is strictly read-only — it never touches RNG state, event
 buffers, or the clock — so metrics with a recorder attached are
@@ -40,6 +46,7 @@ import math
 PID_MEMORY = 1
 PID_REQUESTS = 2
 PID_COUNTERS = 3
+PID_FLEET = 4
 
 _NS_TO_US = 1e-3
 
@@ -63,6 +70,8 @@ class TimelineRecorder:
         self._kv_dram_bytes = 0.0
         self._n_replays = 0
         self._meta: dict = {}
+        self._fleet_events: list[dict] = []
+        self._fleet_tids: set[int] = set()
 
     # -- recording hooks (called by the engines; all read-only) --------------
 
@@ -129,6 +138,55 @@ class TimelineRecorder:
         c.append(("active_requests", t_end_ns,
                   float(len(plan.decode) + len(plan.prefill))))
 
+    def record_fleet_step(self, replica_idx: int, t_start_ns: float,
+                          t_end_ns: float, plan, blocks, alloc,
+                          finished) -> None:
+        """One fleet replica's step: a per-replica span + lifecycle edges.
+
+        Request lifecycle bookkeeping matches :meth:`record_step`; the
+        per-step counters are sampled at the step's *start* time because the
+        fleet loop orders steps by start (ends of overlapping replica steps
+        interleave, which would break per-name counter monotonicity).
+        """
+        for r, _toks in plan.prefill:
+            rec = self._request(r)
+            rec["prefill_t0"] = min(rec.get("prefill_t0", math.inf), t_start_ns)
+            rec["prefill_t1"] = max(rec.get("prefill_t1", -math.inf), t_end_ns)
+        for r in plan.decode:
+            self._request(r)
+        for r in finished:
+            rec = self._request(r)
+            rec["first"] = r.first_token_ns
+            rec["finish"] = r.finish_ns
+        self._kv_dram_bytes += blocks.kv_rd_bytes_dram
+        self._fleet_tids.add(replica_idx)
+        self._fleet_events.append({
+            "ph": "X", "pid": PID_FLEET, "tid": replica_idx, "name": "step",
+            "cat": "replica",
+            "ts": t_start_ns * _NS_TO_US,
+            "dur": (t_end_ns - t_start_ns) * _NS_TO_US,
+            "args": {"decode": len(plan.decode),
+                     "prefill": len(plan.prefill),
+                     "residency_pct": blocks.residency * 100.0},
+        })
+        self._counters.append(("glb_residency_pct", t_start_ns,
+                               blocks.residency * 100.0))
+        self._counters.append(("kv_dram_read_bytes", t_start_ns,
+                               self._kv_dram_bytes))
+
+    def record_fleet_transfer(self, src_idx: int, dst_idx: int,
+                              t_ready_ns: float, xfer_bytes: float,
+                              total_bytes: float) -> None:
+        """One KV-page handoff delivery (prefill -> decode replica)."""
+        self._fleet_tids.add(dst_idx)
+        self._fleet_events.append({
+            "ph": "i", "pid": PID_FLEET, "tid": dst_idx, "name": "kv_xfer_in",
+            "s": "t",
+            "ts": t_ready_ns * _NS_TO_US,
+            "args": {"from_replica": src_idx, "bytes": xfer_bytes},
+        })
+        self._counters.append(("kv_xfer_bytes", t_ready_ns, total_bytes))
+
     def counter(self, name: str, t_ns: float, value: float) -> None:
         """Free-form counter sample on the serving-counters process."""
         self._counters.append((name, t_ns, float(value)))
@@ -163,8 +221,15 @@ class TimelineRecorder:
                                "args": {"name": f"req {rid:04d}"}})
         if self._counters:
             _add_process_meta(events, PID_COUNTERS, "serving counters")
+        if self._fleet_events:
+            _add_process_meta(events, PID_FLEET, "fleet replicas")
+            for tid in sorted(self._fleet_tids):
+                events.append({"ph": "M", "pid": PID_FLEET, "tid": tid,
+                               "name": "thread_name",
+                               "args": {"name": f"replica {tid:02d}"}})
 
         events.extend(self._bank_events)
+        events.extend(self._fleet_events)
 
         for rid in sorted(self._req):
             events.extend(_request_events(rid, self._req[rid]))
@@ -180,6 +245,7 @@ class TimelineRecorder:
             "n_requests": len(self._req),
             "n_counter_samples": len(self._counters),
             "n_replays": self._n_replays,
+            "n_fleet_events": len(self._fleet_events),
             "dropped_events": self.dropped_events,
             **self._meta,
         }

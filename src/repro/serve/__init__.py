@@ -16,10 +16,24 @@ per technology, and every certified technology's replay is scored in one
 batched segmented scan (``replay.score_shared_batch``, numpy/jax/pallas
 backends, bit-identical reports); points whose schedule-invariance
 certificate fails fall back to the per-point closed loop.
-``repro.dse.serving`` uses it to find the SLO-knee capacity.  See
-docs/serving.md and docs/perf.md.
+``repro.dse.serving`` uses it to find the SLO-knee capacity.  The fleet
+layer (``fleet``) scales the loop to N replicas behind a pluggable router
+(round-robin / least-loaded / prefix-affinity), with optional
+prefill/decode disaggregation (KV-page streaming priced as a cross-replica
+traffic class) and a TTFT-SLO autoscaler; one replica slice per resource
+range keeps fleet pricing a single segmented-bincount pass, and the
+1-replica fleet is bit-identical to the closed loop.  See docs/serving.md
+and docs/perf.md.
 """
 
+from repro.serve.fleet import (
+    Fleet,
+    FleetConfig,
+    FleetReport,
+    UnknownRouterPolicyError,
+    fleet_serving,
+    summarize_fleet,
+)
 from repro.serve.kv_pages import PagedKVAllocator
 from repro.serve.lower import (
     BlockEmitter,
@@ -51,6 +65,9 @@ from repro.serve.sweep import (
 __all__ = [
     "BlockEmitter",
     "ContinuousBatchScheduler",
+    "Fleet",
+    "FleetConfig",
+    "FleetReport",
     "NeutralRun",
     "PagedKVAllocator",
     "RequestState",
@@ -64,8 +81,11 @@ __all__ = [
     "SweepRow",
     "TechPricer",
     "TechPricing",
+    "UnknownRouterPolicyError",
     "closed_loop_serving",
+    "fleet_serving",
     "score_shared_batch",
+    "summarize_fleet",
     "summarize_report",
     "sweep_serving_grid",
 ]

@@ -44,11 +44,13 @@ _GROW = 64  # initial page-table capacity; doubles as it fills
 class PagedKVAllocator:
     """Maps fixed-size KV pages onto GLB banks; spills cold pages to DRAM."""
 
-    def __init__(self, glb_bytes: float, page_bytes: float, n_banks: int):
+    def __init__(self, glb_bytes: float, page_bytes: float, n_banks: int,
+                 replica_id: int = 0):
         if page_bytes <= 0:
             raise ValueError("page_bytes must be positive")
         self.page_bytes = float(page_bytes)
         self.n_banks = max(1, int(n_banks))
+        self.replica_id = int(replica_id)
         self.capacity_pages = max(0, int(glb_bytes // page_bytes))
         # Struct-of-arrays page table, grown by doubling; freed rows recycle.
         self.page_hash = np.empty(_GROW, np.int64)
@@ -56,6 +58,7 @@ class PagedKVAllocator:
         self.page_owner = np.full(_GROW, -1, np.int64)
         self.page_last_used = np.zeros(_GROW, np.int64)
         self.page_seq = np.zeros(_GROW, np.int64)
+        self.page_replica = np.full(_GROW, self.replica_id, np.int64)
         self._top = 0  # high-water row count
         self._free: list[int] = []  # recycled rows
         # Dense [request, page] -> table-row matrix plus per-request counts.
@@ -117,7 +120,7 @@ class PagedKVAllocator:
         if self._top == self.page_hash.shape[0]:
             cap = 2 * self._top
             for name in ("page_hash", "page_resident", "page_owner",
-                         "page_last_used", "page_seq"):
+                         "page_last_used", "page_seq", "page_replica"):
                 col = getattr(self, name)
                 grown = np.empty(cap, col.dtype)
                 grown[: self._top] = col
@@ -187,6 +190,7 @@ class PagedKVAllocator:
             self.page_owner[row] = rid
             self.page_last_used[row] = self._clock
             self.page_seq[row] = self._next_seq()
+            self.page_replica[row] = self.replica_id
             if resident:
                 self._resident += 1
             slots[idx] = row

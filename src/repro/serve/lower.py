@@ -139,6 +139,14 @@ class StepBlocks:
     kv_rd_bytes_glb: float
     kv_rd_bytes_dram: float
     residency: float
+    # Fleet axis: which replica's banks/channels these events land on.  The
+    # pricer offsets every resource id by ``replica * per-replica-count``, so
+    # a whole fleet run is still one segmented-bincount pricing pass; 0 keeps
+    # the single-accelerator layout bit-identical.
+    replica: int = 0
+    # Cross-replica KV-transfer payload carried by this block (disaggregated
+    # prefill->decode streaming); 0 for ordinary scheduler steps.
+    kv_xfer_bytes: float = 0.0
 
 
 def _cat(parts, dtype):
@@ -166,8 +174,10 @@ class ServeModel:
         spec: NLPModelSpec,
         cfg: ServingConfig,
         engine_cfg: ServeEngineConfig,
+        replica_id: int = 0,
     ):
         self.spec, self.cfg, self.ecfg = spec, cfg, engine_cfg
+        self.replica = int(replica_id)
         dram = system.dram
         self.dram_access_bytes = dram.access_bytes
         self.n_layers = max(1, spec.enc_layers + spec.dec_layers)
@@ -187,6 +197,7 @@ class ServeModel:
             glb_bytes=system.glb.capacity_mb * MB * engine_cfg.kv_reserve_frac,
             page_bytes=page_bytes,
             n_banks=max(1, int(system.glb.banks)),
+            replica_id=self.replica,
         )
         self._l = np.arange(self.n_layers)
         # Shared per-decode-step weight-stream slice (continuous batching).
@@ -354,6 +365,7 @@ class BlockEmitter:
             kv_rd_bytes_glb=kv_glb_bytes,
             kv_rd_bytes_dram=kv_dram_bytes,
             residency=alloc.residency(),
+            replica=m.replica,
         )
 
 
@@ -480,6 +492,7 @@ class ScalarEmitter:
             kv_rd_bytes_glb=kv_stats[0],
             kv_rd_bytes_dram=kv_stats[1],
             residency=alloc.residency(),
+            replica=m.replica,
         )
 
     def _iter_pages(self, r):
@@ -506,6 +519,13 @@ class TechPricer:
     :class:`TraceBuilder`, and returns each step's (max per-bank GLB busy,
     DRAM busy) for the closed-loop feedback and the sweep engine's
     schedule-invariance certificate.
+
+    ``n_replicas`` widens the resource space to a fleet: every replica owns
+    its own contiguous slice of GLB banks and DRAM/prefetch channels, and a
+    block's events land at ``replica * per_replica_count + local``.  Pricing
+    stays one segmented-bincount pass over the whole fleet, and at
+    ``n_replicas=1`` every offset is zero, so the single-accelerator event
+    stream is bit-identical to before the fleet axis existed.
     """
 
     def __init__(
@@ -514,10 +534,21 @@ class TechPricer:
         model: ServeModel,
         n_dram_channels: int = 8,
         n_prefetch_channels: int = 4,
+        n_replicas: int = 1,
     ):
         self.system = system
-        self.b = TraceBuilder(system, n_dram_channels, n_prefetch_channels)
-        self.nb = self.b.n_glb_banks
+        self.n_replicas = max(1, int(n_replicas))
+        nb = max(1, int(system.glb.banks))
+        self.b = TraceBuilder(
+            system,
+            n_dram_channels * self.n_replicas,
+            n_prefetch_channels * self.n_replicas,
+            n_glb_banks=nb * self.n_replicas,
+        )
+        self.nb = nb  # per-replica bank count (hash % nb stays local)
+        self.nb_total = self.b.n_glb_banks
+        self.n_dram_ch = n_dram_channels  # per replica
+        self.n_pref_ch = n_prefetch_channels  # per replica
         dram = system.dram
         self.t_dram_acc_ns = dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
         self.t_dram_acc_ch_ns = self.t_dram_acc_ns * n_dram_channels
@@ -545,14 +576,20 @@ class TechPricer:
                    n_dram_channels, n_prefetch_channels)
 
     def price_step(self, blk: StepBlocks) -> tuple[float, float]:
-        """Emit one step's events; returns (max per-bank GLB ns, DRAM ns)."""
+        """Emit one step's events; returns (max per-bank GLB ns, DRAM ns).
+
+        The busy maxima are computed over the block's own replica slice
+        (other replicas' banks are untouched by one step), so the closed-loop
+        feedback is per-replica even when the trace spans a fleet.
+        """
         b, glb = self.b, self.system.glb
+        bank_off = blk.replica * self.nb
         glb_ns = 0.0
         busy = None
         if blk.glb_rd_hash.size:
             bank = blk.glb_rd_hash % self.nb
             svc = blk.glb_rd_acc * glb.read_latency_ns
-            b.add(blk.t_ns, bank, svc,
+            b.add(blk.t_ns, bank + bank_off if bank_off else bank, svc,
                   blk.glb_rd_acc * glb.read_energy_pj_per_access,
                   KIND_GLB_RD, n=bank.size)
             busy = np.bincount(bank, weights=svc, minlength=self.nb)
@@ -564,7 +601,7 @@ class TechPricer:
                 line = line.copy()
                 line[fresh] = self.b.fresh_lines(int(fresh.sum()))
             svc = blk.glb_wr_acc * glb.write_latency_ns
-            b.add(blk.t_ns, bank, svc,
+            b.add(blk.t_ns, bank + bank_off if bank_off else bank, svc,
                   blk.glb_wr_acc * glb.write_energy_pj_per_access,
                   KIND_GLB_WR, line=line, tag=blk.glb_wr_tag, n=bank.size)
             wr_busy = np.bincount(bank, weights=svc, minlength=self.nb)
@@ -572,20 +609,22 @@ class TechPricer:
         if busy is not None:
             glb_ns = float(busy.max())
         dram_acc_total = 0.0
+        dram_off = blk.replica * self.n_dram_ch
         for hashes, acc, kind in (
             (blk.dram_rd_hash, blk.dram_rd_acc, KIND_DRAM_RD),
             (blk.dram_wr_hash, blk.dram_wr_acc, KIND_DRAM_WR),
         ):
             if hashes.size:
-                ch = (hashes % self.nb) % b.n_dram_channels
-                b.add(blk.t_ns, b.dram_resource(ch),
+                ch = (hashes % self.nb) % self.n_dram_ch
+                b.add(blk.t_ns, b.dram_resource(ch + dram_off if dram_off else ch),
                       acc * self.t_dram_acc_ch_ns, acc * self.e_dram_pj, kind,
                       n=ch.size)
                 dram_acc_total += float(acc.sum())
         if blk.pref_ch.size:
-            ch = blk.pref_ch % b.n_prefetch_channels
-            b.add(blk.t_ns, b.prefetch_resource(ch),
-                  blk.pref_acc * self.t_dram_acc_ns * b.n_prefetch_channels,
+            ch = blk.pref_ch % self.n_pref_ch
+            pref_off = blk.replica * self.n_pref_ch
+            b.add(blk.t_ns, b.prefetch_resource(ch + pref_off if pref_off else ch),
+                  blk.pref_acc * self.t_dram_acc_ns * self.n_pref_ch,
                   blk.pref_acc * self.e_dram_pj, KIND_PREFETCH_RD, n=ch.size)
         return glb_ns, dram_acc_total * self.t_dram_acc_ns
 
@@ -607,34 +646,43 @@ class TechPricer:
         """
         b, glb = self.b, self.system.glb
         nb, S = self.nb, len(blocks)
+        nb_tot = self.nb_total
         ts = np.fromiter((blk.t_ns for blk in blocks), np.float64, S)
+        reps = np.fromiter((blk.replica for blk in blocks), np.int64, S)
+        fleet = bool(reps.any())
 
         def _gather(field):
             parts = [getattr(blk, field) for blk in blocks]
             sizes = np.fromiter((p.shape[0] for p in parts), np.int64, S)
             return np.concatenate(parts), sizes
 
+        def _offset(local, sizes, per_replica):
+            # Replica-sliced resource ids; zero-cost on the 1-replica path.
+            if not fleet:
+                return local
+            return local + reps.repeat(sizes) * per_replica
+
         # Certificate first: nothing touches the builder (or consumes fresh
         # line ids) until the shared schedule is known to be exact for this
         # technology, so an uncertified point wastes no event appends.
-        busy = np.zeros(S * nb)
+        busy = np.zeros(S * nb_tot)
         hash_rd, n_rd = _gather("glb_rd_hash")
         svc_rd = acc_rd = bank_rd = None
         if hash_rd.size:
             acc_rd = np.concatenate([blk.glb_rd_acc for blk in blocks])
-            bank_rd = hash_rd % nb
+            bank_rd = _offset(hash_rd % nb, n_rd, nb)
             svc_rd = acc_rd * glb.read_latency_ns
-            busy += np.bincount(np.arange(S).repeat(n_rd) * nb + bank_rd,
-                                weights=svc_rd, minlength=S * nb)
+            busy += np.bincount(np.arange(S).repeat(n_rd) * nb_tot + bank_rd,
+                                weights=svc_rd, minlength=S * nb_tot)
         hash_wr, n_wr = _gather("glb_wr_hash")
         svc_wr = acc_wr = bank_wr = None
         if hash_wr.size:
             acc_wr = np.concatenate([blk.glb_wr_acc for blk in blocks])
-            bank_wr = hash_wr % nb
+            bank_wr = _offset(hash_wr % nb, n_wr, nb)
             svc_wr = acc_wr * glb.write_latency_ns
-            busy += np.bincount(np.arange(S).repeat(n_wr) * nb + bank_wr,
-                                weights=svc_wr, minlength=S * nb)
-        if not np.all(busy.reshape(S, nb).max(axis=1) <= dts):
+            busy += np.bincount(np.arange(S).repeat(n_wr) * nb_tot + bank_wr,
+                                weights=svc_wr, minlength=S * nb_tot)
+        if not np.all(busy.reshape(S, nb_tot).max(axis=1) <= dts):
             return False
         if svc_rd is not None:
             b.add(ts.repeat(n_rd), bank_rd, svc_rd,
@@ -656,15 +704,16 @@ class TechPricer:
             hashes, sizes = _gather(field_h)
             if hashes.size:
                 acc = np.concatenate([getattr(blk, field_a) for blk in blocks])
-                ch = (hashes % nb) % b.n_dram_channels
+                ch = _offset((hashes % nb) % self.n_dram_ch, sizes,
+                             self.n_dram_ch)
                 b.add(ts.repeat(sizes), b.dram_resource(ch),
                       acc * self.t_dram_acc_ch_ns, acc * self.e_dram_pj, kind)
         chs, sizes = _gather("pref_ch")
         if chs.size:
             acc = np.concatenate([blk.pref_acc for blk in blocks])
-            ch = chs % b.n_prefetch_channels
+            ch = _offset(chs % self.n_pref_ch, sizes, self.n_pref_ch)
             b.add(ts.repeat(sizes), b.prefetch_resource(ch),
-                  acc * self.t_dram_acc_ns * b.n_prefetch_channels,
+                  acc * self.t_dram_acc_ns * self.n_pref_ch,
                   acc * self.e_dram_pj, KIND_PREFETCH_RD)
         return True
 
@@ -822,63 +871,93 @@ def _percentiles_ms(x: np.ndarray) -> tuple[float, float]:
     )
 
 
-def score_run(
+def replay_token_times(
+    tags: np.ndarray, finish_ns: np.ndarray, arrival_by_rid: dict
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-request (TTFT, TPOT) samples from tagged replay finish times.
+
+    ``tags``/``finish_ns`` are parallel arrays over the replayed events
+    (original tags gathered into replay order via ``orig_idx``; untagged
+    events carry ``-1``).  Shared by the closed loop, the batched
+    shared-schedule scorer, and the fleet — one implementation of the
+    tag -> lexsort -> group reduction.
+    """
+    m = tags >= 0
+    if not m.any():
+        return np.empty(0), np.empty(0)
+    tg, fin = tags[m], finish_ns[m]
+    order = np.lexsort((fin, tg))
+    tg, fin = tg[order], fin[order]
+    first = np.flatnonzero(np.r_[True, tg[1:] != tg[:-1]])
+    bounds = np.r_[first, tg.size]
+    counts = np.diff(bounds)
+    rids = tg[first]
+    t_first = fin[first]
+    t_last = fin[bounds[1:] - 1]
+    arr = np.array([arrival_by_rid.get(int(r), np.nan) for r in rids])
+    ttft = t_first - arr
+    multi = counts > 1
+    tpot = (t_last[multi] - t_first[multi]) / (counts[multi] - 1)
+    return ttft, tpot
+
+
+def score_requests(
     trace: Trace,
-    sched: ContinuousBatchScheduler,
-    model: ServeModel,
+    *,
+    requests: list,
+    finished: list,
+    offered_qps: float,
+    pages_spilled: int,
+    pages_allocated: int,
     stats: RunStats,
     system: HybridMemorySystem,
     sim_config: SimConfig,
+    arrival_by_rid: dict | None = None,
     recorder=None,
 ) -> ServeReport:
-    """Replay a lowered serving trace and distill the :class:`ServeReport`."""
+    """Replay a lowered serving trace and distill the :class:`ServeReport`.
+
+    Decoupled from the scheduler so the fleet can score its *logical*
+    request population (disaggregated requests live as two scheduler halves
+    but one logical request): ``requests``/``finished`` are
+    :class:`RequestState` lists and ``arrival_by_rid`` overrides the
+    per-request arrival used for TTFT (defaults to each finished request's
+    own ``arrival_ns`` — the single-scheduler case).
+    """
     result, schedule, orig_idx = simulate_trace(trace, sim_config,
                                                 return_schedule=True,
                                                 recorder=recorder)
 
     # Per-request token-completion times from the replay (tagged events).
-    tags = trace.tag[orig_idx]
-    m = tags >= 0
-    arrival_by_rid = {r.rid: r.arrival_ns for r in sched.finished}
-    ttft, tpot = np.empty(0), np.empty(0)
-    if m.any():
-        tg, fin = tags[m], schedule.finish_ns[m]
-        order = np.lexsort((fin, tg))
-        tg, fin = tg[order], fin[order]
-        first = np.flatnonzero(np.r_[True, tg[1:] != tg[:-1]])
-        bounds = np.r_[first, tg.size]
-        counts = np.diff(bounds)
-        rids = tg[first]
-        t_first = fin[first]
-        t_last = fin[bounds[1:] - 1]
-        arr = np.array([arrival_by_rid.get(int(r), np.nan) for r in rids])
-        ttft = t_first - arr
-        multi = counts > 1
-        tpot = (t_last[multi] - t_first[multi]) / (counts[multi] - 1)
+    if arrival_by_rid is None:
+        arrival_by_rid = {r.rid: r.arrival_ns for r in finished}
+    ttft, tpot = replay_token_times(trace.tag[orig_idx], schedule.finish_ns,
+                                    arrival_by_rid)
 
     sched_ttft = np.array(
-        [r.first_token_ns - r.arrival_ns for r in sched.finished]
+        [r.first_token_ns - arrival_by_rid.get(r.rid, r.arrival_ns)
+         for r in finished]
     )
     sched_tpot = np.array(
         [
             (r.finish_ns - r.first_token_ns) / (r.decoded - 1)
-            for r in sched.finished
+            for r in finished
             if r.decoded > 1
         ]
     )
-    finishes = [r.finish_ns for r in sched.finished]
-    arrivals = [r.arrival_ns for r in sched.requests]
+    finishes = [r.finish_ns for r in finished]
+    arrivals = [arrival_by_rid.get(r.rid, r.arrival_ns) for r in requests]
     span_ns = (max(finishes) - min(arrivals)) if finishes else 0.0
 
     kv_rd_total = stats.kv_rd_bytes_glb + stats.kv_rd_bytes_dram
     ttft_p50, ttft_p99 = _percentiles_ms(ttft)
     tpot_p50, tpot_p99 = _percentiles_ms(tpot)
     return ServeReport(
-        n_requests=len(sched.requests),
-        completed=len(sched.finished),
+        n_requests=len(requests),
+        completed=len(finished),
         n_steps=stats.n_steps,
-        offered_qps=model.cfg.arrival_rate_rps,
-        achieved_qps=(len(sched.finished) / (span_ns * 1e-9) if span_ns else 0.0),
+        offered_qps=offered_qps,
+        achieved_qps=(len(finished) / (span_ns * 1e-9) if span_ns else 0.0),
         span_s=span_ns * 1e-9,
         ttft_p50_ms=ttft_p50,
         ttft_p99_ms=ttft_p99,
@@ -893,8 +972,8 @@ def score_run(
         residency_mean=(
             stats.residency_wsum / stats.dt_sum if stats.dt_sum else 1.0
         ),
-        pages_spilled=model.alloc.spill_count,
-        pages_allocated=model.alloc.pages_created,
+        pages_spilled=pages_spilled,
+        pages_allocated=pages_allocated,
         kv_spill_read_frac=(
             stats.kv_rd_bytes_dram / kv_rd_total if kv_rd_total else 0.0
         ),
@@ -902,6 +981,30 @@ def score_run(
         mean_queue_depth=result.mean_queue_depth,
         bytes=trace_byte_counts(trace, system),
         sim=result,
+    )
+
+
+def score_run(
+    trace: Trace,
+    sched: ContinuousBatchScheduler,
+    model: ServeModel,
+    stats: RunStats,
+    system: HybridMemorySystem,
+    sim_config: SimConfig,
+    recorder=None,
+) -> ServeReport:
+    """Single-scheduler scoring: the closed loop's thin wrapper."""
+    return score_requests(
+        trace,
+        requests=sched.requests,
+        finished=sched.finished,
+        offered_qps=model.cfg.arrival_rate_rps,
+        pages_spilled=model.alloc.spill_count,
+        pages_allocated=model.alloc.pages_created,
+        stats=stats,
+        system=system,
+        sim_config=sim_config,
+        recorder=recorder,
     )
 
 

@@ -68,6 +68,8 @@ from repro.serve.lower import (
     ServeReport,
     RunStats,
     _percentiles_ms,
+    replay_token_times,
+    score_requests,
     score_run,
 )
 
@@ -111,6 +113,7 @@ class NeutralRun:
         model: ServeModel,
         n_dram_channels: int = 8,
         n_prefetch_channels: int = 4,
+        n_replicas: int | None = None,
     ):
         S = len(blocks)
         self.S = S
@@ -118,6 +121,11 @@ class NeutralRun:
         self.n_dram_channels = n_dram_channels
         self.n_prefetch_channels = n_prefetch_channels
         ts = np.fromiter((blk.t_ns for blk in blocks), np.float64, S)
+        reps = np.fromiter((blk.replica for blk in blocks), np.int64, S)
+        if n_replicas is None:
+            n_replicas = int(reps.max(initial=0)) + 1
+        self.n_replicas = max(1, int(n_replicas))
+        self._fleet = self.n_replicas > 1
 
         def gather(field, dtype):
             if S == 0:
@@ -154,6 +162,14 @@ class NeutralRun:
         ar = np.arange(S)
         self.step_rd = ar.repeat(n_rd)
         self.step_wr = ar.repeat(n_wr)
+        # Per-event replica index per class (fleet resource offsets); only
+        # materialized when the run actually spans multiple replicas.
+        if self._fleet:
+            self.rep_rd = reps.repeat(n_rd)
+            self.rep_wr = reps.repeat(n_wr)
+            self.rep_dr = reps.repeat(n_dr)
+            self.rep_dw = reps.repeat(n_dw)
+            self.rep_pf = reps.repeat(n_pf)
 
         # -- shared trace columns -------------------------------------------
         self.t_issue = np.empty(n, np.float64)
@@ -204,6 +220,8 @@ class NeutralRun:
         """
         glb = system.glb
         nb = max(1, int(glb.banks))
+        R = self.n_replicas
+        nb_tot = nb * R
         dram = system.dram
         t_dram_acc_ns = dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
         t_dram_acc_ch_ns = t_dram_acc_ns * self.n_dram_channels
@@ -213,19 +231,23 @@ class NeutralRun:
         svc_rd = self.acc_rd * glb.read_latency_ns
         bank_wr = self.hash_wr % nb
         svc_wr = self.acc_wr * glb.write_latency_ns
+        if self._fleet:
+            bank_rd = bank_rd + self.rep_rd * nb
+            bank_wr = bank_wr + self.rep_wr * nb
 
         # Schedule-invariance certificate (same segmented bincount as
         # ``price_run``): no step's per-bank GLB busy may exceed the shared
-        # step duration.
-        busy = np.zeros(self.S * nb)
+        # step duration.  Fleet transfer blocks carry ``inf`` durations in
+        # ``dts`` — they never pace the clock, so they cannot decertify.
+        busy = np.zeros(self.S * nb_tot)
         if bank_rd.size:
-            busy += np.bincount(self.step_rd * nb + bank_rd, weights=svc_rd,
-                                minlength=self.S * nb)
+            busy += np.bincount(self.step_rd * nb_tot + bank_rd,
+                                weights=svc_rd, minlength=self.S * nb_tot)
         if bank_wr.size:
-            busy += np.bincount(self.step_wr * nb + bank_wr, weights=svc_wr,
-                                minlength=self.S * nb)
+            busy += np.bincount(self.step_wr * nb_tot + bank_wr,
+                                weights=svc_wr, minlength=self.S * nb_tot)
         certified = bool(
-            np.all(busy.reshape(self.S, nb).max(axis=1) <= self.dts)
+            np.all(busy.reshape(self.S, nb_tot).max(axis=1) <= self.dts)
         )
 
         res = np.empty(self.n, np.int32)
@@ -239,23 +261,38 @@ class NeutralRun:
         res[sl] = bank_wr
         svc[sl] = svc_wr
         en[sl] = self.acc_wr * glb.write_energy_pj_per_access
-        for name, hashes, acc in (("dram_rd", self.hash_dr, self.acc_dr),
-                                  ("dram_wr", self.hash_dw, self.acc_dw)):
+        for name, hashes, acc, rep in (
+            ("dram_rd", self.hash_dr, self.acc_dr, "rep_dr"),
+            ("dram_wr", self.hash_dw, self.acc_dw, "rep_dw"),
+        ):
             sl = self.sl[name]
-            res[sl] = nb + (hashes % nb) % self.n_dram_channels
+            ch = (hashes % nb) % self.n_dram_channels
+            if self._fleet:
+                ch = ch + getattr(self, rep) * self.n_dram_channels
+            res[sl] = nb_tot + ch
             svc[sl] = acc * t_dram_acc_ch_ns
             en[sl] = acc * e_dram_pj
         sl = self.sl["pref"]
-        res[sl] = (nb + self.n_dram_channels
-                   + self.ch_pf % self.n_prefetch_channels)
+        ch = self.ch_pf % self.n_prefetch_channels
+        if self._fleet:
+            ch = ch + self.rep_pf * self.n_prefetch_channels
+        res[sl] = nb_tot + self.n_dram_channels * R + ch
         svc[sl] = self.acc_pf * t_dram_acc_ns * self.n_prefetch_channels
         en[sl] = self.acc_pf * e_dram_pj
 
-        return TechPricing(system=system, n_glb_banks=nb, resource=res,
+        return TechPricing(system=system, n_glb_banks=nb_tot, resource=res,
                            service=svc, energy=en, certified=certified)
 
-    def build_trace(self, pricing: TechPricing, meta: dict) -> Trace:
-        """Assemble one technology's :class:`Trace` from column views."""
+    def build_trace(self, pricing: TechPricing, meta: dict,
+                    leakage_scale: float = 1.0) -> Trace:
+        """Assemble one technology's :class:`Trace` from column views.
+
+        ``leakage_scale`` multiplies the per-chip GLB leakage (a fleet leaks
+        on every alive replica); 1.0 leaves the single-chip value bit-exact.
+        """
+        leakage = pricing.system.glb.leakage_w
+        if leakage_scale != 1.0:
+            leakage = leakage * leakage_scale
         return Trace(
             t_issue_ns=self.t_issue,
             resource=pricing.resource,
@@ -264,10 +301,10 @@ class NeutralRun:
             kind=self.kind,
             line=self.line,
             n_glb_banks=pricing.n_glb_banks,
-            n_dram_channels=self.n_dram_channels,
-            n_prefetch_channels=self.n_prefetch_channels,
+            n_dram_channels=self.n_dram_channels * self.n_replicas,
+            n_prefetch_channels=self.n_prefetch_channels * self.n_replicas,
             compute_time_s=0.0,
-            leakage_w=pricing.system.glb.leakage_w,
+            leakage_w=leakage,
             meta=meta,
             tag=self.tag,
         )
@@ -370,6 +407,13 @@ def score_shared_batch(
     stats: RunStats,
     sim_config: SimConfig,
     recorder=None,
+    *,
+    requests: list | None = None,
+    finished: list | None = None,
+    arrival_by_rid: dict | None = None,
+    offered_qps: float | None = None,
+    pages_spilled: int | None = None,
+    pages_allocated: int | None = None,
 ) -> list[ServeReport]:
     """Score N technology-priced traces of one shared run in one replay.
 
@@ -381,15 +425,35 @@ def score_shared_batch(
     alone.  ``systems`` pairs each trace with the memory system that priced
     it.  ``recorder`` taps the first trace's replay (matching the sweep's
     first-grid-point recording contract).
+
+    The keyword overrides decouple the scorer from a single scheduler, the
+    same way :func:`repro.serve.lower.score_requests` does — the fleet sweep
+    passes its logical request population (and original-arrival map) while
+    ``sched``/``model`` default the single-accelerator case.
     """
     if not traces:
         return []
+    if requests is None:
+        requests = sched.requests
+    if finished is None:
+        finished = sched.finished
+    if offered_qps is None:
+        offered_qps = model.cfg.arrival_rate_rps
+    if pages_spilled is None:
+        pages_spilled = model.alloc.spill_count
+    if pages_allocated is None:
+        pages_allocated = model.alloc.pages_created
     t0 = traces[0]
     n_total = len(t0)
     if n_total == 0:
         return [
-            score_run(tr, sched, model, stats, system, sim_config,
-                      recorder=(recorder if i == 0 else None))
+            score_requests(tr, requests=requests, finished=finished,
+                           offered_qps=offered_qps,
+                           pages_spilled=pages_spilled,
+                           pages_allocated=pages_allocated,
+                           stats=stats, system=system, sim_config=sim_config,
+                           arrival_by_rid=arrival_by_rid,
+                           recorder=(recorder if i == 0 else None))
             for i, (tr, system) in enumerate(zip(traces, systems))
         ]
 
@@ -413,19 +477,22 @@ def score_shared_batch(
         recorder.record_replay(batch.row(0), t0)
 
     # Scheduler-clock metrics are shared by every technology on the grid.
-    arrival_by_rid = {req.rid: req.arrival_ns for req in sched.finished}
+    if arrival_by_rid is None:
+        arrival_by_rid = {req.rid: req.arrival_ns for req in finished}
     sched_ttft = np.array(
-        [req.first_token_ns - req.arrival_ns for req in sched.finished]
+        [req.first_token_ns - arrival_by_rid.get(req.rid, req.arrival_ns)
+         for req in finished]
     )
     sched_tpot = np.array(
         [
             (req.finish_ns - req.first_token_ns) / (req.decoded - 1)
-            for req in sched.finished
+            for req in finished
             if req.decoded > 1
         ]
     )
-    finishes = [req.finish_ns for req in sched.finished]
-    arrivals = [req.arrival_ns for req in sched.requests]
+    finishes = [req.finish_ns for req in finished]
+    arrivals = [arrival_by_rid.get(req.rid, req.arrival_ns)
+                for req in requests]
     span_ns = (max(finishes) - min(arrivals)) if finishes else 0.0
     kv_rd_total = stats.kv_rd_bytes_glb + stats.kv_rd_bytes_dram
 
@@ -439,35 +506,18 @@ def score_shared_batch(
         # Per-request token completions from the replay's tagged events,
         # exactly as in ``score_run``.
         orig_idx = kept[batch.order[r]]
-        tags = trace.tag[orig_idx]
-        m = tags >= 0
-        ttft, tpot = np.empty(0), np.empty(0)
-        if m.any():
-            tg, fin = tags[m], batch.finish_ns[r][m]
-            order = np.lexsort((fin, tg))
-            tg, fin = tg[order], fin[order]
-            first = np.flatnonzero(np.r_[True, tg[1:] != tg[:-1]])
-            bounds = np.r_[first, tg.size]
-            counts = np.diff(bounds)
-            rids = tg[first]
-            t_first = fin[first]
-            t_last = fin[bounds[1:] - 1]
-            arr = np.array(
-                [arrival_by_rid.get(int(x), np.nan) for x in rids]
-            )
-            ttft = t_first - arr
-            multi = counts > 1
-            tpot = (t_last[multi] - t_first[multi]) / (counts[multi] - 1)
+        ttft, tpot = replay_token_times(trace.tag[orig_idx],
+                                        batch.finish_ns[r], arrival_by_rid)
 
         ttft_p50, ttft_p99 = _percentiles_ms(ttft)
         tpot_p50, tpot_p99 = _percentiles_ms(tpot)
         reports.append(ServeReport(
-            n_requests=len(sched.requests),
-            completed=len(sched.finished),
+            n_requests=len(requests),
+            completed=len(finished),
             n_steps=stats.n_steps,
-            offered_qps=model.cfg.arrival_rate_rps,
+            offered_qps=offered_qps,
             achieved_qps=(
-                len(sched.finished) / (span_ns * 1e-9) if span_ns else 0.0
+                len(finished) / (span_ns * 1e-9) if span_ns else 0.0
             ),
             span_s=span_ns * 1e-9,
             ttft_p50_ms=ttft_p50,
@@ -485,8 +535,8 @@ def score_shared_batch(
             residency_mean=(
                 stats.residency_wsum / stats.dt_sum if stats.dt_sum else 1.0
             ),
-            pages_spilled=model.alloc.spill_count,
-            pages_allocated=model.alloc.pages_created,
+            pages_spilled=pages_spilled,
+            pages_allocated=pages_allocated,
             kv_spill_read_frac=(
                 stats.kv_rd_bytes_dram / kv_rd_total if kv_rd_total else 0.0
             ),

@@ -119,6 +119,23 @@ class ContinuousBatchScheduler:
     def done(self) -> bool:
         return self._next >= len(self.requests) and not self.active
 
+    def backlog(self) -> int:
+        """Requests not yet finished: running batch plus waiting queue."""
+        return len(self.active) + (len(self.requests) - self._next)
+
+    def add_request(self, r: RequestState) -> None:
+        """Route one request into the waiting queue (fleet front-end).
+
+        The unconsumed tail stays sorted by arrival so ``plan_step`` admits
+        in arrival order; routing in global-arrival order makes the insert a
+        plain append, which keeps a 1-replica fleet's queue identical to the
+        up-front constructor's.
+        """
+        i = len(self.requests)
+        while i > self._next and self.requests[i - 1].arrival_ns > r.arrival_ns:
+            i -= 1
+        self.requests.insert(i, r)
+
     def next_arrival_ns(self) -> float:
         if self._next >= len(self.requests):
             return math.inf

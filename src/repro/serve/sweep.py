@@ -64,6 +64,7 @@ from repro.serve.lower import (
     drive_serving_loop,
     serving_run_meta,
 )
+from repro.serve.fleet import Fleet, FleetConfig, FleetReport, fleet_serving
 from repro.serve.replay import NeutralRun, score_shared_batch
 from repro.serve.scheduler import ContinuousBatchScheduler, ServeEngineConfig
 
@@ -78,6 +79,10 @@ class ServingGridSpec:
     model: str = "gpt2"
     serving: ServingConfig = ServingConfig()
     engine: ServeEngineConfig = ServeEngineConfig()
+    # Fleet axis: replicas/router/disaggregation/autoscaler.  The default
+    # (1 replica, knobs off) routes through the original single-accelerator
+    # shared path bit-identically.
+    fleet: FleetConfig = FleetConfig()
 
     @classmethod
     def from_scenario(cls, scenario) -> "ServingGridSpec":
@@ -90,6 +95,7 @@ class ServingGridSpec:
             model=scenario.workloads[0],
             serving=scenario.serving_config(),
             engine=scenario.engine_config(),
+            fleet=scenario.fleet_config(),
         )
 
     def resolve_model(self) -> NLPModelSpec:
@@ -108,6 +114,9 @@ class SweepRow:
     qps: float
     shared: bool  # True: scored off the shared schedule (certificate held)
     report: ServeReport
+    # Fleet-mode extras (None on single-accelerator grids): the full
+    # FleetReport wrapping ``report``, with cost-per-token and replica axes.
+    fleet: FleetReport | None = None
 
 
 def _shared_run(model: ServeModel, sched: ContinuousBatchScheduler,
@@ -192,10 +201,19 @@ def sweep_serving_grid(
 
     rows: list[SweepRow] = []
     rec_pending = recorder  # consumed by the first grid point
+    fleet_mode = not spec.fleet.trivial
     for cap in spec.capacities_mb:
         for qps in spec.qps:
             cfg = dataclasses.replace(spec.serving, arrival_rate_rps=qps)
             rec, rec_pending = rec_pending, None
+            if fleet_mode:
+                rows.extend(_fleet_grid_point(
+                    spec, nlp, cfg, cap, qps, mode, backend,
+                    interarrival_std, prompts, decodes,
+                    n_dram_channels, n_prefetch_channels, lowering,
+                    timing, rec,
+                ))
+                continue
             if mode == "exact":
                 for tech in spec.technologies:
                     system = build_system(tech, cap)
@@ -297,3 +315,142 @@ def _sim_config(system, nlp, cfg, engine, backend) -> SimConfig:
     model = ServeModel(system, nlp, cfg, engine)
     return SimConfig(coalesce_window_ns=4 * model.interval_ns, backend=backend,
                      kind_stats=False)
+
+
+def _fleet_grid_point(
+    spec: ServingGridSpec,
+    nlp: NLPModelSpec,
+    cfg: ServingConfig,
+    cap: float,
+    qps: float,
+    mode: str,
+    backend: str,
+    interarrival_std: np.ndarray,
+    prompts: np.ndarray,
+    decodes: np.ndarray,
+    n_dram_channels: int,
+    n_prefetch_channels: int,
+    lowering: str,
+    timing: dict,
+    rec,
+) -> list[SweepRow]:
+    """One (capacity, qps) point of a *fleet* grid, all technologies.
+
+    The shared-schedule argument extends to fleets unchanged: router
+    decisions (backlog counts), handoff delivery times, and autoscale
+    actions (sched-clock TTFT p99) are all functions of the step durations,
+    and the shared clock's terms (decode cadence, prefill time, DRAM busy)
+    are technology-invariant.  So one fleet run under the shared clock fixes
+    the entire event interleaving, and the per-step per-bank certificate —
+    now over the replica-sliced resource space, with transfer blocks
+    carrying ``+inf`` step budgets — proves per technology that the exact
+    fleet would have produced byte-for-byte the same schedule.  Certified
+    technologies replay in one batch; violators fall back to their own
+    exact fleet loop.
+
+    One caveat the single-accelerator grid does not have: when two replicas
+    step at the *same* timestamp, the exact fleet appends their events
+    step-major while the shared path gathers them class-major.  Per-resource
+    order is unchanged (replicas own disjoint resource slices), so every
+    replayed metric — TTFT/TPOT, finish times, queue depths — is still
+    bitwise identical; only whole-trace float reductions (aggregate energy,
+    byte totals) may differ in the last ulp between the certified-shared row
+    and a hand-run exact fleet.
+    """
+    if mode == "exact":
+        out = []
+        for tech in spec.technologies:
+            system = build_system(tech, cap)
+            _, fr = fleet_serving(
+                system, nlp, cfg, spec.engine, spec.fleet,
+                sim_config=(None if backend == "numpy" else
+                            _sim_config(system, nlp, cfg, spec.engine,
+                                        backend)),
+                n_dram_channels=n_dram_channels,
+                n_prefetch_channels=n_prefetch_channels,
+                lowering=lowering, timing=timing, recorder=rec,
+            )
+            rec = None
+            out.append(SweepRow(tech, cap, qps, False, fr.report, fleet=fr))
+        return out
+
+    # One fleet loop under the technology-invariant clock.
+    t0 = time.perf_counter()
+    arrivals = arrivals_at_qps(interarrival_std, qps)
+    ref_system = build_system(spec.technologies[0], cap)
+    dram = ref_system.dram  # shared by every technology on the grid
+    t_dram_acc_ns = dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
+    fleet = Fleet(ref_system, nlp, cfg, spec.engine, spec.fleet,
+                  lowering=lowering, recorder=rec)
+
+    def shared_dt(replica, blocks):
+        decode_ns = replica.model.interval_ns if blocks.has_decode else 0.0
+        # Same accumulation order as TechPricer.price_step, so the value is
+        # bit-identical to the exact fleet's dram_ns term.
+        dram_acc = 0.0
+        if blocks.dram_rd_acc.size:
+            dram_acc += float(blocks.dram_rd_acc.sum())
+        if blocks.dram_wr_acc.size:
+            dram_acc += float(blocks.dram_wr_acc.sum())
+        return max(decode_ns, blocks.prefill_ns, dram_acc * t_dram_acc_ns)
+
+    fleet.run(arrivals, prompts, decodes, shared_dt)
+    model0 = fleet.replicas[0].model
+    run = NeutralRun(fleet.blocks_list, fleet.dts_array, model0,
+                     n_dram_channels, n_prefetch_channels,
+                     n_replicas=fleet.capacity)
+    pricings = [run.price(build_system(tech, cap))
+                for tech in spec.technologies]
+    timing["loop_s"] += time.perf_counter() - t0
+    sim_config = SimConfig(
+        coalesce_window_ns=4 * model0.interval_ns, backend=backend,
+        kind_stats=False,
+    )
+
+    t0 = time.perf_counter()
+    mean_alive = fleet.mean_alive()
+    certified = [(tech, p) for tech, p in
+                 zip(spec.technologies, pricings) if p.certified]
+    shared_fleet: dict[str, FleetReport] = {}
+    if certified:
+        traces = [
+            run.build_trace(p, serving_run_meta(
+                nlp, cfg, spec.engine, p.system, model0, fleet.stats,
+                lowering, schedule="shared", **fleet.fleet_meta()),
+                leakage_scale=mean_alive)
+            for _, p in certified
+        ]
+        reports = score_shared_batch(
+            traces, [p.system for _, p in certified], None, None,
+            fleet.stats, sim_config,
+            recorder=(rec if pricings[0].certified else None),
+            requests=fleet.logical,
+            finished=fleet.finished_logical,
+            arrival_by_rid=fleet.arrival_by_rid,
+            offered_qps=cfg.arrival_rate_rps,
+            pages_spilled=fleet.pages_spilled(),
+            pages_allocated=fleet.pages_allocated(),
+        )
+        shared_fleet = {
+            tech: fleet.finalize(rep, p.system)
+            for (tech, p), rep in zip(certified, reports)
+        }
+    timing["score_s"] += time.perf_counter() - t0
+
+    out = []
+    for tech, pricing in zip(spec.technologies, pricings):
+        if pricing.certified:
+            fr = shared_fleet[tech]
+            out.append(SweepRow(tech, cap, qps, True, fr.report, fleet=fr))
+        else:
+            # Congestion would have re-interleaved this technology's fleet:
+            # run its own exact fleet loop.
+            _, fr = fleet_serving(
+                pricing.system, nlp, cfg, spec.engine, spec.fleet,
+                sim_config=sim_config,
+                n_dram_channels=n_dram_channels,
+                n_prefetch_channels=n_prefetch_channels,
+                lowering=lowering, timing=timing,
+            )
+            out.append(SweepRow(tech, cap, qps, False, fr.report, fleet=fr))
+    return out

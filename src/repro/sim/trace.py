@@ -115,11 +115,15 @@ class TraceBuilder:
         system: HybridMemorySystem,
         n_dram_channels: int = 8,
         n_prefetch_channels: int = 4,
+        n_glb_banks: int | None = None,
     ):
         self.system = system
         self.glb = system.glb
         self.dram = system.dram
-        self.n_glb_banks = max(1, int(self.glb.banks))
+        # ``n_glb_banks`` overrides the bank count for multi-replica traces
+        # (fleet resource space = replicas x per-chip banks).
+        self.n_glb_banks = (max(1, int(self.glb.banks))
+                            if n_glb_banks is None else int(n_glb_banks))
         self.n_dram_channels = n_dram_channels
         self.n_prefetch_channels = n_prefetch_channels
         self._cols = [np.empty(self._INITIAL_CAPACITY, dt) for dt in _COLUMN_DTYPES]

@@ -51,6 +51,12 @@ class Scenario:
     decode_len: int = 128
     max_batch: int = 16
     seed: int = 2
+    # Optional fleet block (serving only): replicas / router / prefill-decode
+    # disaggregation / autoscaler, as a plain dict matching
+    # ``repro.serve.FleetConfig`` fields.  ``None`` — the default, and what
+    # every pre-fleet scenario JSON deserializes to — means a 1-replica
+    # fleet, which is bit-identical to the single-accelerator closed loop.
+    fleet: dict | None = None
 
     # -- validation / resolution -------------------------------------------
 
@@ -81,6 +87,13 @@ class Scenario:
                 "serving scenarios sweep one model; got "
                 f"workloads={self.workloads}"
             )
+        if self.fleet is not None:
+            if self.mode != "serving":
+                raise ValueError(
+                    "the 'fleet' block only applies to serving scenarios; "
+                    f"mode is {self.mode!r}"
+                )
+            self.fleet_config()  # raises on unknown fields / bad knobs
         return self
 
     def resolve_technologies(self) -> tuple[str, ...]:
@@ -121,6 +134,15 @@ class Scenario:
         from repro.serve.scheduler import ServeEngineConfig
 
         return ServeEngineConfig(max_batch=self.max_batch)
+
+    def fleet_config(self):
+        """The ``repro.serve.FleetConfig`` this scenario describes; a
+        missing ``fleet`` block means the (bit-identical) 1-replica fleet."""
+        from repro.serve.fleet import FleetConfig
+
+        if self.fleet is None:
+            return FleetConfig()
+        return FleetConfig.from_dict(self.fleet)
 
     def smoke(self) -> "Scenario":
         """A shrunk copy for CI smoke runs: one workload/batch/QPS point,
