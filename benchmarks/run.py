@@ -28,6 +28,7 @@ import json
 import platform
 import sys
 import time
+import traceback
 
 from repro import obs
 
@@ -224,6 +225,12 @@ def main() -> None:
             # message (full detail goes to stderr below).
             msg = str(e).split("\n", 1)[0].replace(",", ";")
             con.info(f"{name},FAILED,{type(e).__name__}:{msg}")
+            # The JSON record keeps the full traceback so a CI artifact is
+            # enough to diagnose the failure without re-running the harness.
+            bench_entries[name] = {
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(),
+            }
             continue
         base = name.split("_inf")[0].split("_train")[0] if name.startswith("fig09") else name
         con.info(f"{name},{us:.0f},{_derive(base, rows)}")
@@ -243,6 +250,7 @@ def main() -> None:
         "platform": platform.platform(),
         "python": platform.python_version(),
         "benchmarks": bench_entries,
+        "failed": [name for name, _ in failures],
     }
     # The manifest's seed is the serving request-population seed — the one
     # RNG input whose drift silently changes every serving metric.

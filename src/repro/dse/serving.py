@@ -46,6 +46,12 @@ class ServingSweepSpec:
     serving: ServingConfig = None  # arrival/prompt/decode draws; None = default
     engine: object = None  # ServeEngineConfig; None = default
     fleet: object = None  # repro.serve.FleetConfig; None = 1-replica default
+    # repro.faults.FaultConfig; None = fault-free.  With faults, every row
+    # is iso-reliability: each technology priced on its derated twin (MRAM
+    # carries ECC + write-verify, SRAM carries nothing) with seeded
+    # injection, so SLO knees answer "which design holds the SLO *and*
+    # delivers reliable data".
+    faults: object = None
 
     @classmethod
     def from_scenario(cls, scenario, qps: float | None = None) -> "ServingSweepSpec":
@@ -68,6 +74,7 @@ class ServingSweepSpec:
             serving=scenario.serving_config(qps),
             engine=scenario.engine_config(),
             fleet=scenario.fleet_config(),
+            faults=scenario.fault_config(),
         )
 
     def resolve_model(self) -> NLPModelSpec:
@@ -111,6 +118,7 @@ def evaluate_serving_grid(
         serving=dataclasses.replace(base, arrival_rate_rps=spec.qps),
         engine=spec.engine or ServeEngineConfig(),
         fleet=spec.fleet or FleetConfig(),
+        faults=spec.faults,
     )
     sweep = sweep_serving_grid(grid, mode=mode, backend=backend,
                                recorder=recorder)
@@ -134,6 +142,7 @@ def evaluate_serving_grid(
                 "n_requests": rep.n_requests,
                 "slo_ok": spec.slo.holds(rep),
                 "schedule_shared": r.shared,
+                "faulted": spec.faults is not None,
             }
             if r.fleet is not None:
                 # Fleet grids rank designs by fleet cost, not chip energy:
@@ -146,6 +155,13 @@ def evaluate_serving_grid(
                     "energy_per_token_j": r.fleet.energy_per_token_j,
                     "cost_per_token": r.fleet.cost_per_token,
                 })
+                if spec.faults is not None:
+                    row.update({
+                        "replica_failures": len(r.fleet.replica_failures),
+                        "requeued_requests": r.fleet.requeued_requests,
+                        "reprefill_tokens": r.fleet.reprefill_tokens,
+                        "goodput_tps": r.fleet.goodput_tps,
+                    })
             rows.append(row)
     return rows
 

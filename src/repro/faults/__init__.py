@@ -1,0 +1,53 @@
+"""Deterministic seeded fault injection and reliability-aware pricing.
+
+The subsystem threads one :class:`FaultConfig` through every layer:
+
+* ``repro.spec`` — each technology carries a :class:`ReliabilitySpec`
+  (write-error / read-disturb / bank-fault rates + ECC scheme);
+* ``repro.serve.lower`` / ``repro.serve.replay`` — write-verify retries
+  and bank-offline remap windows injected into the priced event stream via
+  the counter RNG (:mod:`repro.faults.rng`), plus expectation-level
+  ECC/verify derating of the array PPA (:func:`derate_system`);
+* ``repro.serve.fleet`` — seeded replica failures with requeue/backoff
+  and re-prefill (graceful degradation);
+* ``repro.serve.sweep`` / ``repro.dse.serving`` — the iso-reliability
+  fault axis on the serving grid.
+
+``faults=None`` is the universal off-switch: every touched code path is
+bit-identical to its pre-fault behavior (golden-pinned by
+``tests/test_faults.py``).  See ``docs/faults.md`` for the determinism
+contract.
+"""
+
+from repro.faults.config import FaultConfig, load_fault_config
+from repro.faults.inject import (
+    FaultModel,
+    derate_system,
+    fault_model_for,
+    reliability_for,
+    replica_fail_times_ns,
+)
+from repro.faults.reliability import ECC_SCHEMES, EccScheme, ReliabilitySpec
+from repro.faults.rng import (
+    STREAM_BANK_WINDOW,
+    STREAM_REPLICA_LIFE,
+    STREAM_WRITE_RETRY,
+    counter_uniform,
+)
+
+__all__ = [
+    "ECC_SCHEMES",
+    "EccScheme",
+    "FaultConfig",
+    "FaultModel",
+    "ReliabilitySpec",
+    "STREAM_BANK_WINDOW",
+    "STREAM_REPLICA_LIFE",
+    "STREAM_WRITE_RETRY",
+    "counter_uniform",
+    "derate_system",
+    "fault_model_for",
+    "load_fault_config",
+    "reliability_for",
+    "replica_fail_times_ns",
+]

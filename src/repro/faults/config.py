@@ -1,0 +1,131 @@
+"""Run-level fault-injection configuration.
+
+A :class:`FaultConfig` turns the per-technology :class:`ReliabilitySpec`
+rates into one *seeded, deterministic* injection campaign: trace-level
+write-verify retries and bank-offline windows (scaled by the ``*_scale``
+knobs so a "fault storm" is one config away), plus fleet-level replica
+failures (MTBF draws or explicit fail times) with capped-exponential
+requeue backoff.  ``faults=None`` everywhere means the zero-fault path —
+bit-identical to the pre-fault code, golden-pinned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Knobs of one seeded fault-injection campaign."""
+
+    seed: int = 0
+    # Trace-level scales on the technology's ReliabilitySpec rates.
+    write_error_scale: float = 1.0
+    read_disturb_scale: float = 1.0
+    bank_fault_scale: float = 1.0
+    # Bank-offline remap window: a bank struck by a transient fault is
+    # offline (accesses remapped to its neighbor) for one whole window.
+    bank_window_us: float = 100.0
+    # Fleet-level replica failures: exponential MTBF draws per replica slot
+    # (0 disables), plus explicit ``(replica, t_ms_after_start)`` overrides
+    # for deterministic storm tests.
+    replica_mtbf_s: float = 0.0
+    replica_fail_ms: tuple[tuple[int, float], ...] = ()
+    # Requeue backoff for in-flight requests of a failed replica:
+    # ``min(backoff * 2**attempt, cap)`` microseconds.
+    requeue_backoff_us: float = 50.0
+    requeue_backoff_cap_us: float = 800.0
+    # Also run a fault-free reference fleet to report p99 inflation.
+    baseline_inflation: bool = True
+
+    @property
+    def has_replica_faults(self) -> bool:
+        return self.replica_mtbf_s > 0.0 or bool(self.replica_fail_ms)
+
+    def validate(self) -> None:
+        for field in ("write_error_scale", "read_disturb_scale",
+                      "bank_fault_scale"):
+            v = getattr(self, field)
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v >= 0.0):
+                raise ValueError(
+                    f"FaultConfig.{field} must be finite and >= 0 (got {v!r})"
+                )
+        if not (math.isfinite(self.bank_window_us)
+                and self.bank_window_us > 0.0):
+            raise ValueError(
+                f"FaultConfig.bank_window_us must be positive "
+                f"(got {self.bank_window_us!r})"
+            )
+        if not (math.isfinite(self.replica_mtbf_s)
+                and self.replica_mtbf_s >= 0.0):
+            raise ValueError(
+                f"FaultConfig.replica_mtbf_s must be finite and >= 0 "
+                f"(got {self.replica_mtbf_s!r})"
+            )
+        for entry in self.replica_fail_ms:
+            if (len(entry) != 2 or entry[0] < 0
+                    or not math.isfinite(entry[1]) or entry[1] < 0.0):
+                raise ValueError(
+                    f"FaultConfig.replica_fail_ms entries must be "
+                    f"(replica >= 0, t_ms >= 0) pairs (got {entry!r})"
+                )
+        if not (math.isfinite(self.requeue_backoff_us)
+                and self.requeue_backoff_us > 0.0):
+            raise ValueError(
+                f"FaultConfig.requeue_backoff_us must be positive "
+                f"(got {self.requeue_backoff_us!r})"
+            )
+        if (not math.isfinite(self.requeue_backoff_cap_us)
+                or self.requeue_backoff_cap_us < self.requeue_backoff_us):
+            raise ValueError(
+                "FaultConfig.requeue_backoff_cap_us must be >= "
+                f"requeue_backoff_us (got {self.requeue_backoff_cap_us!r})"
+            )
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["replica_fail_ms"] = [[int(r), float(t)]
+                                for r, t in self.replica_fail_ms]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultConfig":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown FaultConfig field(s) {sorted(unknown)}; "
+                f"valid fields: {sorted(known)}"
+            )
+        if "replica_fail_ms" in d:
+            d["replica_fail_ms"] = tuple(
+                (int(r), float(t)) for r, t in d["replica_fail_ms"]
+            )
+        cfg = cls(**d)
+        cfg.validate()
+        return cfg
+
+
+def load_fault_config(value: str | None) -> FaultConfig | None:
+    """Resolve a ``--faults`` CLI value: None, inline JSON, or a JSON path.
+
+    ``None`` stays ``None`` (the fault-free path); a string starting with
+    ``{`` is parsed as an inline JSON object; anything else is read as a
+    path to a JSON file holding either a FaultConfig object or a scenario
+    file with a ``"faults"`` block.
+    """
+    if value is None:
+        return None
+    if value.lstrip().startswith("{"):
+        data = json.loads(value)
+    else:
+        with open(value) as fh:
+            data = json.load(fh)
+        known = {f.name for f in dataclasses.fields(FaultConfig)}
+        if "faults" in data and not set(data) <= known:
+            data = data["faults"]
+    return FaultConfig.from_dict(data)

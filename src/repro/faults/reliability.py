@@ -1,0 +1,117 @@
+"""Per-technology reliability data: error rates and ECC schemes.
+
+MRAM's defining robustness cost is stochastic: a write switches the MTJ
+only with probability ``1 - WER`` (write error rate), so production MRAM
+macros run write-verify loops and carry ECC, while SRAM pays neither.
+:class:`ReliabilitySpec` captures that asymmetry as pure data on a
+``repro.spec.MemTechSpec`` — per-tech write-error / read-disturb /
+transient bank-fault rates plus an ECC scheme — so the pricing layers can
+charge each technology for *its own* reliability machinery (the
+iso-reliability comparison the DSE fault axis runs).
+
+Rate anchors follow the cross-layer NVM reliability modeling of DeepNVM++
+(Inci et al.) and the companion STT-MRAM paper (Mishty & Sadi 2021):
+thermally-activated switching puts the raw WER of a DTCO'd (reduced
+write-current) SOT cell above the conservative cell's, and STT — whose
+read and write share the MTJ path — above both, which is why ``stt``
+carries DECTED while the SOT flavors carry SECDED.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class EccScheme:
+    """Overheads of one ECC organization on a 64-byte GLB line."""
+
+    name: str
+    check_bit_overhead: float  # extra bits stored per data bit
+    latency_overhead: float  # encode/decode time, fraction of array access
+    energy_overhead: float  # codec + check-bit access energy fraction
+    area_overhead: float  # check-bit columns + codec logic area fraction
+
+
+#: The ECC organizations the spec layer knows.  ``secded`` is the classic
+#: (72,64) Hamming+parity code; ``dected`` a (550,512)-class BCH able to
+#: correct double errors, with correspondingly heavier codec and columns.
+ECC_SCHEMES: dict[str, EccScheme] = {
+    "none": EccScheme("none", 0.0, 0.0, 0.0, 0.0),
+    "secded": EccScheme("secded", 0.125, 0.05, 0.10, 0.11),
+    "dected": EccScheme("dected", 0.219, 0.10, 0.18, 0.22),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilitySpec:
+    """Reliability block of one memory technology (all-zero == ideal).
+
+    ``write_error_rate`` is the per-access probability that a write fails
+    verify and must be retried; ``read_disturb_rate`` the per-access
+    probability that a read flips the cell (repaired by an expected
+    corrective rewrite); ``bank_fault_rate_hz`` the per-bank rate of
+    transient faults that take the bank offline for one remap window.
+    """
+
+    write_error_rate: float = 0.0
+    read_disturb_rate: float = 0.0
+    bank_fault_rate_hz: float = 0.0
+    ecc: str = "none"
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when the spec prices nothing (the SRAM/ideal case)."""
+        return (
+            self.write_error_rate == 0.0
+            and self.read_disturb_rate == 0.0
+            and self.bank_fault_rate_hz == 0.0
+            and self.ecc == "none"
+        )
+
+    @property
+    def ecc_scheme(self) -> EccScheme:
+        return ECC_SCHEMES[self.ecc]
+
+    def validate(self, owner: str = "") -> None:
+        ctx = f"{owner!r}: " if owner else ""
+        if self.ecc not in ECC_SCHEMES:
+            raise ValueError(
+                f"{ctx}unknown ECC scheme {self.ecc!r} "
+                f"(known: {', '.join(sorted(ECC_SCHEMES))})"
+            )
+        for field in ("write_error_rate", "read_disturb_rate"):
+            v = getattr(self, field)
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and 0.0 <= v < 1.0):
+                raise ValueError(
+                    f"{ctx}{field} must be a finite probability in [0, 1) "
+                    f"(got {v!r})"
+                )
+        v = self.bank_fault_rate_hz
+        if not (isinstance(v, (int, float)) and math.isfinite(v) and v >= 0.0):
+            raise ValueError(
+                f"{ctx}bank_fault_rate_hz must be finite and >= 0 (got {v!r})"
+            )
+
+    def to_dict(self) -> dict:
+        return {
+            "write_error_rate": self.write_error_rate,
+            "read_disturb_rate": self.read_disturb_rate,
+            "bank_fault_rate_hz": self.bank_fault_rate_hz,
+            "ecc": self.ecc,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ReliabilitySpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown ReliabilitySpec field(s) {sorted(unknown)}; "
+                f"valid fields: {sorted(known)}"
+            )
+        spec = cls(**d)
+        spec.validate()
+        return spec

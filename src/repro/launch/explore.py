@@ -200,7 +200,14 @@ def explore_serving(args) -> int:
     from repro.serve import ServeEngineConfig
     from repro.sim import ServingConfig
 
+    from repro.faults import load_fault_config
+
     con = obs.Console.from_args(args)
+    try:
+        faults = load_fault_config(args.faults)
+    except (OSError, ValueError) as e:
+        con.error(f"bad --faults value: {e}")
+        return 2
     if args.smoke:
         spec = ServingSweepSpec(
             capacities_mb=(32.0, 64.0, 128.0, 256.0),
@@ -210,6 +217,7 @@ def explore_serving(args) -> int:
             serving=ServingConfig(n_requests=16, prompt_len=512,
                                   decode_len=64, seed=2),
             engine=ServeEngineConfig(max_batch=16),
+            faults=faults,
         )
     else:
         # --models carries CV names by default; serving only understands the
@@ -230,6 +238,7 @@ def explore_serving(args) -> int:
                            tpot_p99_ms=args.slo_tpot_ms),
             serving=ServingConfig(n_requests=args.requests, seed=args.seed),
             engine=ServeEngineConfig(max_batch=args.max_batch),
+            faults=faults,
         )
     recorder = obs.TimelineRecorder() if args.trace_out else None
     t0 = time.perf_counter()
@@ -243,6 +252,9 @@ def explore_serving(args) -> int:
              f"(SLO: TTFT p99 <= {spec.slo.ttft_p99_ms} ms, "
              f"TPOT p99 <= {spec.slo.tpot_p99_ms} ms; {dt:.1f}s, "
              f"{n_shared}/{len(out['rows'])} points off the shared schedule)")
+    if faults is not None:
+        con.info("  iso-reliability: every point priced on its derated twin "
+                 f"(faults seed={faults.seed})")
     ok = _print_serving_rows(con, out)
     seed = spec.serving.seed if spec.serving else None
     if recorder is not None:
@@ -366,6 +378,11 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--seed", type=int, default=2)
+    ap.add_argument("--faults", default=None, metavar="JSON|PATH",
+                    help="with --serving: iso-reliability fault campaign "
+                         "(inline JSON object or path to a JSON file); every "
+                         "grid point is priced on its reliability-derated "
+                         "twin with seeded injection")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="with --serving: write the first grid point's "
                          "timeline as Perfetto/Chrome-trace JSON")

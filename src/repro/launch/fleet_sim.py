@@ -38,6 +38,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.workload import NLP_TABLE_V
+from repro.faults import load_fault_config
 from repro.serve import (
     FleetConfig,
     ServeEngineConfig,
@@ -88,14 +89,21 @@ def run(args) -> int:
         seed=args.seed,
     )
     ecfg = ServeEngineConfig(max_batch=args.max_batch)
+    try:
+        faults = load_fault_config(args.faults)
+    except (OSError, ValueError) as e:
+        con.error(f"bad --faults value: {e}")
+        return 2
     manifest_config = {"model": args.model, "tech": args.tech,
                        "glb_mb": args.glb_mb, "serving": cfg, "engine": ecfg,
-                       "fleet": fcfg.to_dict(), "lowering": args.lowering}
+                       "fleet": fcfg.to_dict(), "lowering": args.lowering,
+                       "faults": faults}
     recorder = obs.TimelineRecorder() if args.trace_out else None
     t0 = time.time()
     with obs.span("fleet"):
         trace, fr = fleet_serving(system, spec, cfg, ecfg, fcfg,
-                                  lowering=args.lowering, recorder=recorder)
+                                  lowering=args.lowering, recorder=recorder,
+                                  faults=faults)
     dt = time.time() - t0
     con.info(f"# fleet_sim {args.model} {args.tech}@{args.glb_mb}MB "
              f"{fcfg.n_replicas} replicas ({fcfg.router}"
@@ -120,6 +128,8 @@ def run(args) -> int:
         "wall_s": dt,
         "report": _fleet_record(fr),
     }
+    if faults is not None:
+        record["faults"] = faults.to_dict()
     if recorder is not None:
         doc = recorder.save(args.trace_out, manifest=obs.run_manifest(
             seed=args.seed, config=manifest_config))
@@ -134,6 +144,7 @@ def _fleet_record(fr) -> dict:
     """The FleetReport as a JSON-ready dict (nested ServeReport flattened)."""
     d = {f.name: getattr(fr, f.name)
          for f in dataclasses.fields(fr) if f.name != "report"}
+    d["replica_failures"] = [list(e) for e in fr.replica_failures]
     d["routed_per_replica"] = list(fr.routed_per_replica)
     d["completed_per_replica"] = list(fr.completed_per_replica)
     d["busy_frac_per_replica"] = list(fr.busy_frac_per_replica)
@@ -205,6 +216,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-replicas", type=int, default=8)
     ap.add_argument("--autoscale-window-ms", type=float, default=5.0)
     ap.add_argument("--ttft-slo-ms", type=float, default=50.0)
+    ap.add_argument("--faults", default=None, metavar="JSON|PATH",
+                    help="fault-injection campaign: inline JSON object or a "
+                         "path to a JSON file (FaultConfig fields, or a "
+                         "scenario file with a 'faults' block); adds replica "
+                         "failures + graceful degradation to the fleet")
     ap.add_argument("--lowering", default="block", choices=["block", "scalar"])
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Perfetto/Chrome-trace JSON timeline with "

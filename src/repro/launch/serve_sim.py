@@ -28,6 +28,7 @@ import time
 
 from repro import obs
 from repro.core.workload import NLP_TABLE_V
+from repro.faults import load_fault_config
 from repro.serve import ServeEngineConfig, closed_loop_serving, summarize_report
 from repro.sim import ServingConfig, SimConfig, serving_trace
 from repro.sim.trace import trace_byte_counts
@@ -59,9 +60,14 @@ def run(args) -> int:
         prefill_chunk=args.prefill_chunk,
         page_tokens=args.page_tokens,
     )
+    try:
+        faults = load_fault_config(args.faults)
+    except (OSError, ValueError) as e:
+        con.error(f"bad --faults value: {e}")
+        return 2
     manifest_config = {"model": args.model, "tech": args.tech,
                       "glb_mb": args.glb_mb, "serving": cfg, "engine": ecfg,
-                      "lowering": args.lowering}
+                      "lowering": args.lowering, "faults": faults}
     recorder = obs.TimelineRecorder() if args.trace_out else None
     t0 = time.time()
     sim_config = None
@@ -72,7 +78,8 @@ def run(args) -> int:
         trace, report = closed_loop_serving(system, spec, cfg, ecfg,
                                             sim_config=sim_config,
                                             lowering=args.lowering,
-                                            recorder=recorder)
+                                            recorder=recorder,
+                                            faults=faults)
     dt = time.time() - t0
     con.info(f"# serve_sim {args.model} {args.tech}@{args.glb_mb}MB "
              f"{args.requests} reqs @ {args.qps}/s max_batch={args.max_batch} "
@@ -91,6 +98,13 @@ def run(args) -> int:
         "wall_s": dt,
         "report": _report_record(report),
     }
+    if faults is not None:
+        record["faults"] = faults.to_dict()
+        record["fault_stats"] = trace.meta.get("fault_stats")
+        fs = trace.meta.get("fault_stats") or {}
+        con.info(f"fault campaign       : {fs.get('retry_accesses', 0.0):.0f} "
+                 f"write-retry accesses, {fs.get('banks_remapped', 0)} bank "
+                 "accesses remapped")
 
     if args.cross_validate:
         open_trace = serving_trace(system, spec, cfg)
@@ -170,6 +184,11 @@ def main(argv=None) -> int:
     ap.add_argument("--cross-validate", action="store_true",
                     help="compare aggregate bytes against serving_trace")
     ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument("--faults", default=None, metavar="JSON|PATH",
+                    help="fault-injection campaign: inline JSON object or a "
+                         "path to a JSON file (FaultConfig fields, or a "
+                         "scenario file with a 'faults' block); omit for the "
+                         "fault-free path")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Perfetto/Chrome-trace JSON timeline of the "
                          "run (metrics are unchanged by recording)")

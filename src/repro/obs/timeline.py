@@ -23,10 +23,11 @@ Track layout (Chrome trace event format, timestamps in microseconds of
   pages spilled, cumulative KV read bytes served from DRAM, active batch
   size, sampled at every scheduler step.
 * **pid 4 "fleet replicas"** (fleet runs only) — one thread per replica
-  with its step spans (``decode``/``prefill`` batch sizes as args) and
-  KV-transfer delivery instants; fleet-wide counters (router backlog,
-  alive replicas, cumulative cross-replica KV-transfer bytes) land on
-  pid 3.  The fleet loop processes events in global simulated-time order,
+  with its step spans (``decode``/``prefill`` batch sizes as args),
+  KV-transfer delivery instants, and fault-injection instants (replica
+  failures with the number of lost requests); fleet-wide counters (router
+  backlog, alive replicas, cumulative cross-replica KV-transfer bytes,
+  cumulative replica failures / requeued requests) land on pid 3.  The fleet loop processes events in global simulated-time order,
   which is what keeps these shared counter tracks monotone.
 
 Recording is strictly read-only — it never touches RNG state, event
@@ -72,6 +73,8 @@ class TimelineRecorder:
         self._meta: dict = {}
         self._fleet_events: list[dict] = []
         self._fleet_tids: set[int] = set()
+        self._fault_counts: dict[str, int] = {}
+        self._fault_lost = 0
 
     # -- recording hooks (called by the engines; all read-only) --------------
 
@@ -187,6 +190,25 @@ class TimelineRecorder:
         })
         self._counters.append(("kv_xfer_bytes", t_ready_ns, total_bytes))
 
+    def record_fault(self, kind: str, t_ns: float, replica_idx: int,
+                     n_lost: int) -> None:
+        """One fleet fault event (e.g. a replica failure): an instant on the
+        replica's track plus cumulative failure/requeue counters."""
+        self._fleet_tids.add(replica_idx)
+        self._fault_counts[kind] = self._fault_counts.get(kind, 0) + 1
+        self._fault_lost += n_lost
+        self._fleet_events.append({
+            "ph": "i", "pid": PID_FLEET, "tid": replica_idx, "name": kind,
+            "s": "g",
+            "ts": t_ns * _NS_TO_US,
+            "args": {"requests_lost": n_lost},
+        })
+        self._counters.append(
+            ("replica_failures", t_ns,
+             float(sum(self._fault_counts.values()))))
+        self._counters.append(
+            ("requests_requeued", t_ns, float(self._fault_lost)))
+
     def counter(self, name: str, t_ns: float, value: float) -> None:
         """Free-form counter sample on the serving-counters process."""
         self._counters.append((name, t_ns, float(value)))
@@ -246,6 +268,7 @@ class TimelineRecorder:
             "n_counter_samples": len(self._counters),
             "n_replays": self._n_replays,
             "n_fleet_events": len(self._fleet_events),
+            "fault_events": dict(self._fault_counts),
             "dropped_events": self.dropped_events,
             **self._meta,
         }

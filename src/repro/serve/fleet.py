@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.core.memory_system import HybridMemorySystem
 from repro.core.workload import NLPModelSpec
+from repro.faults import FaultConfig, derate_system, replica_fail_times_ns
 from repro.sim.engine import SimConfig
 from repro.sim.trace import ServingConfig, Trace, draw_requests
 from repro.serve.lower import (
@@ -215,6 +216,14 @@ class FleetReport:
     area_mm2_per_chip: float
     energy_per_token_j: float
     cost_per_token: float  # mean_alive x area_mm2 x J/token
+    # -- fault campaign outcome (all-zero when faults are off) --------------
+    replica_failures: tuple = ()  # ((t_ns, replica_idx), ...)
+    requeued_requests: int = 0
+    reprefill_tokens: int = 0  # lost-KV tokens recomputed after failures
+    fault_retry_accesses: float = 0.0  # write-verify retry accesses injected
+    banks_remapped: int = 0  # GLB accesses shifted off offline banks
+    goodput_tps: float = 0.0  # generated tokens / serving span (faults incl.)
+    ttft_p99_inflation: float = 0.0  # faulted p99 TTFT / fault-free p99 TTFT
 
 
 _EMPTY_I = np.empty(0, np.int64)
@@ -305,8 +314,10 @@ class Fleet:
         fleet_cfg: FleetConfig = FleetConfig(),
         lowering: str = "block",
         recorder=None,
+        faults: FaultConfig | None = None,
     ):
         fleet_cfg.validate()
+        self.faults = faults
         self.system = system
         self.spec = spec
         self.cfg = cfg
@@ -335,6 +346,15 @@ class Fleet:
         self.kv_xfer_bytes = 0.0
         self.total_steps = 0
         self.t0 = 0.0
+        # -- fault campaign state (inert with faults=None) -------------------
+        self.retries: list = []  # heap of (t_ready_ns, seq, RequestState)
+        self._retry_seq = 0
+        self._retry_attempt: dict[int, int] = {}
+        self._fail_times: list[float] = []  # per capacity slot, inf = never
+        self.replica_failures: list[tuple[float, int]] = []
+        self.requeued_requests = 0
+        self.reprefill_tokens = 0
+        self.prefail_tokens = 0  # tokens streamed to clients before a failure
 
     # -- replica lifecycle ---------------------------------------------------
     def _activate(self, t_ns: float, role: str) -> _Replica | None:
@@ -474,6 +494,69 @@ class Fleet:
                                                 xfer_bytes,
                                                 self.kv_xfer_bytes)
 
+    # -- replica failure / graceful degradation --------------------------------
+    def _can_fail(self, victim: _Replica) -> bool:
+        """Never kill the last alive replica of any role pool the router
+        needs — ``_pick`` over an empty pool has no answer, and the injected
+        campaign models partial outages, not total loss."""
+        roles = (("prefill", "decode") if self.fcfg.disaggregation
+                 else ("both",))
+        for role in roles:
+            if victim.role not in ("both", role):
+                continue
+            survivors = sum(
+                1 for r in self.replicas
+                if r.alive and r is not victim and r.role in ("both", role)
+            )
+            if survivors == 0:
+                return False
+        return True
+
+    def _fail_replica(self, r: _Replica, t_ns: float) -> None:
+        """Kill one replica mid-run; requeue its lost work onto survivors.
+
+        Tokens already decoded were streamed to clients, so a retried
+        request keeps them: it re-enters the router (after a capped
+        exponential backoff) as a fresh request whose prompt is the full
+        lost context (original prompt + decoded tokens) and whose decode
+        budget is the remainder.  The KV pages it had built (prefilled +
+        decoded tokens) are gone and must be recomputed — that recompute
+        burden is ``reprefill_tokens``.  The dead slot stays in the resource
+        space; the autoscaler may later revive it, which models a
+        replacement chip taking over the slot's banks.
+        """
+        self._fail_times[r.idx] = math.inf  # a slot fails at most once
+        if not self._can_fail(r):
+            return
+        fc = self.faults
+        sched = r.sched
+        lost = list(sched.active) + sched.requests[sched._next:]
+        sched.active = []
+        sched._next = len(sched.requests)
+        self._deactivate(r, t_ns)
+        self.replica_failures.append((t_ns, r.idx))
+        for q in lost:
+            r.model.alloc.free(q.rid)
+            attempt = self._retry_attempt.get(q.rid, 0)
+            self._retry_attempt[q.rid] = attempt + 1
+            delay_ns = min(
+                fc.requeue_backoff_us * (2.0 ** attempt),
+                fc.requeue_backoff_cap_us,
+            ) * 1e3
+            self.prefail_tokens += q.decoded
+            self.reprefill_tokens += q.prefilled + q.decoded
+            retry = RequestState(rid=q.rid, arrival_ns=t_ns + delay_ns,
+                                 prompt=q.prompt + q.decoded,
+                                 decode=q.decode - q.decoded)
+            heapq.heappush(self.retries,
+                           (retry.arrival_ns, self._retry_seq, retry))
+            self._retry_seq += 1
+            self.requeued_requests += 1
+        if self.recorder is not None and hasattr(self.recorder,
+                                                 "record_fault"):
+            self.recorder.record_fault("replica_failure", t_ns, r.idx,
+                                       len(lost))
+
     # -- autoscaler ------------------------------------------------------------
     def _scalable_role(self) -> str:
         return "decode" if self.fcfg.disaggregation else "both"
@@ -576,12 +659,19 @@ class Fleet:
                 role = "prefill" if i < fc.n_prefill_replicas else "decode"
             self._activate(self.t0, role)
 
+        if self.faults is not None and self.faults.has_replica_faults:
+            self._fail_times = replica_fail_times_ns(self.faults, self.t0,
+                                                     self.capacity)
+        else:
+            self._fail_times = [math.inf] * self.capacity
+
         window_ns = fc.autoscale_window_ms * 1e6
         next_check = self.t0 + window_ns
         ri = 0
         while True:
             t_route = (route_order[ri].arrival_ns
                        if ri < len(route_order) else math.inf)
+            t_retry = self.retries[0][0] if self.retries else math.inf
             t_hand = self.handoffs[0][0] if self.handoffs else math.inf
             t_step, r_star = math.inf, None
             for r in self.replicas:
@@ -590,16 +680,32 @@ class Fleet:
                 ta = r.next_action_ns()
                 if ta < t_step:
                     t_step, r_star = ta, r
-            t_work = min(t_route, t_hand, t_step)
+            t_work = min(t_route, t_retry, t_hand, t_step)
             if not math.isfinite(t_work):
                 break
+            # Pending failures strike before any work at or after their
+            # deadline (and before an autoscale check they precede) — a
+            # replica cannot execute a step that ends after it died.
+            t_fail, r_fail = math.inf, None
+            for r in self.replicas:
+                if r.alive and self._fail_times[r.idx] < t_fail:
+                    t_fail, r_fail = self._fail_times[r.idx], r
+            if (r_fail is not None and t_fail <= t_work
+                    and (not fc.autoscale or t_fail <= next_check)):
+                self._fail_replica(r_fail, t_fail)
+                continue
             if fc.autoscale and next_check <= t_work:
                 self._autoscale(next_check)
                 next_check += window_ns
                 continue
-            if t_route <= t_hand and t_route <= t_step:
+            if t_route <= t_retry and t_route <= t_hand and t_route <= t_step:
                 self._route_arrival(route_order[ri])
                 ri += 1
+            elif t_retry <= t_hand and t_retry <= t_step:
+                # Backoff elapsed: the lost request re-enters the router and
+                # lands on a surviving (or replacement) replica.
+                _, _, req = heapq.heappop(self.retries)
+                self._route_arrival(req)
             elif t_hand <= t_step:
                 self._deliver_handoff()
             else:
@@ -644,7 +750,11 @@ class Fleet:
         return sum(r.model.alloc.pages_created for r in self.replicas)
 
     def tokens(self) -> int:
-        return int(sum(r.decoded for r in self.finished_logical))
+        # Tokens streamed before a replica died were delivered too — a retry
+        # only re-generates the remainder, so the pre-failure count is added
+        # back (zero in a fault-free run).
+        return (int(sum(r.decoded for r in self.finished_logical))
+                + self.prefail_tokens)
 
     def fleet_meta(self) -> dict:
         return {
@@ -656,8 +766,15 @@ class Fleet:
             "kv_xfer_transfers": self.kv_xfer_transfers,
         }
 
-    def finalize(self, report: ServeReport,
-                 system: HybridMemorySystem) -> FleetReport:
+    def fault_meta(self) -> dict:
+        return {
+            "replica_failures": len(self.replica_failures),
+            "requeued_requests": self.requeued_requests,
+            "reprefill_tokens": self.reprefill_tokens,
+        }
+
+    def finalize(self, report: ServeReport, system: HybridMemorySystem,
+                 fault_stats: dict | None = None) -> FleetReport:
         """Wrap the fleet-aggregate :class:`ServeReport` with replica axes
         and the chips x area x energy cost index."""
         span_ns = self.span_end_ns() - self.t0
@@ -669,6 +786,7 @@ class Fleet:
             round(r.busy_ns / span_ns, 6) if span_ns > 0 else 0.0
             for r in self.replicas
         )
+        fault_stats = fault_stats or {}
         return FleetReport(
             report=report,
             n_replicas=self.fcfg.n_replicas,
@@ -687,6 +805,13 @@ class Fleet:
             area_mm2_per_chip=area,
             energy_per_token_j=energy_per_token,
             cost_per_token=mean_alive * area * energy_per_token,
+            replica_failures=tuple(self.replica_failures),
+            requeued_requests=self.requeued_requests,
+            reprefill_tokens=self.reprefill_tokens,
+            fault_retry_accesses=float(
+                fault_stats.get("retry_accesses", 0.0)),
+            banks_remapped=int(fault_stats.get("banks_remapped", 0)),
+            goodput_tps=(tokens / (span_ns * 1e-9) if span_ns > 0 else 0.0),
         )
 
 
@@ -702,6 +827,7 @@ def fleet_serving(
     lowering: str = "block",
     timing: dict | None = None,
     recorder=None,
+    faults: FaultConfig | None = None,
 ) -> tuple[Trace, FleetReport]:
     """Run the closed-loop fleet to completion and score one fleet replay.
 
@@ -712,18 +838,30 @@ def fleet_serving(
     replica's clock.  With the default 1-replica :class:`FleetConfig` the
     returned trace and report are **bit-identical** to
     ``closed_loop_serving`` on the same inputs.
+
+    ``faults`` arms the full campaign: reliability-derated pricing with
+    seeded write-retry/bank-offline injection (as in the closed loop) plus
+    replica failures — dead replicas drop their in-flight work, which is
+    requeued onto survivors after a capped exponential backoff, their lost
+    KV re-prefilled, while the router excludes them and the autoscaler (if
+    on) brings replacements up.  ``faults=None`` is bit-identical to today.
     """
     t_loop0 = time.perf_counter()
+    base_system = system
+    if faults is not None:
+        faults.validate()
+        system = derate_system(system, faults)
     rng = np.random.default_rng(cfg.seed)
     arrivals, prompts, decodes = draw_requests(cfg, rng)
 
     fleet = Fleet(system, spec, cfg, engine_cfg, fleet_cfg,
-                  lowering=lowering, recorder=recorder)
+                  lowering=lowering, recorder=recorder, faults=faults)
     # The pricer only reads run-level constants off the model (the KV-append
     # line namespace); replica 0's own model is built by run().
     seed_model = ServeModel(system, spec, cfg, engine_cfg)
     pricer = TechPricer(system, seed_model, n_dram_channels,
-                        n_prefetch_channels, n_replicas=fleet.capacity)
+                        n_prefetch_channels, n_replicas=fleet.capacity,
+                        faults=faults)
 
     def step_time(replica: _Replica, blocks: StepBlocks) -> float:
         glb_ns, dram_ns = pricer.price_step(blocks)
@@ -740,6 +878,12 @@ def fleet_serving(
     # A trivial (1-replica, knobs-off) fleet keeps the closed loop's exact
     # metadata so the whole trace stays bit-identical.
     extra = {} if fleet_cfg.trivial else fleet.fleet_meta()
+    if faults is not None:
+        extra["faults"] = faults.to_dict()
+        if pricer.fm is not None:
+            extra["fault_stats"] = pricer.fm.stats()
+        if faults.has_replica_faults:
+            extra.update(fleet.fault_meta())
     trace = pricer.b.build(
         compute_time_s=0.0,
         meta=serving_run_meta(spec, cfg, engine_cfg, system, model0,
@@ -767,12 +911,28 @@ def fleet_serving(
         arrival_by_rid=fleet.arrival_by_rid,
         recorder=recorder,
     )
+    fr = fleet.finalize(
+        report, system,
+        fault_stats=pricer.fm.stats() if (faults is not None
+                                          and pricer.fm is not None) else None,
+    )
+    if faults is not None and faults.baseline_inflation:
+        # One fault-free rerun anchors the degradation metric: how much the
+        # campaign inflated the tail TTFT over the same offered load.
+        _, base = fleet_serving(
+            base_system, spec, cfg, engine_cfg, fleet_cfg, sim_config,
+            n_dram_channels, n_prefetch_channels, lowering,
+        )
+        if base.report.ttft_p99_ms > 0:
+            fr.ttft_p99_inflation = (
+                fr.report.ttft_p99_ms / base.report.ttft_p99_ms
+            )
     if timing is not None:
         timing["loop_s"] = timing.get("loop_s", 0.0) + (t_score0 - t_loop0)
         timing["score_s"] = (
             timing.get("score_s", 0.0) + time.perf_counter() - t_score0
         )
-    return trace, fleet.finalize(report, system)
+    return trace, fr
 
 
 def summarize_fleet(fr: FleetReport) -> str:
@@ -796,6 +956,16 @@ def summarize_fleet(fr: FleetReport) -> str:
         lines.append(
             f"autoscaler           : {len(fr.autoscale_events)} actions "
             f"-> {list(fr.autoscale_events)[:6]}"
+        )
+    if fr.replica_failures or fr.fault_retry_accesses or fr.banks_remapped:
+        lines.append(
+            f"fault campaign       : {len(fr.replica_failures)} replica "
+            f"failures, {fr.requeued_requests} requeued, "
+            f"{fr.reprefill_tokens} re-prefilled tokens, "
+            f"{fr.fault_retry_accesses:.0f} write retries, "
+            f"{fr.banks_remapped} bank remaps; goodput "
+            f"{fr.goodput_tps:.0f} tok/s, p99 TTFT x"
+            f"{fr.ttft_p99_inflation:.2f} vs fault-free"
         )
     lines.append(
         f"cost per token       : {fr.cost_per_token:.3e} "

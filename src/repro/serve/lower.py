@@ -52,6 +52,7 @@ import numpy as np
 from repro.core.access_counts import MemoryParams
 from repro.core.memory_system import HybridMemorySystem
 from repro.core.workload import NLPModelSpec
+from repro.faults import FaultConfig, derate_system, fault_model_for
 from repro.sim.engine import SimConfig, SimResult, simulate_trace
 from repro.sim.trace import (
     KIND_DRAM_RD,
@@ -526,6 +527,13 @@ class TechPricer:
     stays one segmented-bincount pass over the whole fleet, and at
     ``n_replicas=1`` every offset is zero, so the single-accelerator event
     stream is bit-identical to before the fleet axis existed.
+
+    ``faults`` (a :class:`repro.faults.FaultConfig`) arms deterministic
+    injection: GLB writes gain seeded write-verify retry accesses and GLB
+    banks struck by transient faults remap for one window — both drawn from
+    the counter RNG keyed on the within-class event index / absolute time
+    window, so the streaming and batched paths inject identically.  ``None``
+    (the default) leaves every operand untouched.
     """
 
     def __init__(
@@ -535,6 +543,7 @@ class TechPricer:
         n_dram_channels: int = 8,
         n_prefetch_channels: int = 4,
         n_replicas: int = 1,
+        faults: FaultConfig | None = None,
     ):
         self.system = system
         self.n_replicas = max(1, int(n_replicas))
@@ -558,6 +567,10 @@ class TechPricer:
         n_kv_lines = model.cfg.n_requests * model.n_layers
         if n_kv_lines:
             self.b.fresh_lines(n_kv_lines)
+        # None when faults are off or the GLB technology has no (or trivial)
+        # reliability block — every injection branch below is then skipped,
+        # keeping the zero-fault event stream bit-identical.
+        self.fm = fault_model_for(system, faults, n_replicas=self.n_replicas)
 
     @classmethod
     def for_tech(
@@ -588,6 +601,8 @@ class TechPricer:
         busy = None
         if blk.glb_rd_hash.size:
             bank = blk.glb_rd_hash % self.nb
+            if self.fm is not None:
+                bank = self.fm.remap_banks(bank, blk.t_ns, blk.replica)
             svc = blk.glb_rd_acc * glb.read_latency_ns
             b.add(blk.t_ns, bank + bank_off if bank_off else bank, svc,
                   blk.glb_rd_acc * glb.read_energy_pj_per_access,
@@ -595,14 +610,18 @@ class TechPricer:
             busy = np.bincount(bank, weights=svc, minlength=self.nb)
         if blk.glb_wr_hash.size:
             bank = blk.glb_wr_hash % self.nb
+            acc = blk.glb_wr_acc
+            if self.fm is not None:
+                bank = self.fm.remap_banks(bank, blk.t_ns, blk.replica)
+                acc = self.fm.write_acc(acc)
             line = blk.glb_wr_line
             fresh = line < 0
             if fresh.any():
                 line = line.copy()
                 line[fresh] = self.b.fresh_lines(int(fresh.sum()))
-            svc = blk.glb_wr_acc * glb.write_latency_ns
+            svc = acc * glb.write_latency_ns
             b.add(blk.t_ns, bank + bank_off if bank_off else bank, svc,
-                  blk.glb_wr_acc * glb.write_energy_pj_per_access,
+                  acc * glb.write_energy_pj_per_access,
                   KIND_GLB_WR, line=line, tag=blk.glb_wr_tag, n=bank.size)
             wr_busy = np.bincount(bank, weights=svc, minlength=self.nb)
             busy = wr_busy if busy is None else busy + wr_busy
@@ -670,7 +689,11 @@ class TechPricer:
         svc_rd = acc_rd = bank_rd = None
         if hash_rd.size:
             acc_rd = np.concatenate([blk.glb_rd_acc for blk in blocks])
-            bank_rd = _offset(hash_rd % nb, n_rd, nb)
+            local_rd = hash_rd % nb
+            if self.fm is not None:
+                local_rd = self.fm.remap_banks(
+                    local_rd, ts.repeat(n_rd), reps.repeat(n_rd))
+            bank_rd = _offset(local_rd, n_rd, nb)
             svc_rd = acc_rd * glb.read_latency_ns
             busy += np.bincount(np.arange(S).repeat(n_rd) * nb_tot + bank_rd,
                                 weights=svc_rd, minlength=S * nb_tot)
@@ -678,7 +701,15 @@ class TechPricer:
         svc_wr = acc_wr = bank_wr = None
         if hash_wr.size:
             acc_wr = np.concatenate([blk.glb_wr_acc for blk in blocks])
-            bank_wr = _offset(hash_wr % nb, n_wr, nb)
+            local_wr = hash_wr % nb
+            if self.fm is not None:
+                # Batched injection must match the streaming path bit-for-bit:
+                # the retry draw is keyed on the within-class event index,
+                # which concatenation in block order preserves (offset 0).
+                local_wr = self.fm.remap_banks(
+                    local_wr, ts.repeat(n_wr), reps.repeat(n_wr))
+                acc_wr = self.fm.write_acc_at(acc_wr, 0)
+            bank_wr = _offset(local_wr, n_wr, nb)
             svc_wr = acc_wr * glb.write_latency_ns
             busy += np.bincount(np.arange(S).repeat(n_wr) * nb_tot + bank_wr,
                                 weights=svc_wr, minlength=S * nb_tot)
@@ -784,6 +815,7 @@ def closed_loop_serving(
     lowering: str = "block",
     timing: dict | None = None,
     recorder=None,
+    faults: FaultConfig | None = None,
 ) -> tuple[Trace, ServeReport]:
     """Run the continuous-batching loop to completion and score the replay.
 
@@ -797,8 +829,16 @@ def closed_loop_serving(
     request lifecycles/counters and the replay's bank timeline for Perfetto
     export; all recorder hooks are read-only, so the returned trace and
     report are bit-identical with the recorder on or off.
+
+    ``faults`` arms deterministic fault injection: the GLB array is derated
+    for ECC/write-verify (expectation level), and the priced event stream
+    gains seeded write-retry accesses and bank-offline remap windows.  The
+    default ``None`` leaves the run bit-identical to a fault-free build.
     """
     t_loop0 = time.perf_counter()
+    if faults is not None:
+        faults.validate()
+        system = derate_system(system, faults)
     rng = np.random.default_rng(cfg.seed)
     arrivals, prompts, decodes = draw_requests(cfg, rng)
     sched = ContinuousBatchScheduler(arrivals, prompts, decodes, engine_cfg)
@@ -809,7 +849,8 @@ def closed_loop_serving(
         emitter = ScalarEmitter(model)
     else:
         raise ValueError(f"unknown lowering {lowering!r}")
-    pricer = TechPricer(system, model, n_dram_channels, n_prefetch_channels)
+    pricer = TechPricer(system, model, n_dram_channels, n_prefetch_channels,
+                        faults=faults)
     stats = RunStats()
 
     def step_time(blocks: StepBlocks) -> float:
@@ -822,10 +863,15 @@ def closed_loop_serving(
         stats.account(blocks, dt)
     t_score0 = time.perf_counter()
 
+    fault_extra = {}
+    if faults is not None:
+        fault_extra = {"faults": faults.to_dict()}
+        if pricer.fm is not None:
+            fault_extra["fault_stats"] = pricer.fm.stats()
     trace = pricer.b.build(
         compute_time_s=0.0,
         meta=serving_run_meta(spec, cfg, engine_cfg, system, model, stats,
-                              lowering),
+                              lowering, **fault_extra),
     )
     sim_config = sim_config or SimConfig(
         coalesce_window_ns=4 * model.interval_ns, kind_stats=False

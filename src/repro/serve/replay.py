@@ -210,13 +210,21 @@ class NeutralRun:
             c += size
         self.line = line
 
-    def price(self, system: HybridMemorySystem) -> TechPricing:
+    def price(self, system: HybridMemorySystem,
+              fault_model=None) -> TechPricing:
         """Price the neutral columns for one memory system + certificate.
 
         Same formulas (and float operation order) as
         ``TechPricer.price_step``/``price_run``: ``bank = hash % n_banks``,
         service/energy scaled by the technology's latency/energy table, DRAM
         channels folded from the bank hash, prefetch channels shared.
+
+        ``fault_model`` (a per-technology :class:`repro.faults.FaultModel`)
+        injects the same seeded write-retry accesses and bank-offline remaps
+        as the exact loop: the counter RNG is keyed on the within-class event
+        index / (bank, time window), both of which this class-major layout
+        preserves, so shared-mode rows are bitwise equal to exact-mode rows
+        whenever the certificate holds.
         """
         glb = system.glb
         nb = max(1, int(glb.banks))
@@ -228,9 +236,18 @@ class NeutralRun:
         e_dram_pj = dram.energy_pj_per_access()
 
         bank_rd = self.hash_rd % nb
-        svc_rd = self.acc_rd * glb.read_latency_ns
         bank_wr = self.hash_wr % nb
-        svc_wr = self.acc_wr * glb.write_latency_ns
+        acc_wr = self.acc_wr
+        if fault_model is not None:
+            rep_rd = self.rep_rd if self._fleet else 0
+            rep_wr = self.rep_wr if self._fleet else 0
+            bank_rd = fault_model.remap_banks(
+                bank_rd, self.t_issue[self.sl["glb_rd"]], rep_rd)
+            bank_wr = fault_model.remap_banks(
+                bank_wr, self.t_issue[self.sl["glb_wr"]], rep_wr)
+            acc_wr = fault_model.write_acc_at(acc_wr, 0)
+        svc_rd = self.acc_rd * glb.read_latency_ns
+        svc_wr = acc_wr * glb.write_latency_ns
         if self._fleet:
             bank_rd = bank_rd + self.rep_rd * nb
             bank_wr = bank_wr + self.rep_wr * nb
@@ -260,7 +277,7 @@ class NeutralRun:
         sl = self.sl["glb_wr"]
         res[sl] = bank_wr
         svc[sl] = svc_wr
-        en[sl] = self.acc_wr * glb.write_energy_pj_per_access
+        en[sl] = acc_wr * glb.write_energy_pj_per_access
         for name, hashes, acc, rep in (
             ("dram_rd", self.hash_dr, self.acc_dr, "rep_dr"),
             ("dram_wr", self.hash_dw, self.acc_dw, "rep_dw"),

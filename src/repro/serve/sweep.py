@@ -51,6 +51,7 @@ import time
 import numpy as np
 
 from repro.core.workload import NLP_TABLE_V, NLPModelSpec
+from repro.faults import FaultConfig, derate_system, fault_model_for
 from repro.sim.engine import SimConfig, resolve_backend
 from repro.sim.trace import ServingConfig, arrivals_at_qps, draw_request_shape
 from repro.spec import build_system, tech_group
@@ -83,6 +84,11 @@ class ServingGridSpec:
     # (1 replica, knobs off) routes through the original single-accelerator
     # shared path bit-identically.
     fleet: FleetConfig = FleetConfig()
+    # Fault axis: a FaultConfig makes every row *iso-reliability* — each
+    # technology is priced on its reliability-derated twin (MRAM pays
+    # ECC/write-verify, trivial-reliability SRAM pays nothing) with seeded
+    # write-retry/bank-offline injection; None reproduces today's rows.
+    faults: FaultConfig | None = None
 
     @classmethod
     def from_scenario(cls, scenario) -> "ServingGridSpec":
@@ -96,6 +102,7 @@ class ServingGridSpec:
             serving=scenario.serving_config(),
             engine=scenario.engine_config(),
             fleet=scenario.fleet_config(),
+            faults=scenario.fault_config(),
         )
 
     def resolve_model(self) -> NLPModelSpec:
@@ -230,6 +237,7 @@ def sweep_serving_grid(
                         lowering=lowering,
                         timing=timing,
                         recorder=rec,
+                        faults=spec.faults,
                     )
                     rec = None
                     rows.append(SweepRow(tech, cap, qps, False, rep))
@@ -255,8 +263,19 @@ def sweep_serving_grid(
             # shared schedule — the pricing certificate checks every step.
             run = NeutralRun(blocks_list, dts, model,
                              n_dram_channels, n_prefetch_channels)
-            pricings = [run.price(build_system(tech, cap))
-                        for tech in spec.technologies]
+            # Iso-reliability pricing: each technology prices its derated
+            # twin with its own fault model (a fresh model per tech — the
+            # retry stream restarts at offset 0 exactly as the exact loop's
+            # does), so certified shared rows stay bitwise equal to exact.
+            tech_systems = [
+                derate_system(build_system(tech, cap), spec.faults)
+                for tech in spec.technologies
+            ]
+            pricings = [
+                run.price(system,
+                          fault_model_for(system, spec.faults))
+                for system in tech_systems
+            ]
             timing["loop_s"] += time.perf_counter() - t0
             sim_config = SimConfig(
                 coalesce_window_ns=4 * model.interval_ns, backend=backend,
@@ -297,14 +316,17 @@ def sweep_serving_grid(
                     # steps: replay its own closed loop (still
                     # block-lowered).  The shared loop already recorded this
                     # grid point's lifecycles, so the fallback only taps the
-                    # replay.
+                    # replay.  The closed loop derates the base system
+                    # itself, so it gets the registry build, not the
+                    # already-derated pricing system.
                     _, rep = closed_loop_serving(
-                        pricing.system, nlp, cfg, spec.engine,
+                        build_system(tech, cap), nlp, cfg, spec.engine,
                         sim_config=sim_config,
                         n_dram_channels=n_dram_channels,
                         n_prefetch_channels=n_prefetch_channels,
                         lowering=lowering,
                         timing=timing,
+                        faults=spec.faults,
                     )
                     rows.append(SweepRow(tech, cap, qps, False, rep))
             rec = None
@@ -357,6 +379,10 @@ def _fleet_grid_point(
     byte totals) may differ in the last ulp between the certified-shared row
     and a hand-run exact fleet.
     """
+    # Sweep rows never pay the fault-free baseline rerun (the grid itself
+    # carries the fault-free comparison point: run it with faults=None).
+    faults = (dataclasses.replace(spec.faults, baseline_inflation=False)
+              if spec.faults is not None else None)
     if mode == "exact":
         out = []
         for tech in spec.technologies:
@@ -369,19 +395,23 @@ def _fleet_grid_point(
                 n_dram_channels=n_dram_channels,
                 n_prefetch_channels=n_prefetch_channels,
                 lowering=lowering, timing=timing, recorder=rec,
+                faults=faults,
             )
             rec = None
             out.append(SweepRow(tech, cap, qps, False, fr.report, fleet=fr))
         return out
 
-    # One fleet loop under the technology-invariant clock.
+    # One fleet loop under the technology-invariant clock (replica failures
+    # strike at schedule-independent absolute times, so the shared
+    # interleaving carries the same outage/requeue sequence as the exact
+    # fleet whenever the certificate holds).
     t0 = time.perf_counter()
     arrivals = arrivals_at_qps(interarrival_std, qps)
     ref_system = build_system(spec.technologies[0], cap)
     dram = ref_system.dram  # shared by every technology on the grid
     t_dram_acc_ns = dram.access_bytes / (dram.bandwidth_gb_s * 1e9) * 1e9
     fleet = Fleet(ref_system, nlp, cfg, spec.engine, spec.fleet,
-                  lowering=lowering, recorder=rec)
+                  lowering=lowering, recorder=rec, faults=faults)
 
     def shared_dt(replica, blocks):
         decode_ns = replica.model.interval_ns if blocks.has_decode else 0.0
@@ -399,8 +429,12 @@ def _fleet_grid_point(
     run = NeutralRun(fleet.blocks_list, fleet.dts_array, model0,
                      n_dram_channels, n_prefetch_channels,
                      n_replicas=fleet.capacity)
-    pricings = [run.price(build_system(tech, cap))
-                for tech in spec.technologies]
+    tech_systems = [derate_system(build_system(tech, cap), faults)
+                    for tech in spec.technologies]
+    fms = [fault_model_for(system, faults, n_replicas=fleet.capacity)
+           for system in tech_systems]
+    pricings = [run.price(system, fm)
+                for system, fm in zip(tech_systems, fms)]
     timing["loop_s"] += time.perf_counter() - t0
     sim_config = SimConfig(
         coalesce_window_ns=4 * model0.interval_ns, backend=backend,
@@ -431,8 +465,12 @@ def _fleet_grid_point(
             pages_spilled=fleet.pages_spilled(),
             pages_allocated=fleet.pages_allocated(),
         )
+        fm_by_tech = dict(zip(spec.technologies, fms))
         shared_fleet = {
-            tech: fleet.finalize(rep, p.system)
+            tech: fleet.finalize(
+                rep, p.system,
+                fault_stats=(fm_by_tech[tech].stats()
+                             if fm_by_tech[tech] is not None else None))
             for (tech, p), rep in zip(certified, reports)
         }
     timing["score_s"] += time.perf_counter() - t0
@@ -444,13 +482,15 @@ def _fleet_grid_point(
             out.append(SweepRow(tech, cap, qps, True, fr.report, fleet=fr))
         else:
             # Congestion would have re-interleaved this technology's fleet:
-            # run its own exact fleet loop.
+            # run its own exact fleet loop (off the registry build — the
+            # exact loop derates the base system itself).
             _, fr = fleet_serving(
-                pricing.system, nlp, cfg, spec.engine, spec.fleet,
+                build_system(tech, cap), nlp, cfg, spec.engine, spec.fleet,
                 sim_config=sim_config,
                 n_dram_channels=n_dram_channels,
                 n_prefetch_channels=n_prefetch_channels,
                 lowering=lowering, timing=timing,
+                faults=faults,
             )
             out.append(SweepRow(tech, cap, qps, False, fr.report, fleet=fr))
     return out

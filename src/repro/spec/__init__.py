@@ -15,6 +15,7 @@ seed array models bit-identically; ``stt`` (companion STT-MRAM paper) and
 is pure data.  See docs/spec.md.
 """
 
+from repro.faults.reliability import ReliabilitySpec  # noqa: F401
 from repro.spec.builtin import (  # noqa: F401
     BASELINE_TECH,
     DEFAULT_CAPACITY_GRID_MB,
@@ -39,6 +40,7 @@ __all__ = [
     "BASELINE_TECH",
     "DEFAULT_CAPACITY_GRID_MB",
     "MemTechSpec",
+    "ReliabilitySpec",
     "Scenario",
     "UnknownTechnologyError",
     "build_system",

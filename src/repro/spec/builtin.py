@@ -34,6 +34,7 @@ spelled out — every other layer asks the registry.
 from __future__ import annotations
 
 from repro.core import memory_system as _ms
+from repro.faults.reliability import ReliabilitySpec
 from repro.spec.tech import MemTechSpec, register_group, register_tech
 
 #: The reference technology every improvement ratio is computed against.
@@ -54,6 +55,9 @@ SRAM = register_tech(MemTechSpec(
     t0_write_ns=_ms._SRAM_T0_NS,
     tg_write_ns=_ms._SRAM_TG_NS,
     bank_mb=4.0,  # 4 MB SRAM macro banks (14 nm compiler granularity)
+    # Deterministic CMOS storage: no stochastic write path, no ECC burden —
+    # the reference every iso-reliability comparison measures MRAM against.
+    reliability=ReliabilitySpec(),
     tags=("paper", "baseline"),
     description="14 nm 6T SRAM GLB (paper baseline)",
 ))
@@ -70,6 +74,14 @@ SOT = register_tech(MemTechSpec(
     t0_write_ns=_ms._SOT_T0_WR_NS,
     tg_write_ns=_ms._SOT_TG_WR_NS,
     bank_mb=2.0,
+    # Conservative (high write-current) SOT cell: thermally comfortable
+    # switching -> low WER; SECDED covers the residue.
+    reliability=ReliabilitySpec(
+        write_error_rate=1e-4,
+        read_disturb_rate=1e-6,
+        bank_fault_rate_hz=2e-6,
+        ecc="secded",
+    ),
     tags=("paper",),
     description="2T1SOT SOT-MRAM GLB (pre-DTCO, Table VII anchors)",
 ))
@@ -86,6 +98,14 @@ SOT_OPT = register_tech(MemTechSpec(
     t0_write_ns=_ms._SOT_OPT_T0_WR_NS,
     tg_write_ns=_ms._SOT_OPT_TG_WR_NS,
     bank_mb=1.0,  # DTCO individually optimizes smaller banks
+    # DTCO trades write current for energy: the reduced switching margin
+    # raises the stochastic write-error rate ~5x over the conservative cell.
+    reliability=ReliabilitySpec(
+        write_error_rate=5e-4,
+        read_disturb_rate=2e-6,
+        bank_fault_rate_hz=2e-6,
+        ecc="secded",
+    ),
     tags=("paper",),
     description="DTCO-optimized SOT-MRAM GLB (250/520 ps cell, Fig. 19 area)",
 ))
@@ -112,6 +132,14 @@ STT = register_tech(MemTechSpec(
     t0_write_ns=4.80,
     tg_write_ns=0.160,
     bank_mb=2.0,
+    # Shared read/write MTJ path: the worst WER and read-disturb of the
+    # family (2021 companion-paper reliability analysis) -> DECTED.
+    reliability=ReliabilitySpec(
+        write_error_rate=1e-3,
+        read_disturb_rate=5e-6,
+        bank_fault_rate_hz=2e-6,
+        ecc="dected",
+    ),
     tags=("extension", "mram"),
     description="STT-MRAM GLB (Mishty & Sadi 2021 companion-paper anchors)",
 ))
@@ -119,6 +147,14 @@ STT = register_tech(MemTechSpec(
 HYBRID = register_tech(MemTechSpec(
     name="hybrid",
     components=(("sram", 0.25), ("sot_opt", 0.75)),
+    # Only the 3/4 SOT partition has a stochastic write path; rates are the
+    # capacity-fraction composite of the constituents (SRAM contributes 0).
+    reliability=ReliabilitySpec(
+        write_error_rate=3.75e-4,
+        read_disturb_rate=1.5e-6,
+        bank_fault_rate_hz=1.5e-6,
+        ecc="secded",
+    ),
     tags=("extension",),
     description="Section V-E hybrid GLB: 1/4 SRAM (hot lines) + 3/4 DTCO-opt SOT",
 ))

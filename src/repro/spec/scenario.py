@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 
 from repro.spec.builtin import BASELINE_TECH, DEFAULT_CAPACITY_GRID_MB
 from repro.spec.tech import get_tech, tech_group
@@ -57,6 +58,11 @@ class Scenario:
     # every pre-fleet scenario JSON deserializes to — means a 1-replica
     # fleet, which is bit-identical to the single-accelerator closed loop.
     fleet: dict | None = None
+    # Optional fault-campaign block (serving only): a plain dict matching
+    # ``repro.faults.FaultConfig`` fields (seed, rate scales, bank window,
+    # replica MTBF / pinned failure times, requeue backoff).  ``None`` — the
+    # default — runs fault-free, bit-identical to every pre-fault scenario.
+    faults: dict | None = None
 
     # -- validation / resolution -------------------------------------------
 
@@ -73,6 +79,34 @@ class Scenario:
             raise ValueError("scenario needs at least one GLB capacity")
         if not self.qps:
             raise ValueError("scenario needs at least one QPS point")
+        # Numeric sanity: NaN/inf/negative grid values would silently hang
+        # the closed loop or produce nonsense rows — name the bad field.
+        for field in ("qps", "capacities_mb"):
+            for v in getattr(self, field):
+                if not math.isfinite(v) or v <= 0:
+                    raise ValueError(
+                        f"scenario field {field!r} must contain finite "
+                        f"positive values; got {v!r}"
+                    )
+        for field in ("slo_ttft_p99_ms", "slo_tpot_p99_ms"):
+            v = getattr(self, field)
+            if not math.isfinite(v) or v <= 0:
+                raise ValueError(
+                    f"scenario field {field!r} must be finite and positive; "
+                    f"got {v!r}"
+                )
+        for field in ("n_requests", "prompt_len", "decode_len", "d_w"):
+            if getattr(self, field) <= 0:
+                raise ValueError(
+                    f"scenario field {field!r} must be positive; "
+                    f"got {getattr(self, field)!r}"
+                )
+        for v in self.batches:
+            if v <= 0:
+                raise ValueError(
+                    f"scenario field 'batches' must contain positive values; "
+                    f"got {v!r}"
+                )
         techs = self.resolve_technologies()  # raises UnknownTechnologyError
         get_tech(self.baseline)  # unknown baseline -> suggestion error
         if self.mode != "serving" and self.baseline not in techs:
@@ -94,6 +128,13 @@ class Scenario:
                     f"mode is {self.mode!r}"
                 )
             self.fleet_config()  # raises on unknown fields / bad knobs
+        if self.faults is not None:
+            if self.mode != "serving":
+                raise ValueError(
+                    "the 'faults' block only applies to serving scenarios; "
+                    f"mode is {self.mode!r}"
+                )
+            self.fault_config()  # raises on unknown fields / bad rates
         return self
 
     def resolve_technologies(self) -> tuple[str, ...]:
@@ -143,6 +184,15 @@ class Scenario:
         if self.fleet is None:
             return FleetConfig()
         return FleetConfig.from_dict(self.fleet)
+
+    def fault_config(self):
+        """The ``repro.faults.FaultConfig`` this scenario describes, or
+        ``None`` (fault-free, the bit-identical default)."""
+        from repro.faults import FaultConfig
+
+        if self.faults is None:
+            return None
+        return FaultConfig.from_dict(self.faults)
 
     def smoke(self) -> "Scenario":
         """A shrunk copy for CI smoke runs: one workload/batch/QPS point,

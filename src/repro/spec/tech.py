@@ -27,6 +27,7 @@ import difflib
 
 from repro.core.dtco import SOTDevice
 from repro.core.memory_system import MB, ArrayPPA, _sqrt_scale, device_array_terms
+from repro.faults.reliability import ReliabilitySpec
 
 
 class UnknownTechnologyError(ValueError, KeyError):
@@ -78,6 +79,9 @@ class MemTechSpec:
     device: SOTDevice | None = None
     # Composite: ((tech_name, capacity_fraction), ...) summing to 1.
     components: tuple[tuple[str, float], ...] = ()
+    # Reliability block (error rates + ECC scheme); None == no data, which
+    # the fault layer treats like an ideal (inject-nothing) technology.
+    reliability: ReliabilitySpec | None = None
     tags: tuple[str, ...] = ()
     description: str = ""
 
@@ -168,6 +172,10 @@ class MemTechSpec:
                 dataclasses.asdict(self.device) if self.device is not None else None
             ),
             "components": [[n, f] for n, f in self.components],
+            "reliability": (
+                self.reliability.to_dict()
+                if self.reliability is not None else None
+            ),
             "tags": list(self.tags),
             "description": self.description,
         }
@@ -196,6 +204,10 @@ class MemTechSpec:
             dev = SOTDevice(**dev)
         d["device"] = dev
         d["components"] = tuple((str(n), float(f)) for n, f in d.get("components", ()))
+        rel = d.get("reliability")
+        if rel is not None and not isinstance(rel, ReliabilitySpec):
+            rel = ReliabilitySpec.from_dict(rel)
+        d["reliability"] = rel
         d["tags"] = tuple(d.get("tags", ()))
         return cls(**d)
 
@@ -227,6 +239,8 @@ def register_tech(spec: MemTechSpec, overwrite: bool = False) -> MemTechSpec:
 def _validate(spec: MemTechSpec) -> None:
     if not spec.name or not spec.name.strip() or " " in spec.name:
         raise ValueError(f"invalid technology name {spec.name!r}")
+    if spec.reliability is not None:
+        spec.reliability.validate(owner=spec.name)
     if spec.is_composite:
         fracs = [f for _, f in spec.components]
         if any(f <= 0 for f in fracs) or abs(sum(fracs) - 1.0) > 1e-9:

@@ -111,6 +111,61 @@ def test_engine_config_validation():
         ServeEngineConfig(page_tokens=0)
 
 
+def test_scheduler_zero_token_generation_terminates():
+    # decode=0 requests must still finish (one decode pass stamps the
+    # first-token/finish clocks) rather than parking in the batch forever.
+    s = _sched([0.0, 0.0], [8, 8], [0, 4], max_batch=4)
+    t = 0.0
+    for _ in range(20):
+        if s.done:
+            break
+        s.commit_step(s.plan_step(t), t + 1.0)
+        t += 1.0
+    assert s.done
+    by_rid = {r.rid: r for r in s.finished}
+    assert set(by_rid) == {0, 1}
+    assert not np.isnan(by_rid[0].finish_ns)
+    assert by_rid[0].finish_ns <= by_rid[1].finish_ns
+
+
+def test_allocator_admit_at_exactly_full_glb():
+    # Filling the GLB to exactly its page capacity spills nothing; the very
+    # next page triggers exactly one LRU eviction.
+    a = PagedKVAllocator(glb_bytes=4 * 100.0, page_bytes=100.0, n_banks=8)
+    a.ensure(0, n_tokens=4 * 16, page_tokens=16)  # exactly capacity
+    assert a.resident_pages == 4 and a.spill_count == 0
+    assert a.residency() == 1.0
+    a.ensure(1, n_tokens=16, page_tokens=16)  # one past capacity
+    assert a.resident_pages == 4 and a.spill_count == 1
+
+
+def test_scheduler_evict_then_readmit_same_rid():
+    # The fleet requeues a failed replica's requests as fresh RequestState
+    # objects reusing the original rid; the scheduler and allocator must
+    # treat the readmitted request as brand new.
+    from repro.serve.scheduler import RequestState
+
+    s = _sched([0.0], [4], [2], max_batch=4)
+    t = 0.0
+    while not s.done:
+        s.commit_step(s.plan_step(t), t + 1.0)
+        t += 1.0
+    assert [r.rid for r in s.finished] == [0]
+    s.add_request(RequestState(rid=0, arrival_ns=t, prompt=4, decode=2))
+    assert not s.done
+    while not s.done:
+        s.commit_step(s.plan_step(t), t + 1.0)
+        t += 1.0
+    assert [r.rid for r in s.finished] == [0, 0]
+    assert s.finished[1].finish_ns > s.finished[0].finish_ns
+
+    a = PagedKVAllocator(glb_bytes=4 * 100.0, page_bytes=100.0, n_banks=8)
+    a.ensure(0, 32, 16)
+    assert a.free(0) == 2
+    a.ensure(0, 16, 16)  # readmitted rid starts from an empty page run
+    assert a.total_pages == 1 and list(a.residency_of(0)) == [True]
+
+
 # ---------------------------------------------------------------------------
 # Paged KV allocator
 # ---------------------------------------------------------------------------
