@@ -26,6 +26,12 @@ Compares a fresh benchmark record against the committed baseline:
   (``fleet_identity``), every technology in the baseline's fleet grid must
   still be covered with a positive ``cost_per_token``, all requests must
   complete, and the fleet wall must stay within ``max_regression``;
+* **geometry gate** (``--geom-current``/``--geom-baseline``): the
+  geometry-derived ``MemTechSpec`` coefficients must keep matching the
+  pinned anchors within the documented calibration tolerance
+  (``calibration_max_rel_err``), pinned no-geometry designs must stay
+  bit-identical to the fixed grid, numpy/jax geometry grids must agree to
+  1e-9 rtol, and the sweep wall must stay within ``max_regression``;
 
 * **technology coverage**: every technology registered in ``repro.spec``
   must appear in the baseline's ``tech_coverage`` block — either in
@@ -171,6 +177,47 @@ def check_fleet(current: dict, baseline: dict,
     return problems
 
 
+def check_geom(current: dict, baseline: dict,
+               max_regression: float) -> list[str]:
+    """Gate BENCH_geom.json against its committed baseline."""
+    problems = []
+    cur = current.get("benchmarks", {}).get("geom_sweep")
+    base = baseline.get("benchmarks", {}).get("geom_sweep")
+    if cur is None:
+        return ["geom_sweep: missing from current record"]
+    if base is None:
+        return ["geom_sweep: missing from baseline record"]
+    b_us, c_us = base.get("us_per_call"), cur.get("us_per_call")
+    if b_us and c_us and c_us > max_regression * b_us:
+        problems.append(
+            f"geom_sweep: wall-clock {c_us / 1e6:.2f}s vs baseline "
+            f"{b_us / 1e6:.2f}s (> {max_regression:.1f}x regression)"
+        )
+    err, tol = cur.get("calibration_max_rel_err"), cur.get("calibration_tol")
+    if err is None or tol is None or err > tol:
+        problems.append(
+            f"geom_sweep: geometry-derived coefficients drifted from the "
+            f"pinned anchors (max rel err {err!r} > tol {tol!r})"
+        )
+    if not cur.get("pinned_identical", False):
+        problems.append(
+            "geom_sweep: a pinned (no-geometry) design is no longer "
+            "bit-identical to the fixed-coefficient grid"
+        )
+    if not cur.get("backends_equivalent", False):
+        problems.append(
+            "geom_sweep: numpy and jax geometry grids diverged beyond "
+            "the 1e-9 rtol contract"
+        )
+    missing = set(base.get("techs", ())) - set(cur.get("techs", ()))
+    if missing:
+        problems.append(
+            f"geom_sweep: technologies {sorted(missing)} covered by the "
+            "baseline are missing from the current record"
+        )
+    return problems
+
+
 def manifest_warnings(current: dict, baseline: dict) -> list[str]:
     """Human-readable warnings for manifest drift (never failures)."""
     try:
@@ -220,6 +267,10 @@ def main(argv=None) -> int:
                     help="freshly produced BENCH_fleet.json")
     ap.add_argument("--fleet-baseline", default=None,
                     help="committed fleet baseline json")
+    ap.add_argument("--geom-current", default=None,
+                    help="freshly produced BENCH_geom.json")
+    ap.add_argument("--geom-baseline", default=None,
+                    help="committed geometry-sweep baseline json")
     args = ap.parse_args(argv)
 
     with open(args.current) as fh:
@@ -258,6 +309,21 @@ def main(argv=None) -> int:
             print(f"BENCH WARNING: {w}", file=sys.stderr)
         problems.extend(
             check_fleet(fleet_cur, fleet_base, args.max_regression)
+        )
+    if bool(args.geom_current) != bool(args.geom_baseline):
+        problems.append(
+            "geom_sweep: --geom-current and --geom-baseline must be "
+            "passed together"
+        )
+    elif args.geom_current:
+        with open(args.geom_current) as fh:
+            geom_cur = json.load(fh)
+        with open(args.geom_baseline) as fh:
+            geom_base = json.load(fh)
+        for w in manifest_warnings(geom_cur, geom_base):
+            print(f"BENCH WARNING: {w}", file=sys.stderr)
+        problems.extend(
+            check_geom(geom_cur, geom_base, args.max_regression)
         )
     for p in problems:
         print(f"BENCH REGRESSION: {p}", file=sys.stderr)

@@ -1,0 +1,141 @@
+"""Geometry DSE benchmark: capacity x bank-organization co-optimization.
+
+Drives ``repro.dse.evaluate_geometry_grid`` over the full default
+organization axes and records the facts CI gates on in BENCH_geom.json:
+
+* ``calibration_max_rel_err`` — the geometry-derived coefficients of every
+  builtin technology must keep matching the pinned seed anchors within
+  ``repro.geom.fit.CALIBRATION_TOL`` (the subsystem's conservation law:
+  re-deriving the anchors from geometry must not drift).
+* ``pinned_identical`` — a technology without a geometry model (the
+  ``hybrid`` composite) evaluated through the geometry grid must stay
+  **bit-identical** to the fixed-coefficient grid: the organization axis
+  must be free when it is not used.
+* ``backends_equivalent`` — numpy and jax grids agree to the same 1e-9
+  rtol contract the fixed grid is held to (trivially true when jax is
+  absent; the flag records which case ran).
+* wall-clock for the full sweep, tracked across PRs against the committed
+  baseline by ``benchmarks/check_bench.py --geom-current/--geom-baseline``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.workload import cv_model_zoo
+from repro.dse import GeomAxes, GridSpec, evaluate_geometry_grid, HAVE_JAX
+from repro.dse import evaluate_workload_grid
+from repro.geom import CALIBRATION_TOL, max_calibration_error
+
+TECHS = ("sram", "sot", "sot_opt", "stt", "hybrid")
+CALIBRATED = ("sram", "sot", "sot_opt", "stt")
+# No RNG anywhere in the analytic geometry sweep; the stamped seed records
+# that fact (organization choice is deterministic).
+SEED = 0
+AXES = GeomAxes()  # the default 3 x 3 x 3 organization axes
+METRIC_FIELDS = ("energy_j", "latency_s", "runtime_s", "dram_energy_j",
+                 "glb_energy_j", "leakage_energy_j", "compute_time_s")
+
+
+def _spec(smoke: bool) -> GridSpec:
+    return GridSpec(
+        capacities_mb=(8.0, 16.0, 32.0, 64.0) if smoke
+        else (2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0),
+        technologies=TECHS,
+        batches=(16,),
+        modes=("inference",) if smoke else ("inference", "training"),
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    zoo = cv_model_zoo()
+    wl = zoo["resnet18"] if smoke else zoo["resnet50"]
+    spec = _spec(smoke)
+
+    t0 = time.perf_counter()
+    grid = evaluate_geometry_grid(wl, spec, axes=AXES, backend="numpy")
+    numpy_wall_s = time.perf_counter() - t0
+
+    # Conservation law 1: the pinned (no-geometry) design rides the
+    # geometry grid bitwise equal to the fixed-coefficient grid.
+    fixed = evaluate_workload_grid(
+        wl, GridSpec(capacities_mb=spec.capacities_mb,
+                     technologies=("hybrid",), batches=spec.batches,
+                     modes=spec.modes),
+        backend="numpy",
+    )
+    pinned = next(
+        i for i, d in enumerate(grid.designs)
+        if d.technology == "hybrid" and d.geometry is None
+    )
+    pinned_identical = all(
+        np.array_equal(
+            np.asarray(getattr(grid.metrics, f))[:, pinned],
+            np.asarray(getattr(fixed.metrics, f))[:, 0],
+        )
+        for f in METRIC_FIELDS
+    )
+
+    # Conservation law 2: numpy and jax agree to the fixed grid's contract.
+    jax_wall_s = None
+    backends_equivalent = True
+    if HAVE_JAX:
+        t0 = time.perf_counter()
+        jgrid = evaluate_geometry_grid(wl, spec, axes=AXES, backend="jax")
+        jax_wall_s = time.perf_counter() - t0
+        for f in ("energy_j", "latency_s", "runtime_s"):
+            a = np.asarray(getattr(grid.metrics, f))
+            b = np.asarray(getattr(jgrid.metrics, f))
+            if not np.allclose(a, b, rtol=1e-9, atol=0.0):
+                backends_equivalent = False
+
+    # Conservation law 3: geometry still reproduces the pinned anchors.
+    cal_err = max_calibration_error(CALIBRATED)
+
+    mode, batch = spec.modes[0], spec.batches[0]
+    rows = []
+    for entry in grid.org_table(mode, batch):
+        org = entry["org"] or {}
+        rows.append({
+            "workload": wl.name,
+            "mode": mode,
+            "technology": entry["technology"],
+            "capacity_mb": entry["capacity_mb"],
+            "rows": org.get("rows", ""),
+            "mux": org.get("mux", ""),
+            "bank_mb": org.get("bank_mb", ""),
+            "energy_j": entry["energy_j"],
+            "latency_s": entry["latency_s"],
+            "area_mm2": entry["area_mm2"],
+            "n_designs": len(grid.designs),
+            "n_infeasible": grid.n_infeasible,
+            "calibration_max_rel_err": cal_err,
+            "calibration_tol": CALIBRATION_TOL,
+            "pinned_identical": pinned_identical,
+            "backends_equivalent": backends_equivalent,
+            "have_jax": HAVE_JAX,
+            "numpy_wall_s": round(numpy_wall_s, 4),
+            "jax_wall_s": round(jax_wall_s, 4) if jax_wall_s else None,
+        })
+    return rows
+
+
+def bench_payload(rows: list[dict], us_per_call: float) -> dict:
+    """BENCH_geom.json entry: wall-clock + the gated invariants."""
+    first = rows[0] if rows else {}
+    return {
+        "us_per_call": round(us_per_call, 1),
+        "calibration_max_rel_err": first.get("calibration_max_rel_err"),
+        "calibration_tol": first.get("calibration_tol"),
+        "pinned_identical": first.get("pinned_identical"),
+        "backends_equivalent": first.get("backends_equivalent"),
+        "have_jax": first.get("have_jax"),
+        "n_designs": first.get("n_designs"),
+        "n_infeasible": first.get("n_infeasible"),
+        "techs": sorted({r["technology"] for r in rows}),
+        "numpy_wall_s": first.get("numpy_wall_s"),
+        "jax_wall_s": first.get("jax_wall_s"),
+        "rows": rows,
+    }

@@ -47,6 +47,7 @@ from benchmarks import (
     fig18_system_ppa,
     fig19_area,
     fleet_qps,
+    geom_sweep,
     replay_bench,
     roofline,
     serving_qps,
@@ -56,7 +57,8 @@ from benchmarks import (
 from benchmarks.common import rows_to_csv, timed
 
 # Benchmarks whose run() accepts a ``smoke`` flag.
-SMOKE_AWARE = {"sim_vs_analytic", "explore", "serving_qps", "replay", "fleet"}
+SMOKE_AWARE = {"sim_vs_analytic", "explore", "serving_qps", "replay", "fleet",
+               "geom_sweep"}
 
 
 def _derive(name: str, rows: list[dict]) -> str:
@@ -128,6 +130,15 @@ def _derive(name: str, rows: list[dict]) -> str:
                 f"techs={len(rows)},worst_ttft_p99_ms={worst},"
                 f"fleet_identity={ident}"
             )
+        if name == "geom_sweep":
+            r0 = rows[0]
+            return (
+                f"designs={r0['n_designs']},infeasible={r0['n_infeasible']},"
+                f"cal_err={r0['calibration_max_rel_err']:.2e}"
+                f"(tol:{r0['calibration_tol']}),"
+                f"pinned_identical={r0['pinned_identical']},"
+                f"backends_equivalent={r0['backends_equivalent']}"
+            )
         if name == "roofline":
             if "note" in rows[0]:
                 return rows[0]["note"]
@@ -161,6 +172,7 @@ BENCHMARKS = [
     ("serving_qps", serving_qps.run),
     ("replay", replay_bench.run),
     ("fleet", fleet_qps.run),
+    ("geom_sweep", geom_sweep.run),
 ]
 
 
@@ -182,6 +194,10 @@ def main() -> None:
                     help="write the fleet benchmark's own stamped record "
                          "here ('' to skip; requires the fleet benchmark "
                          "to be selected)")
+    ap.add_argument("--geom-json", default="BENCH_geom.json",
+                    help="write the geometry-sweep benchmark's own stamped "
+                         "record here ('' to skip; requires the geom_sweep "
+                         "benchmark to be selected)")
     obs.add_output_args(ap)
     args = ap.parse_args()
     obs.enable()
@@ -241,6 +257,8 @@ def main() -> None:
             bench_entries[name] = replay_bench.bench_payload(rows, us)
         elif name == "fleet":
             bench_entries[name] = fleet_qps.bench_payload(rows, us)
+        elif name == "geom_sweep":
+            bench_entries[name] = geom_sweep.bench_payload(rows, us)
         else:
             bench_entries[name] = {"us_per_call": round(us, 1)}
     payload = {
@@ -288,6 +306,20 @@ def main() -> None:
         with open(args.fleet_json, "w") as fh:
             json.dump(fleet_payload, fh, indent=2, default=obs.json_default)
         con.info(f"# wrote {args.fleet_json}")
+    if args.geom_json and "geom_sweep" in bench_entries:
+        geom_payload = {
+            "schema": 1,
+            "created_unix": int(time.time()),
+            "smoke": args.smoke,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "benchmarks": {"geom_sweep": bench_entries["geom_sweep"]},
+        }
+        obs.stamp(geom_payload, seed=geom_sweep.SEED,
+                  config={"smoke": args.smoke, "axes": geom_sweep.AXES})
+        with open(args.geom_json, "w") as fh:
+            json.dump(geom_payload, fh, indent=2, default=obs.json_default)
+        con.info(f"# wrote {args.geom_json}")
     con.result(payload)
     if args.full:
         for name, rows in details:

@@ -33,6 +33,13 @@ from repro.dse.grid import (  # noqa: F401
     evaluate_workload_grid,
     metrics_grid,
 )
+from repro.dse.geomgrid import (  # noqa: F401
+    DesignPoint,
+    GeomAxes,
+    GeomGridResult,
+    base_geometry,
+    evaluate_geometry_grid,
+)
 from repro.dse.pareto import (  # noqa: F401
     dominates,
     knee_index,
@@ -51,8 +58,13 @@ __all__ = [
     "CountGrid",
     "DEFAULT_CAPACITIES_MB",
     "DEFAULT_TECHNOLOGIES",
+    "DesignPoint",
+    "GeomAxes",
+    "GeomGridResult",
     "GridResult",
     "GridSpec",
+    "base_geometry",
+    "evaluate_geometry_grid",
     "HAVE_JAX",
     "MetricsGrid",
     "PPAGrid",

@@ -1,0 +1,458 @@
+"""Capacity x bank-organization co-optimization: the geometry DSE axes.
+
+``evaluate_geometry_grid`` expands every technology of a :class:`GridSpec`
+into bank-organization *design points* — the ``rows x column-mux x bank_mb``
+variants of its geometry given by :class:`GeomAxes` — derives each design's
+``MemTechSpec`` coefficient set with the analytical model
+(:mod:`repro.geom`), and evaluates the whole ``mode x design x batch x
+capacity`` grid through the same ``_eval_arrays`` program the
+fixed-coefficient grid uses.  The knee search then co-optimizes capacity
+*and* organization, and every reported point carries the organization that
+won it.
+
+Two implementation invariants:
+
+* Coefficients are derived **with numpy, outside the backend trace** (the
+  org axes are a struct-of-arrays program per technology), then fed to the
+  shared evaluator as plain inputs — so the numpy and jax backends stay
+  bit-compatible exactly like the fixed grid.
+* Technologies without a geometry (no ``spec.geometry`` block and no
+  builtin calibration point — e.g. the ``hybrid`` composite) ride along as
+  a single *pinned* design built from their registered coefficients, so
+  mixed grids keep working; infeasible organizations (a subarray larger
+  than its bank, out-of-range axes) are dropped and **counted**, never
+  silently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.access_counts import AccessCounts, MemoryParams
+from repro.core.bandwidth import ArrayConfig
+from repro.core.evaluate import SystemMetrics
+from repro.core.memory_system import MB, DRAMModel, glb_array
+from repro.core.workload import Workload
+from repro.dse import backend as _backend
+from repro.dse.access import CountGrid, entity_size_grid
+from repro.dse.grid import (
+    GridSpec,
+    MetricsGrid,
+    PPAGrid,
+    _compute_time_grid,
+    _eval_arrays,
+    _jitted_eval,
+)
+from repro.geom.array import GeometrySpec
+from repro.geom.fit import BUILTIN_GEOMETRY, derive_fields
+from repro.spec import get_tech
+
+#: Default organization axes: one octave around every builtin calibration
+#: point, the Fig. 19-style small-vs-large bank trade.
+DEFAULT_ROWS: tuple[int, ...] = (256, 512, 1024)
+DEFAULT_MUX: tuple[int, ...] = (4, 8, 16)
+DEFAULT_BANK_MB: tuple[float, ...] = (1.0, 2.0, 4.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GeomAxes:
+    """The bank-organization axes the geometry DSE sweeps per technology."""
+
+    rows: tuple[int, ...] = DEFAULT_ROWS
+    mux: tuple[int, ...] = DEFAULT_MUX
+    bank_mb: tuple[float, ...] = DEFAULT_BANK_MB
+
+    def validate(self) -> "GeomAxes":
+        for field in ("rows", "mux", "bank_mb"):
+            values = getattr(self, field)
+            if not values:
+                raise ValueError(f"geometry axis {field!r} must be non-empty")
+            for v in values:
+                if not v > 0:
+                    raise ValueError(
+                        f"geometry axis {field!r} must contain positive "
+                        f"values; got {v!r}"
+                    )
+        return self
+
+    @property
+    def n_designs(self) -> int:
+        return len(self.rows) * len(self.mux) * len(self.bank_mb)
+
+    def design_tuples(self) -> list[tuple[int, int, float]]:
+        """The cartesian ``(rows, mux, bank_mb)`` product, rows-major."""
+        return [
+            (r, m, b)
+            for r in self.rows
+            for m in self.mux
+            for b in self.bank_mb
+        ]
+
+    def to_dict(self) -> dict:
+        return {
+            "rows": list(self.rows),
+            "mux": list(self.mux),
+            "bank_mb": list(self.bank_mb),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "GeomAxes":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown GeomAxes field(s) {sorted(unknown)}; "
+                f"valid fields: {sorted(known)}"
+            )
+        if "rows" in d:
+            d["rows"] = tuple(int(x) for x in d["rows"])
+        if "mux" in d:
+            d["mux"] = tuple(int(x) for x in d["mux"])
+        if "bank_mb" in d:
+            d["bank_mb"] = tuple(float(x) for x in d["bank_mb"])
+        return cls(**d).validate()
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One evaluated (technology, bank organization) pair.
+
+    ``geometry`` is ``None`` for a *pinned* design — a technology with no
+    geometry model, evaluated once at its registered coefficients.
+    """
+
+    technology: str
+    geometry: GeometrySpec | None
+
+    def org(self) -> dict | None:
+        """The organization columns reports print (None when pinned)."""
+        if self.geometry is None:
+            return None
+        return {
+            "rows": self.geometry.rows,
+            "cols": self.geometry.cols,
+            "mux": self.geometry.mux,
+            "bank_mb": self.geometry.bank_mb,
+        }
+
+
+def base_geometry(technology: str) -> GeometrySpec | None:
+    """The geometry the DSE varies for one technology, if it has one.
+
+    A spec-level ``geometry`` block wins; builtin technologies fall back to
+    their :data:`repro.geom.fit.BUILTIN_GEOMETRY` calibration point;
+    everything else (composites, bespoke pinned specs) returns ``None``.
+    """
+    spec = get_tech(technology)
+    if spec.geometry is not None:
+        return spec.geometry
+    return BUILTIN_GEOMETRY.get(technology)
+
+
+def _design_points(
+    technologies, axes: GeomAxes
+) -> tuple[list[DesignPoint], int]:
+    """Expand technologies into feasible design points.
+
+    Returns ``(designs, n_infeasible)`` — infeasible organizations (a
+    subarray exceeding its bank, out-of-range axis values) are dropped per
+    technology and counted so callers can report the cut, not hide it.
+    """
+    designs: list[DesignPoint] = []
+    n_infeasible = 0
+    for tech in technologies:
+        base = base_geometry(tech)
+        if base is None:
+            designs.append(DesignPoint(tech, None))
+            continue
+        kept = 0
+        for r, m, b in axes.design_tuples():
+            candidate = dataclasses.replace(base, rows=r, mux=m, bank_mb=b)
+            try:
+                candidate.validate(owner=tech)
+            except (ValueError, KeyError):
+                n_infeasible += 1
+                continue
+            designs.append(DesignPoint(tech, candidate))
+            kept += 1
+        if kept == 0:
+            raise ValueError(
+                f"every organization in {axes} is infeasible for "
+                f"technology {tech!r} (base geometry {base})"
+            )
+    return designs, n_infeasible
+
+
+def _geom_ppa_fields(designs, capacities_mb) -> tuple[np.ndarray, ...]:
+    """PPA arrays ``[N_designs, C]`` in ``PPAGrid`` field order (numpy).
+
+    Geometry designs of one technology are derived in a single vectorized
+    ``derive_fields`` call over the organization axes; the per-capacity
+    scaling mirrors ``MemTechSpec.build`` operand for operand.
+    """
+    caps = np.asarray(capacities_mb, dtype=np.float64)
+    s = np.sqrt(caps / 2.0)  # matches memory_system._sqrt_scale
+    n = len(designs)
+    out = {
+        name: np.empty((n, caps.size), dtype=np.float64)
+        for name in ("read_latency_ns", "write_latency_ns", "read_energy_pj",
+                     "write_energy_pj", "leakage_w", "area_mm2", "banks")
+    }
+
+    def fill(i, t0r, tgr, t0w, tgw, e_rd, e_wr, slope, leak_mb, a_bit, bank):
+        growth = 1.0 + slope * (s - 1.0)
+        out["read_latency_ns"][i] = t0r + tgr * s
+        out["write_latency_ns"][i] = t0w + tgw * s
+        out["read_energy_pj"][i] = e_rd * growth
+        out["write_energy_pj"][i] = e_wr * growth
+        out["leakage_w"][i] = leak_mb * caps
+        out["area_mm2"][i] = a_bit * caps * 8 * MB / 1e6
+        out["banks"][i] = np.maximum(np.floor(caps / bank), 1.0)
+
+    # Group the geometry designs per technology for one vectorized derive.
+    i = 0
+    while i < n:
+        d = designs[i]
+        if d.geometry is None:
+            ppa = [glb_array(d.technology, c) for c in capacities_mb]
+            out["read_latency_ns"][i] = [p.read_latency_ns for p in ppa]
+            out["write_latency_ns"][i] = [p.write_latency_ns for p in ppa]
+            out["read_energy_pj"][i] = [p.read_energy_pj_per_access for p in ppa]
+            out["write_energy_pj"][i] = [p.write_energy_pj_per_access for p in ppa]
+            out["leakage_w"][i] = [p.leakage_w for p in ppa]
+            out["area_mm2"][i] = [p.area_mm2 for p in ppa]
+            out["banks"][i] = [p.banks for p in ppa]
+            i += 1
+            continue
+        j = i
+        while (
+            j < n
+            and designs[j].geometry is not None
+            and designs[j].technology == d.technology
+        ):
+            j += 1
+        block = [designs[k].geometry for k in range(i, j)]
+        rows = np.asarray([g.rows for g in block], dtype=np.float64)
+        mux = np.asarray([g.mux for g in block], dtype=np.float64)
+        bank = np.asarray([g.bank_mb for g in block], dtype=np.float64)
+        f = derive_fields(d.geometry.cell, d.geometry.process,
+                          rows, d.geometry.cols, mux, bank, np)
+        for k in range(i, j):
+            o = k - i
+            fill(k, f["t0_read_ns"][o], f["tg_read_ns"][o],
+                 f["t0_write_ns"][o], f["tg_write_ns"][o],
+                 f["read_energy_pj_2mb"][o], f["write_energy_pj_2mb"][o],
+                 f["energy_cap_slope"][o], f["leakage_w_per_mb"][o],
+                 f["area_um2_per_bit"][o], f["bank_mb"][o])
+        i = j
+    return tuple(
+        out[name] for name in ("read_latency_ns", "write_latency_ns",
+                               "read_energy_pj", "write_energy_pj",
+                               "leakage_w", "area_mm2", "banks")
+    )
+
+
+@dataclasses.dataclass
+class GeomGridResult:
+    """Batched evaluation over ``mode x design x batch x capacity``.
+
+    Same axis conventions as :class:`repro.dse.grid.GridResult`, with the
+    technology axis expanded into :class:`DesignPoint` rows (``designs``):
+    ``metrics`` fields are ``[M, N, B, C]``, ``ppa`` fields ``[N, C]``.
+    """
+
+    workload: str
+    spec: GridSpec
+    axes: GeomAxes
+    designs: tuple[DesignPoint, ...]
+    counts: CountGrid
+    metrics: MetricsGrid
+    ppa: PPAGrid
+    backend: str
+    n_infeasible: int
+
+    def _index(self, axis_values, value, label):
+        try:
+            return axis_values.index(value)
+        except ValueError:
+            raise KeyError(f"{label} {value!r} not in grid {axis_values}") from None
+
+    def counts_at(self, mode: str, batch: int, capacity_mb: float) -> AccessCounts:
+        m = self._index(list(self.spec.modes), mode, "mode")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        c = self._index(list(self.spec.capacities_mb), capacity_mb, "capacity")
+        return AccessCounts(
+            rd_dram=float(self.counts.rd_dram[m, b, c]),
+            wr_dram=float(self.counts.wr_dram[m, b, c]),
+            rd_glb=float(self.counts.rd_glb[m, b, c]),
+            wr_glb=float(self.counts.wr_glb[m, b, c]),
+            rd_dram_w=float(self.counts.rd_dram_w[m, b, c]),
+            wr_dram_w=float(self.counts.wr_dram_w[m, b, c]),
+        )
+
+    def point(
+        self, mode: str, design: int, batch: int, capacity_mb: float
+    ) -> SystemMetrics:
+        """One (design, capacity) cell as a scalar ``SystemMetrics``."""
+        m = self._index(list(self.spec.modes), mode, "mode")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        c = self._index(list(self.spec.capacities_mb), capacity_mb, "capacity")
+        g = self.metrics
+        return SystemMetrics(
+            energy_j=float(g.energy_j[m, design, b, c]),
+            latency_s=float(g.latency_s[m, design, b, c]),
+            runtime_s=float(g.runtime_s[m, design, b, c]),
+            dram_energy_j=float(g.dram_energy_j[m, design, b, c]),
+            glb_energy_j=float(g.glb_energy_j[m, design, b, c]),
+            leakage_energy_j=float(g.leakage_energy_j[m, design, b, c]),
+            dram_latency_s=float(g.dram_latency_s[m, design, b, c]),
+            glb_latency_s=float(g.glb_latency_s[m, design, b, c]),
+            compute_time_s=float(g.compute_time_s[m, design, b, c]),
+            counts=self.counts_at(mode, batch, capacity_mb),
+        )
+
+    def dram_curve(self, mode: str, batch: int) -> dict[float, float]:
+        """Total DRAM accesses vs capacity (technology/org-independent)."""
+        m = self._index(list(self.spec.modes), mode, "mode")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        totals = self.counts.dram_total[m, b, :]
+        return {cap: float(t) for cap, t in zip(self.spec.capacities_mb, totals)}
+
+    def objective_arrays(self, mode: str, batch: int):
+        """(energy, latency, area) over design x capacity, flattened.
+
+        Returns ``(objs[N*C, 3], labels[N*C])`` with labels
+        ``(technology, capacity_mb, DesignPoint)`` — the capacity x
+        organization Pareto/knee input.
+        """
+        m = self._index(list(self.spec.modes), mode, "mode")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        energy = np.asarray(self.metrics.energy_j)[m, :, b, :].reshape(-1)
+        latency = np.asarray(self.metrics.latency_s)[m, :, b, :].reshape(-1)
+        area = np.asarray(self.ppa.area_mm2).reshape(-1)
+        labels = [
+            (d.technology, cap, d)
+            for d in self.designs
+            for cap in self.spec.capacities_mb
+        ]
+        assert energy.shape[0] == len(labels)
+        return np.stack([energy, latency, area], axis=1), labels
+
+    def tech_designs(self, technology: str) -> list[int]:
+        """Design indices belonging to one technology."""
+        return [
+            i for i, d in enumerate(self.designs)
+            if d.technology == technology
+        ]
+
+    def best_design(self, mode: str, technology: str, batch: int,
+                    capacity_mb: float) -> int:
+        """The technology's EDP-minimizing design index at one capacity."""
+        m = self._index(list(self.spec.modes), mode, "mode")
+        b = self._index(list(self.spec.batches), batch, "batch")
+        c = self._index(list(self.spec.capacities_mb), capacity_mb, "capacity")
+        idx = self.tech_designs(technology)
+        if not idx:
+            raise KeyError(f"technology {technology!r} not in grid")
+        energy = np.asarray(self.metrics.energy_j)[m, idx, b, c]
+        latency = np.asarray(self.metrics.latency_s)[m, idx, b, c]
+        return idx[int(np.argmin(energy * latency))]
+
+    def org_table(self, mode: str, batch: int) -> list[dict]:
+        """The chosen bank organization per (technology, capacity) point.
+
+        For every operating point, the EDP-minimizing organization of that
+        technology with its metrics — the per-point organization columns
+        the reports print.
+        """
+        rows = []
+        for tech in self.spec.technologies:
+            for cap in self.spec.capacities_mb:
+                best = self.best_design(mode, tech, batch, cap)
+                metrics = self.point(mode, best, batch, cap)
+                rows.append({
+                    "technology": tech,
+                    "capacity_mb": cap,
+                    "org": self.designs[best].org(),
+                    "energy_j": metrics.energy_j,
+                    "latency_s": metrics.latency_s,
+                    "area_mm2": float(
+                        self.ppa.area_mm2[
+                            best,
+                            self._index(
+                                list(self.spec.capacities_mb), cap, "capacity"
+                            ),
+                        ]
+                    ),
+                })
+        return rows
+
+    def best_metrics(self, mode: str, batch: int,
+                     capacity_mb: float) -> dict[str, SystemMetrics]:
+        """Per-technology metrics at each tech's best organization — the
+        improvement-ratio input (iso-capacity, org-optimized)."""
+        return {
+            tech: self.point(
+                mode,
+                self.best_design(mode, tech, batch, capacity_mb),
+                batch,
+                capacity_mb,
+            )
+            for tech in self.spec.technologies
+        }
+
+
+def evaluate_geometry_grid(
+    workload: Workload,
+    spec: GridSpec | None = None,
+    axes: GeomAxes | None = None,
+    arr: ArrayConfig | None = None,
+    dram: DRAMModel | None = None,
+    mem_params: MemoryParams | None = None,
+    backend: str = "auto",
+) -> GeomGridResult:
+    """Evaluate one workload over capacity x organization in one program.
+
+    The design axis replaces the technology axis of
+    :func:`repro.dse.grid.evaluate_workload_grid`; everything else —
+    access-count model, metric formulas, backend contract — is shared, so
+    a pinned-design row is bit-identical to the fixed grid's row for the
+    same technology.
+    """
+    spec = spec or GridSpec()
+    axes = (axes or GeomAxes()).validate()
+    arr = arr or ArrayConfig()
+    dram = dram or DRAMModel()
+    mem = mem_params or MemoryParams()
+    resolved = _backend.resolve_backend(backend)
+
+    designs, n_infeasible = _design_points(spec.technologies, axes)
+    sizes = entity_size_grid(workload, spec.batches, spec.d_w)
+    caps = np.asarray(spec.capacities_mb, dtype=np.float64)
+    ppa_fields = _geom_ppa_fields(designs, spec.capacities_mb)
+    t_compute = _compute_time_grid(workload, spec, arr)
+
+    with _backend.x64_scope(resolved):
+        if resolved == "jax":
+            fn = _jitted_eval(tuple(spec.modes), mem, dram)
+            count_arrays, metric_arrays = fn(sizes, caps, ppa_fields, t_compute)
+        else:
+            count_arrays, metric_arrays = _eval_arrays(
+                sizes, caps, ppa_fields, t_compute, tuple(spec.modes),
+                mem, dram, np,
+            )
+
+    return GeomGridResult(
+        workload=workload.name,
+        spec=spec,
+        axes=axes,
+        designs=tuple(designs),
+        counts=CountGrid(*(np.asarray(a) for a in count_arrays)),
+        metrics=MetricsGrid(*(np.asarray(a) for a in metric_arrays)),
+        ppa=PPAGrid(*(np.asarray(a) for a in ppa_fields)),
+        backend=resolved,
+        n_infeasible=n_infeasible,
+    )

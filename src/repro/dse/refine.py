@@ -11,6 +11,7 @@ DTCO-device point uses a bespoke ``ArrayPPA``) can pass an explicit system.
 from __future__ import annotations
 
 from repro.core.bandwidth import ArrayConfig
+from repro.obs import Console
 from repro.spec import build_system
 
 
@@ -23,18 +24,22 @@ def refine_front(
     tile_bytes: int | None = None,
     arr: ArrayConfig | None = None,
     sim_config=None,
+    console: Console | None = None,
 ) -> list[dict]:
     """Re-score Pareto points with the bank-level simulator.
 
     ``points`` is an iterable of ``(technology, capacity_mb)`` pairs (or
     objects with those attributes, e.g. ``repro.core.stco.STCOPoint``).
     Returns one dict per point: the analytic identity plus the simulator's
-    latency and congestion metrics.
+    latency and congestion metrics.  Points whose technology the registry
+    cannot build (bespoke ``ArrayPPA`` techs) are skipped with a named
+    warning on ``console`` (stderr by default).
     """
     from repro.sim.engine import SimConfig
     from repro.sim.validate import refine_point
 
     sim_config = sim_config or SimConfig()
+    console = console or Console()
     rows = []
     for p in points:
         tech, cap = (
@@ -42,8 +47,14 @@ def refine_front(
         )
         try:
             system = build_system(tech, cap)
-        except ValueError:
-            continue  # bespoke technologies (e.g. sot_dtco_device) are skipped
+        except ValueError as exc:
+            # Bespoke technologies (e.g. sot_dtco_device) have no registry
+            # entry; name what was dropped instead of skipping silently.
+            console.warn(
+                f"refine_front: skipping technology {tech!r} at "
+                f"{cap} MB (not registry-buildable: {exc})"
+            )
+            continue
         r = refine_point(
             workload, batch, system, mode, d_w,
             tile_bytes=tile_bytes, arr=arr, sim_config=sim_config,

@@ -1,0 +1,85 @@
+"""``repro.geom`` — analytical bank-geometry model (ROADMAP item 3).
+
+Derives the ``MemTechSpec`` coefficient set (area/bit, leakage/MB, energy
+anchors, ``t0``/``tg`` latency coefficients) from bitcell geometry and bank
+organization instead of pinning them per technology:
+
+- :mod:`repro.geom.cells` — bitcell footprints/electricals + process corner
+- :mod:`repro.geom.array` — subarray tiling, area, efficiency, leakage
+- :mod:`repro.geom.timing` — wordline/bitline RC, sensing, writes, H-tree
+- :mod:`repro.geom.fit` — calibration against the pinned builtin anchors
+
+See ``docs/geometry.md`` for the model equations and the
+add-a-technology-from-geometry walkthrough.
+"""
+
+from repro.geom.array import (
+    COLS_RANGE,
+    MUX_RANGE,
+    ROWS_RANGE,
+    GeometrySpec,
+    access_beats,
+    active_subarrays,
+    area_efficiency,
+    area_um2_per_bit,
+    leakage_w_per_mb,
+    subarrays_per_bank,
+)
+from repro.geom.cells import (
+    ACCESS_BITS,
+    MB_BITS,
+    N14,
+    BitcellGeometry,
+    ProcessParams,
+    get_cell,
+    get_process,
+    list_cells,
+    register_cell,
+)
+from repro.geom.fit import (
+    BUILTIN_GEOMETRY,
+    CALIBRATION_TOL,
+    COEFF_FIELDS,
+    CoeffSet,
+    builtin_geometry,
+    calibration_report,
+    derive_coefficients,
+    derive_fields,
+    max_calibration_error,
+    rebuild_spec,
+)
+from repro.geom.timing import energy_anchors, latency_coefficients
+
+__all__ = [
+    "ACCESS_BITS",
+    "MB_BITS",
+    "N14",
+    "BUILTIN_GEOMETRY",
+    "CALIBRATION_TOL",
+    "COEFF_FIELDS",
+    "COLS_RANGE",
+    "MUX_RANGE",
+    "ROWS_RANGE",
+    "BitcellGeometry",
+    "CoeffSet",
+    "GeometrySpec",
+    "ProcessParams",
+    "access_beats",
+    "active_subarrays",
+    "area_efficiency",
+    "area_um2_per_bit",
+    "builtin_geometry",
+    "calibration_report",
+    "derive_coefficients",
+    "derive_fields",
+    "energy_anchors",
+    "get_cell",
+    "get_process",
+    "latency_coefficients",
+    "leakage_w_per_mb",
+    "list_cells",
+    "max_calibration_error",
+    "register_cell",
+    "rebuild_spec",
+    "subarrays_per_bank",
+]

@@ -1,0 +1,195 @@
+"""Subarray/bank organization: area, efficiency, leakage (CACTI-style).
+
+A GLB bank of ``bank_mb`` megabytes is tiled from ``rows x cols`` subarrays
+behind a ``mux``-way column multiplexer.  One 256-byte access activates one
+wordline in each of ``n_active`` subarrays and senses ``cols / mux`` bits
+per subarray; when the bank holds fewer subarrays than the line needs, the
+access serializes into ``beats`` back-to-back subarray cycles (the
+small-bank / tall-subarray trade the DSE organization axes expose).
+
+Every function here is an array program over the organization fields
+(``rows`` / ``mux`` / ``bank_mb`` broadcast against each other) and runs
+unchanged under ``numpy`` or ``jax.numpy`` — pass the namespace as ``xp``.
+Floats throughout: organizations are model points, not RTL.
+
+Area model (the paper Fig. 19 axis): a subarray is the cell matrix plus a
+decoder strip (width grows with ``log2(rows)``) and a sense/write periphery
+strip; the bank multiplies by a routing/control overhead.  Area efficiency
+is cell area over total — the quantity the DTCO trades against speed when
+it shrinks banks.
+
+Leakage: cell leakage (SRAM only) scales with bits; periphery leakage
+scales with the *non-cell* area, so an organization with worse efficiency
+leaks more per MB — the coupling that makes leakage an organization
+output instead of a pinned constant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.geom.cells import (
+    ACCESS_BITS,
+    MB_BITS,
+    BitcellGeometry,
+    ProcessParams,
+    get_cell,
+    get_process,
+)
+
+#: Bank-organization bounds the validator accepts (model trust region).
+ROWS_RANGE = (64, 4096)
+MUX_RANGE = (1, 64)
+COLS_RANGE = (128, 4096)
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometrySpec:
+    """One bank organization of one bitcell — the ``MemTechSpec.geometry``
+    block (JSON round-trip via ``to_dict``/``from_dict``).
+
+    ``cell`` names a registered :class:`repro.geom.cells.BitcellGeometry`;
+    ``rows``/``cols`` are the subarray matrix, ``mux`` the column-mux
+    degree, ``bank_mb`` the bank granularity the spec's ``banks = capacity
+    // bank_mb`` split uses.
+    """
+
+    cell: str
+    rows: int = 512
+    cols: int = 512
+    mux: int = 8
+    bank_mb: float = 2.0
+    process: str = "n14"
+
+    def validate(self, owner: str = "") -> "GeometrySpec":
+        where = f"{owner}: " if owner else ""
+        get_cell(self.cell)  # raises with near-miss hints
+        get_process(self.process)
+        for field, (lo, hi) in (("rows", ROWS_RANGE), ("cols", COLS_RANGE),
+                                ("mux", MUX_RANGE)):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < lo or v > hi:
+                raise ValueError(
+                    f"{where}geometry field {field!r} must be an integer in "
+                    f"[{lo}, {hi}]; got {v!r}"
+                )
+            if v & (v - 1):
+                raise ValueError(
+                    f"{where}geometry field {field!r} must be a power of two; "
+                    f"got {v!r}"
+                )
+        if self.mux > self.cols:
+            raise ValueError(
+                f"{where}geometry mux ({self.mux}) exceeds cols ({self.cols})"
+            )
+        if not (self.bank_mb > 0 and np.isfinite(self.bank_mb)):
+            raise ValueError(
+                f"{where}geometry field 'bank_mb' must be finite and "
+                f"positive; got {self.bank_mb!r}"
+            )
+        if self.rows * self.cols > self.bank_mb * MB_BITS:
+            raise ValueError(
+                f"{where}geometry infeasible: one {self.rows}x{self.cols} "
+                f"subarray exceeds the {self.bank_mb} MB bank"
+            )
+        return self
+
+    def to_dict(self) -> dict:
+        return {
+            "cell": self.cell,
+            "rows": self.rows,
+            "cols": self.cols,
+            "mux": self.mux,
+            "bank_mb": self.bank_mb,
+            "process": self.process,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "GeometrySpec":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown GeometrySpec field(s) {sorted(unknown)}; "
+                f"valid fields: {sorted(known)}"
+            )
+        if "cell" not in d:
+            raise ValueError("GeometrySpec dict is missing the 'cell' field")
+        for key in ("rows", "cols", "mux"):
+            if key in d:
+                d[key] = int(d[key])
+        if "bank_mb" in d:
+            d["bank_mb"] = float(d["bank_mb"])
+        return cls(**d).validate()
+
+
+# ---------------------------------------------------------------------------
+# Organization arithmetic (xp-vectorized over rows/mux/bank_mb)
+# ---------------------------------------------------------------------------
+
+
+def subarrays_per_bank(rows, cols, bank_mb, xp=np):
+    """Number of ``rows x cols`` subarrays tiling one bank (floored, >= 1)."""
+    n = xp.floor(bank_mb * MB_BITS / (xp.asarray(rows, dtype=xp.float64) * cols))
+    return xp.maximum(n, 1.0)
+
+
+def access_beats(rows, cols, mux, bank_mb, xp=np):
+    """Serialized subarray cycles one 256 B line access needs.
+
+    A subarray yields ``cols / mux`` bits per cycle; with ``n_sub``
+    subarrays available the bank streams ``n_sub * cols / mux`` bits per
+    beat, so small banks of tall subarrays pay multiple beats.
+    """
+    n_sub = subarrays_per_bank(rows, cols, bank_mb, xp)
+    bits_per_beat = n_sub * (xp.asarray(cols, dtype=xp.float64) / mux)
+    return xp.maximum(xp.ceil(ACCESS_BITS / bits_per_beat), 1.0)
+
+
+def active_subarrays(rows, cols, mux, bank_mb, xp=np):
+    """Subarrays activated per beat (line spread, capped by the bank)."""
+    n_sub = subarrays_per_bank(rows, cols, bank_mb, xp)
+    needed = xp.ceil(ACCESS_BITS / (xp.asarray(cols, dtype=xp.float64) / mux))
+    return xp.minimum(needed, n_sub)
+
+
+def subarray_area_um2(cell: BitcellGeometry, proc: ProcessParams,
+                      rows, cols, xp=np):
+    """(total_um2, cell_um2) of one subarray including its periphery strips."""
+    rows = xp.asarray(rows, dtype=xp.float64)
+    array_w = cols * cell.cell_w_um
+    array_h = rows * cell.cell_h_um
+    dec_w = proc.decoder_w0_um + proc.decoder_w_per_bit_um * xp.log2(rows)
+    total = (array_w + dec_w) * (array_h + cell.sense_h_um)
+    return total, array_w * array_h
+
+
+def area_um2_per_bit(cell: BitcellGeometry, proc: ProcessParams,
+                     rows, cols, bank_mb, xp=np):
+    """Bank area per stored bit (the linear GLB area coefficient)."""
+    n_sub = subarrays_per_bank(rows, cols, bank_mb, xp)
+    sub_total, _ = subarray_area_um2(cell, proc, rows, cols, xp)
+    bank_bits = n_sub * xp.asarray(rows, dtype=xp.float64) * cols
+    return n_sub * sub_total * proc.array_overhead / bank_bits
+
+
+def area_efficiency(cell: BitcellGeometry, proc: ProcessParams,
+                    rows, cols, xp=np):
+    """Cell area over total subarray area (including bank overhead)."""
+    sub_total, sub_cells = subarray_area_um2(cell, proc, rows, cols, xp)
+    return sub_cells / (sub_total * proc.array_overhead)
+
+
+def leakage_w_per_mb(cell: BitcellGeometry, proc: ProcessParams,
+                     rows, cols, bank_mb, xp=np):
+    """Standby power per MB: cell leakage + periphery-area leakage."""
+    a_bit = area_um2_per_bit(cell, proc, rows, cols, bank_mb, xp)
+    eff = area_efficiency(cell, proc, rows, cols, xp)
+    periph_mm2_per_mb = a_bit * MB_BITS * (1.0 - eff) / 1e6
+    return (
+        cell.cell_leak_nw * 1e-9 * MB_BITS
+        + cell.periph_leak_scale * proc.periph_leak_w_per_mm2 * periph_mm2_per_mb
+    )

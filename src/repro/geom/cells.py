@@ -1,0 +1,255 @@
+"""Bitcell geometry and the shared process corner (the "D" in DTCO).
+
+A :class:`BitcellGeometry` is everything the analytical bank model
+(:mod:`repro.geom.array`, :mod:`repro.geom.timing`) needs to know about one
+storage cell: its footprint, the capacitance it hangs on the wordline and
+bitline, its sensing current/margin, its intrinsic write pulse, and the
+per-technology global-wiring recipe (the paper's DTCO "individually
+optimizes banks" knob — repeater insertion and signaling swing differ per
+technology, which is why the SOT tg coefficients are far flatter than the
+density advantage alone explains).
+
+The four builtin cells model the paper's technology classes:
+
+``sram6t``
+    14 nm foundry 6T cell (0.081 um^2).  Fast large-signal sensing, but
+    every cell leaks, and the GLB-scale H-tree runs at full swing.
+
+``sot``
+    Conservative 2T1SOT cell (pre-DTCO, Table VII anchors): separate read
+    and write paths, ~1.2 ns thermally-comfortable switching pulse,
+    moderate TMR (low sense current, large develop swing).
+
+``sot_opt``
+    The DTCO-optimized SOT cell (Section V-D): 250/520 ps-class access from
+    the higher-TMR stack and reduced critical current, smaller footprint,
+    and the DTCO'd low-swing global wiring.
+
+``stt``
+    Two-terminal 1T1MTJ STT-MRAM (Mishty & Sadi 2021 companion paper):
+    densest cell, but the shared read/write path through the MTJ forces
+    ns-class write pulses at currents above I_c0.
+
+Every electrical number is calibrated (see :mod:`repro.geom.fit`) so the
+derived :class:`repro.spec.MemTechSpec` coefficients reproduce the pinned
+seed anchors within ``fit.CALIBRATION_TOL`` — the same data-anchored style
+as ``repro.core.memory_system``, but now the anchors emerge from geometry
+instead of being pinned per technology.
+
+Unit conventions (chosen so the formulas stay in ns/pJ without unit junk):
+``ohm x fF = 1e-6 ns``, ``fF x mV / uA = 1e-3 ns``, ``uA x V x ns = fJ``,
+``fF x V^2 = fJ``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+
+#: Bits moved by one GLB access (256-byte line, matching the system model).
+ACCESS_BITS = 2048
+
+#: Bits per MB.
+MB_BITS = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessParams:
+    """Shared 14 nm interconnect/periphery corner (technology-neutral)."""
+
+    name: str = "n14"
+    vdd_v: float = 0.80
+    # Intermediate-layer wire parasitics (per um of routed wire).
+    wire_r_ohm_per_um: float = 2.0
+    wire_c_ff_per_um: float = 0.20
+    # Row-decoder delay: fixed predecode plus a per-address-bit stage.
+    decode_ns0: float = 0.050
+    decode_ns_per_bit: float = 0.010
+    # Wordline driver output resistance and sense-amp resolve time.
+    wl_driver_r_ohm: float = 2000.0
+    wr_driver_r_ohm: float = 1500.0
+    sense_amp_ns: float = 0.080
+    # Subarray periphery footprint: decoder strip width (per log2(rows)
+    # stage) and the bank-level routing/control overhead multiplier.
+    decoder_w0_um: float = 8.0
+    decoder_w_per_bit_um: float = 1.2
+    array_overhead: float = 1.12
+    # Periphery (decoder/SA/driver) standby leakage per mm^2 of non-cell
+    # area; the only leakage an NVM array pays.  Calibrated so the sot
+    # leakage anchor (0.5 mW/MB) is pure periphery at unit scale.
+    periph_leak_w_per_mm2: float = 2.09876e-3
+
+
+#: The default corner every builtin geometry uses.
+N14 = ProcessParams()
+
+_PROCESSES: dict[str, ProcessParams] = {N14.name: N14}
+
+
+def get_process(name: str) -> ProcessParams:
+    """Look up a process corner by name (only ``n14`` ships today)."""
+    try:
+        return _PROCESSES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown process {name!r} (have {sorted(_PROCESSES)})"
+        ) from None
+
+
+@dataclasses.dataclass(frozen=True)
+class BitcellGeometry:
+    """One storage cell's geometry + electrical calibration point."""
+
+    name: str
+    # Footprint (um).
+    cell_w_um: float
+    cell_h_um: float
+    # Parasitic load each cell adds to its wordline / bitline (fF).
+    cell_wl_cap_ff: float
+    cell_bl_cap_ff: float
+    # Read path: cell sense current and the bitline swing the sense amp
+    # needs (MRAM swings are TMR-limited: margin ~ TMR/(2+TMR) folds into
+    # the calibrated v_swing/read_i pair).
+    read_i_ua: float
+    v_swing_mv: float
+    # Write path: intrinsic cell switching/charge pulse and write current.
+    write_pulse_ns: float
+    write_i_ua: float
+    # Sense-amp + read-datapath energy per sensed bit (fJ).
+    sense_fj: float
+    # Cell standby leakage (nW/bit; 0 for the nonvolatile cells).
+    cell_leak_nw: float
+    # Extra periphery leakage scale (heavier write drivers / reference
+    # circuits; multiplies the process periphery leakage density).
+    periph_leak_scale: float = 1.0
+    # Subarray sense/write periphery strip height (um).
+    sense_h_um: float = 30.0
+    # Per-technology global H-tree recipe (the DTCO wiring knob): flit
+    # velocity, switched energy per bit-mm, and the write-path factors
+    # (latency: one-way data push vs read round-trip; energy: write data
+    # only vs address+return data).
+    wire_ns_per_mm: float = 0.20
+    wire_fj_per_mm_bit: float = 20.0
+    wr_wire_lat_factor: float = 1.0
+    wr_wire_e_factor: float = 1.0
+    nonvolatile: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Builtin cells (electrical values calibrated by repro.geom.fit — see
+# docs/geometry.md for the calibration methodology and anchor table).
+# ---------------------------------------------------------------------------
+
+SRAM_6T = BitcellGeometry(
+    name="sram6t",
+    # 14 nm foundry 6T: 0.081 um^2 published cell.
+    cell_w_um=0.360, cell_h_um=0.225,
+    cell_wl_cap_ff=0.060, cell_bl_cap_ff=0.045,
+    # Large-signal differential sensing: high cell current, small swing.
+    read_i_ua=40.0, v_swing_mv=70.5992,
+    # "Write pulse" = bitline full-swing settle through the access pair.
+    write_pulse_ns=0.0922102, write_i_ua=52.0,
+    sense_fj=3.88072,
+    # 6T leakage dominates the GLB standby power (the paper's motivation).
+    cell_leak_nw=3.41048,
+    sense_h_um=69.1695,
+    # Full-swing repeated H-tree; reads return data, writes only push it.
+    wire_ns_per_mm=0.256348, wire_fj_per_mm_bit=40.3339,
+    wr_wire_lat_factor=1.0, wr_wire_e_factor=0.453397,
+    nonvolatile=False,
+)
+
+SOT_CELL = BitcellGeometry(
+    name="sot",
+    # 2T1SOT: read transistor + write transistor + MTJ on the SOT channel.
+    cell_w_um=0.260, cell_h_um=0.260,
+    cell_wl_cap_ff=0.075, cell_bl_cap_ff=0.010,
+    # TMR ~150%: weak effective sensing, big develop swing -> slow reads.
+    read_i_ua=6.0, v_swing_mv=130.449,
+    # Thermally-comfortable switching pulse (pre-DTCO, Table VII class).
+    write_pulse_ns=1.27255, write_i_ua=8.0,
+    sense_fj=7.55129,
+    cell_leak_nw=0.0,
+    sense_h_um=14.7834,
+    wire_ns_per_mm=0.114254, wire_fj_per_mm_bit=13.2425,
+    wr_wire_lat_factor=1.06897, wr_wire_e_factor=0.301618,
+    nonvolatile=True,
+)
+
+SOT_OPT_CELL = BitcellGeometry(
+    name="sot_opt",
+    # DTCO-shrunk footprint (thinner SOT channel, tighter MTJ pitch).
+    cell_w_um=0.250, cell_h_um=0.250,
+    cell_wl_cap_ff=0.070, cell_bl_cap_ff=0.010,
+    # TMR 240% (Table VI): strong sensing -> 250 ps-class array reads.
+    read_i_ua=25.0, v_swing_mv=65.7487,
+    # Section V-D3: sub-0.5 ns switching at the optimized I_c.
+    write_pulse_ns=0.397356, write_i_ua=12.0,
+    sense_fj=8.43936,
+    cell_leak_nw=0.0,
+    # DTCO's faster periphery leaks harder per mm^2.
+    periph_leak_scale=1.32093,
+    sense_h_um=3.51648,
+    # DTCO'd low-swing links: the flattest wiring recipe of the family.
+    wire_ns_per_mm=0.043803, wire_fj_per_mm_bit=5.67745,
+    wr_wire_lat_factor=1.15385, wr_wire_e_factor=0.927077,
+    nonvolatile=True,
+)
+
+STT_CELL = BitcellGeometry(
+    name="stt",
+    # 1T1MTJ: densest cell (no separate write transistor/channel).
+    cell_w_um=0.240, cell_h_um=0.240,
+    cell_wl_cap_ff=0.070, cell_bl_cap_ff=0.010,
+    # TMR ~150% at the lower-RA stack: SOT-class sensing.
+    read_i_ua=5.0, v_swing_mv=134.825,
+    # STT current *through* the MTJ: ns-class incubation + precession.
+    write_pulse_ns=4.48621, write_i_ua=12.0,
+    sense_fj=9.37012,
+    cell_leak_nw=0.0,
+    # Heavier write drivers + reference columns for the shared-path cell.
+    periph_leak_scale=1.05185,
+    sense_h_um=25.8011,
+    wire_ns_per_mm=0.122070, wire_fj_per_mm_bit=14.7076,
+    wr_wire_lat_factor=1.06667, wr_wire_e_factor=1.26002,
+    nonvolatile=True,
+)
+
+_CELLS: dict[str, BitcellGeometry] = {
+    c.name: c for c in (SRAM_6T, SOT_CELL, SOT_OPT_CELL, STT_CELL)
+}
+
+
+def list_cells() -> tuple[str, ...]:
+    """Registered bitcell names, registration order."""
+    return tuple(_CELLS)
+
+
+def get_cell(name: str) -> BitcellGeometry:
+    """Look a bitcell up by name; unknown names get near-miss hints."""
+    try:
+        return _CELLS[name]
+    except KeyError:
+        near = difflib.get_close_matches(name, _CELLS, n=3, cutoff=0.5)
+        hint = f"; did you mean {', '.join(repr(n) for n in near)}?" if near else ""
+        raise KeyError(
+            f"unknown bitcell {name!r}{hint} (have {', '.join(_CELLS)})"
+        ) from None
+
+
+def register_cell(cell: BitcellGeometry, overwrite: bool = False) -> BitcellGeometry:
+    """Register a custom bitcell (the add-a-tech-from-geometry entry point)."""
+    if cell.name in _CELLS and not overwrite:
+        raise ValueError(
+            f"bitcell {cell.name!r} is already registered "
+            "(pass overwrite=True to replace it)"
+        )
+    for field in ("cell_w_um", "cell_h_um", "read_i_ua", "v_swing_mv",
+                  "write_pulse_ns", "write_i_ua", "sense_fj",
+                  "wire_ns_per_mm", "wire_fj_per_mm_bit"):
+        if not getattr(cell, field) > 0:
+            raise ValueError(f"bitcell {cell.name!r}: {field} must be positive")
+    if cell.cell_leak_nw < 0:
+        raise ValueError(f"bitcell {cell.name!r}: cell_leak_nw must be >= 0")
+    _CELLS[cell.name] = cell
+    return cell

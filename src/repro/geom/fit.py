@@ -1,0 +1,212 @@
+"""Calibration: geometry -> the ``MemTechSpec`` coefficient set.
+
+:func:`derive_coefficients` runs the :mod:`repro.geom.array` /
+:mod:`repro.geom.timing` model on one :class:`GeometrySpec` and returns the
+exact ten numbers a leaf :class:`repro.spec.MemTechSpec` pins today.
+:func:`derive_fields` is the same computation as a struct-of-arrays program
+over organization axes (``rows``/``mux``/``bank_mb`` broadcast), reusable
+under numpy or jax.numpy — the DSE geometry grid consumes it directly.
+
+``BUILTIN_GEOMETRY`` records the bank organization each builtin technology
+was calibrated at; :func:`rebuild_spec` re-derives a builtin spec from its
+geometry, and :func:`calibration_report` compares the derived coefficients
+against the pinned seed anchors.  The builtin cells' electrical constants
+were solved (closed-form, in the solve order documented in
+``docs/geometry.md``) so every compared coefficient lands within
+:data:`CALIBRATION_TOL` of its anchor — pinned by ``tests/test_geom.py``
+golden tests.
+
+This module is imported by ``repro.spec.tech`` (lazily, at resolve time),
+so it must never import ``repro.spec`` at module level — all spec imports
+here live inside functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.geom.array import (
+    GeometrySpec,
+    access_beats,
+    area_efficiency,
+    area_um2_per_bit,
+    leakage_w_per_mb,
+    subarrays_per_bank,
+)
+from repro.geom.cells import get_cell, get_process
+from repro.geom.timing import energy_anchors, latency_coefficients
+
+#: Documented golden tolerance: every derived builtin coefficient matches
+#: its pinned seed anchor within this relative error (tests pin it).
+CALIBRATION_TOL = 0.02
+
+#: The ten numeric MemTechSpec fields the model derives.
+COEFF_FIELDS = (
+    "area_um2_per_bit",
+    "leakage_w_per_mb",
+    "read_energy_pj_2mb",
+    "write_energy_pj_2mb",
+    "energy_cap_slope",
+    "t0_read_ns",
+    "tg_read_ns",
+    "t0_write_ns",
+    "tg_write_ns",
+    "bank_mb",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoeffSet:
+    """Derived ``MemTechSpec`` coefficients plus organization diagnostics."""
+
+    area_um2_per_bit: float
+    leakage_w_per_mb: float
+    read_energy_pj_2mb: float
+    write_energy_pj_2mb: float
+    energy_cap_slope: float
+    t0_read_ns: float
+    tg_read_ns: float
+    t0_write_ns: float
+    tg_write_ns: float
+    bank_mb: float
+    # Diagnostics (not MemTechSpec fields, but what reports print).
+    area_efficiency: float
+    subarrays_per_bank: int
+    access_beats: int
+
+    def spec_fields(self) -> dict:
+        """The coefficient subset keyed exactly like ``MemTechSpec``."""
+        return {f: getattr(self, f) for f in COEFF_FIELDS}
+
+
+def derive_fields(cell_name: str, process: str, rows, cols, mux, bank_mb,
+                  xp=np) -> dict:
+    """The full coefficient set as xp arrays broadcast over the org axes.
+
+    Returns a dict with the :data:`COEFF_FIELDS` keys plus the
+    ``area_efficiency``/``subarrays_per_bank``/``access_beats``
+    diagnostics; every value has the broadcast shape of
+    ``rows x mux x bank_mb``.
+    """
+    cell = get_cell(cell_name)
+    proc = get_process(process)
+    rows = xp.asarray(rows, dtype=xp.float64)
+    bank_mb = xp.asarray(bank_mb, dtype=xp.float64)
+    t0r, tgr, t0w, tgw = latency_coefficients(
+        cell, proc, rows, cols, mux, bank_mb, xp)
+    e_rd, e_wr, slope = energy_anchors(cell, proc, rows, cols, mux, bank_mb, xp)
+    a_bit = area_um2_per_bit(cell, proc, rows, cols, bank_mb, xp)
+    shape = xp.broadcast_shapes(
+        xp.shape(a_bit), xp.shape(t0r), xp.shape(bank_mb))
+    return {
+        "area_um2_per_bit": xp.broadcast_to(a_bit, shape),
+        "leakage_w_per_mb": xp.broadcast_to(
+            leakage_w_per_mb(cell, proc, rows, cols, bank_mb, xp), shape),
+        "read_energy_pj_2mb": xp.broadcast_to(e_rd, shape),
+        "write_energy_pj_2mb": xp.broadcast_to(e_wr, shape),
+        "energy_cap_slope": xp.broadcast_to(slope, shape),
+        "t0_read_ns": xp.broadcast_to(t0r, shape),
+        "tg_read_ns": xp.broadcast_to(tgr, shape),
+        "t0_write_ns": xp.broadcast_to(t0w, shape),
+        "tg_write_ns": xp.broadcast_to(tgw, shape),
+        "bank_mb": xp.broadcast_to(bank_mb, shape),
+        "area_efficiency": xp.broadcast_to(
+            area_efficiency(cell, proc, rows, cols, xp), shape),
+        "subarrays_per_bank": xp.broadcast_to(
+            subarrays_per_bank(rows, cols, bank_mb, xp), shape),
+        "access_beats": xp.broadcast_to(
+            access_beats(rows, cols, mux, bank_mb, xp), shape),
+    }
+
+
+def derive_coefficients(geom: GeometrySpec) -> CoeffSet:
+    """Run the analytical model on one organization (scalar, numpy)."""
+    geom.validate()
+    f = derive_fields(geom.cell, geom.process, geom.rows, geom.cols,
+                      geom.mux, geom.bank_mb, np)
+    scalars = {k: float(np.asarray(v)) for k, v in f.items()}
+    scalars["subarrays_per_bank"] = int(scalars["subarrays_per_bank"])
+    scalars["access_beats"] = int(scalars["access_beats"])
+    return CoeffSet(**scalars)
+
+
+# ---------------------------------------------------------------------------
+# Builtin calibration points
+# ---------------------------------------------------------------------------
+
+#: The bank organization each builtin technology's cell was calibrated at
+#: (the organization the pinned seed anchors describe).  ``sot_opt`` uses
+#: the DTCO small-bank point (1 MB banks of short 256-row subarrays) the
+#: paper's "individually optimized banks" refers to.
+BUILTIN_GEOMETRY: dict[str, GeometrySpec] = {
+    "sram": GeometrySpec(cell="sram6t", rows=512, cols=512, mux=8, bank_mb=4.0),
+    "sot": GeometrySpec(cell="sot", rows=512, cols=512, mux=8, bank_mb=2.0),
+    "sot_opt": GeometrySpec(cell="sot_opt", rows=256, cols=512, mux=8,
+                            bank_mb=1.0),
+    "stt": GeometrySpec(cell="stt", rows=512, cols=512, mux=8, bank_mb=2.0),
+}
+
+
+def builtin_geometry(technology: str) -> GeometrySpec:
+    """The calibration-point :class:`GeometrySpec` of a builtin technology."""
+    try:
+        return BUILTIN_GEOMETRY[technology]
+    except KeyError:
+        raise KeyError(
+            f"no builtin geometry for technology {technology!r} "
+            f"(have {', '.join(BUILTIN_GEOMETRY)})"
+        ) from None
+
+
+def rebuild_spec(technology: str):
+    """A builtin spec with its coefficients re-derived from geometry.
+
+    The returned :class:`repro.spec.MemTechSpec` carries the technology's
+    ``BUILTIN_GEOMETRY`` block and the geometry-derived coefficients —
+    within :data:`CALIBRATION_TOL` of the registered (pinned) spec.
+    """
+    import dataclasses as _dc
+
+    from repro.spec import get_tech
+
+    base = get_tech(technology)
+    coeffs = derive_coefficients(builtin_geometry(technology))
+    return _dc.replace(base, geometry=builtin_geometry(technology),
+                       **coeffs.spec_fields())
+
+
+def calibration_report(technologies=("sram", "sot", "sot_opt")) -> dict:
+    """Per-technology, per-coefficient calibration error table.
+
+    Returns ``{tech: {field: {"target", "derived", "rel_err"}}}`` comparing
+    the geometry-derived coefficients against the registered (pinned)
+    spec's.  ``bank_mb`` is an input on both sides, so its error is zero by
+    construction; it stays in the table as a sanity row.
+    """
+    from repro.spec import get_tech
+
+    report: dict = {}
+    for tech in technologies:
+        target = get_tech(tech)
+        derived = derive_coefficients(builtin_geometry(tech))
+        rows = {}
+        for field in COEFF_FIELDS:
+            t = getattr(target, field)
+            d = getattr(derived, field)
+            rows[field] = {
+                "target": t,
+                "derived": d,
+                "rel_err": abs(d - t) / abs(t) if t else abs(d),
+            }
+        report[tech] = rows
+    return report
+
+
+def max_calibration_error(technologies=("sram", "sot", "sot_opt")) -> float:
+    """Worst relative coefficient error across the given technologies."""
+    report = calibration_report(technologies)
+    return max(
+        row["rel_err"] for rows in report.values() for row in rows.values()
+    )

@@ -1,0 +1,159 @@
+"""Wordline/bitline RC, sensing, write path, H-tree: timing + energy.
+
+The access-time decomposition mirrors the ``t = t0 + tg * sqrt(cap/2)``
+form the system model consumes, but now both coefficients are *derived*:
+
+``t0`` (capacity-independent array path)
+    row decode (``log2(rows)`` stages) + wordline Elmore RC + bitline
+    develop (``C_bl * v_swing / I_read``) + sense-amp resolve, with the
+    sense/write phase repeated ``beats`` times when the bank cannot spread
+    a 256 B line across enough subarrays.  Writes swap the sense terms for
+    the write-driver RC and the cell's intrinsic switching pulse.
+
+``tg`` (interconnect growth)
+    The H-tree flit path grows with the GLB side length, i.e. with
+    ``sqrt(area)``; since area is linear in capacity, the growth against
+    ``sqrt(cap/2)`` is exactly ``wire_ns_per_mm * sqrt(A(2MB))`` — the
+    2 MB-reference H-tree wall — so the classic sqrt-capacity latency law
+    *falls out* of the wiring geometry instead of being pinned.
+
+Energy splits the same way: a capacity-independent array part (wordline +
+bitline charge, sense amps or write current x pulse) plus an H-tree part
+proportional to wire length.  The spec-level ``energy_cap_slope`` is the
+wire fraction of the 2 MB access energy — also derived, not pinned.
+
+All functions broadcast over organization arrays and run under numpy or
+jax.numpy (``xp``).  Unit identities used throughout:
+``ohm x fF = 1e-6 ns``, ``fF x mV / uA = 1e-3 ns``, ``uA x V x ns = fJ``,
+``fF x V^2 = fJ``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.geom.array import (
+    access_beats,
+    active_subarrays,
+    area_um2_per_bit,
+)
+from repro.geom.cells import ACCESS_BITS, MB_BITS, BitcellGeometry, ProcessParams
+
+#: Elmore coefficient of a distributed RC line.
+_ELMORE = 0.38
+
+
+# ---------------------------------------------------------------------------
+# Array-path RC pieces
+# ---------------------------------------------------------------------------
+
+
+def wordline_caps(cell: BitcellGeometry, proc: ProcessParams, cols, xp=np):
+    """(R_wl ohm, C_wl fF) of one subarray wordline."""
+    length_um = xp.asarray(cols, dtype=xp.float64) * cell.cell_w_um
+    r = proc.wire_r_ohm_per_um * length_um
+    c = proc.wire_c_ff_per_um * length_um + cols * cell.cell_wl_cap_ff
+    return r, c
+
+
+def bitline_caps(cell: BitcellGeometry, proc: ProcessParams, rows, xp=np):
+    """(R_bl ohm, C_bl fF) of one subarray bitline."""
+    length_um = xp.asarray(rows, dtype=xp.float64) * cell.cell_h_um
+    r = proc.wire_r_ohm_per_um * length_um
+    c = proc.wire_c_ff_per_um * length_um + rows * cell.cell_bl_cap_ff
+    return r, c
+
+
+def wordline_delay_ns(cell: BitcellGeometry, proc: ProcessParams, cols, xp=np):
+    """Driver + distributed-RC wordline rise (ns)."""
+    r, c = wordline_caps(cell, proc, cols, xp)
+    return (proc.wl_driver_r_ohm * c + _ELMORE * r * c) * 1e-6
+
+
+def bitline_develop_ns(cell: BitcellGeometry, proc: ProcessParams, rows, xp=np):
+    """Bitline swing development + wire RC (ns): ``C_bl * v / I`` sensing."""
+    r, c = bitline_caps(cell, proc, rows, xp)
+    develop = c * cell.v_swing_mv / cell.read_i_ua * 1e-3
+    return develop + _ELMORE * r * c * 1e-6
+
+
+def write_drive_ns(cell: BitcellGeometry, proc: ProcessParams, rows, xp=np):
+    """Write-driver RC onto the bitline plus the cell switching pulse (ns)."""
+    r, c = bitline_caps(cell, proc, rows, xp)
+    drive = (proc.wr_driver_r_ohm * c + _ELMORE * r * c) * 1e-6
+    return drive + cell.write_pulse_ns
+
+
+def decode_ns(proc: ProcessParams, rows, xp=np):
+    """Row-decoder delay (ns), one stage per address bit."""
+    return proc.decode_ns0 + proc.decode_ns_per_bit * xp.log2(
+        xp.asarray(rows, dtype=xp.float64)
+    )
+
+
+# ---------------------------------------------------------------------------
+# H-tree (the sqrt-capacity terms, referenced to the 2 MB array)
+# ---------------------------------------------------------------------------
+
+
+def htree_mm_at_2mb(cell, proc, rows, cols, bank_mb, xp=np):
+    """H-tree path length (mm) across the 2 MB-reference array."""
+    a_bit = area_um2_per_bit(cell, proc, rows, cols, bank_mb, xp)
+    area_2mb_mm2 = a_bit * 2.0 * MB_BITS / 1e6
+    return xp.sqrt(area_2mb_mm2)
+
+
+# ---------------------------------------------------------------------------
+# The derived coefficient set
+# ---------------------------------------------------------------------------
+
+
+def latency_coefficients(cell: BitcellGeometry, proc: ProcessParams,
+                         rows, cols, mux, bank_mb, xp=np):
+    """(t0_read, tg_read, t0_write, tg_write) in ns, org-broadcast."""
+    beats = access_beats(rows, cols, mux, bank_mb, xp)
+    t_dec = decode_ns(proc, rows, xp)
+    t_wl = wordline_delay_ns(cell, proc, cols, xp)
+    t_rd_phase = bitline_develop_ns(cell, proc, rows, xp) + proc.sense_amp_ns
+    t_wr_phase = write_drive_ns(cell, proc, rows, xp)
+    t0_read = t_dec + t_wl + beats * t_rd_phase
+    t0_write = t_dec + t_wl + beats * t_wr_phase
+    ht_mm = htree_mm_at_2mb(cell, proc, rows, cols, bank_mb, xp)
+    tg_read = cell.wire_ns_per_mm * ht_mm
+    tg_write = tg_read * cell.wr_wire_lat_factor
+    return t0_read, tg_read, t0_write, tg_write
+
+
+def energy_anchors(cell: BitcellGeometry, proc: ProcessParams,
+                   rows, cols, mux, bank_mb, xp=np):
+    """(e_rd_2mb_pj, e_wr_2mb_pj, energy_cap_slope), org-broadcast.
+
+    The anchors are per-256B-access dynamic energies at the 2 MB reference;
+    the slope is the wire (H-tree) fraction of the combined access energy —
+    the exact quantity the ``1 + slope * (sqrt(cap/2) - 1)`` growth law
+    scales.
+    """
+    n_act = active_subarrays(rows, cols, mux, bank_mb, xp)
+    beats = access_beats(rows, cols, mux, bank_mb, xp)
+    _, c_wl = wordline_caps(cell, proc, cols, xp)
+    _, c_bl = bitline_caps(cell, proc, rows, xp)
+    vdd = proc.vdd_v
+
+    # Wordline charge: every activated subarray swings one wordline per beat.
+    e_wl_pj = beats * n_act * c_wl * vdd * vdd * 1e-3
+    # Read: per sensed bit, the bitline develops v_swing and the SA burns
+    # sense_fj; writes drive the bitline full-swing and push write current
+    # through the cell for the switching pulse.
+    e_bl_rd_pj = ACCESS_BITS * c_bl * (cell.v_swing_mv * 1e-3) * vdd * 1e-3
+    e_bl_wr_pj = ACCESS_BITS * c_bl * vdd * vdd * 1e-3
+    e_sense_pj = ACCESS_BITS * cell.sense_fj * 1e-3
+    e_cell_wr_pj = ACCESS_BITS * cell.write_i_ua * vdd * cell.write_pulse_ns * 1e-3
+
+    ht_mm = htree_mm_at_2mb(cell, proc, rows, cols, bank_mb, xp)
+    e_wire_rd_pj = ACCESS_BITS * cell.wire_fj_per_mm_bit * ht_mm * 1e-3
+    e_wire_wr_pj = e_wire_rd_pj * cell.wr_wire_e_factor
+
+    e_rd = e_wl_pj + e_bl_rd_pj + e_sense_pj + e_wire_rd_pj
+    e_wr = e_wl_pj + e_bl_wr_pj + e_cell_wr_pj + e_wire_wr_pj
+    slope = (e_wire_rd_pj + e_wire_wr_pj) / (e_rd + e_wr)
+    return e_rd, e_wr, slope

@@ -11,6 +11,9 @@
     PYTHONPATH=src python -m repro.launch.explore --serving --qps 800 \
         --caps 32,64,128,256 --techs sram,sot_opt
 
+    PYTHONPATH=src python -m repro.launch.explore --geometry \
+        --geom-rows 256,512,1024 --geom-mux 4,8 --geom-banks 1,2,4
+
     PYTHONPATH=src python -m repro.launch.explore \
         --scenario examples/scenarios/serving_hybrid.json --smoke
 
@@ -24,6 +27,11 @@ frontier with the bank-level trace simulator (``repro.sim``).
 (technology, capacity) point is replayed through the continuous-batching
 engine (``repro.serve``) and the SLO-knee — the smallest capacity holding
 the p99 TTFT/TPOT SLO at the target QPS — is reported per technology.
+
+``--geometry`` expands every technology into its bank-organization design
+points (``--geom-rows`` x ``--geom-mux`` x ``--geom-banks``; see
+``repro.geom``) and co-optimizes capacity *and* organization: each
+reported Pareto/knee point carries the subarray organization that won it.
 
 Technologies resolve through the ``repro.spec`` registry: ``--tech`` (or
 ``--techs``) accepts any registered name (``sram``, ``sot``, ``sot_opt``,
@@ -53,6 +61,11 @@ from repro.dse import (
     knee_index,
     pareto_indices,
     refine_front,
+)
+from repro.dse.geomgrid import (
+    DEFAULT_BANK_MB as _GEOM_BANK_MB,
+    DEFAULT_MUX as _GEOM_MUX,
+    DEFAULT_ROWS as _GEOM_ROWS,
 )
 from repro.spec import (
     UnknownTechnologyError,
@@ -294,6 +307,122 @@ def _print_serving_rows(con: "obs.Console", out: dict) -> bool:
     return any(cap is not None for cap in out["knee_capacity_mb"].values())
 
 
+def explore_geometry(args) -> int:
+    """Capacity x bank-organization co-optimization (--geometry)."""
+    from repro.dse import GeomAxes, evaluate_geometry_grid
+
+    con = obs.Console.from_args(args)
+    try:
+        axes = GeomAxes(
+            rows=_parse_list(args.geom_rows, int),
+            mux=_parse_list(args.geom_mux, int),
+            bank_mb=_parse_list(args.geom_banks, float),
+        ).validate()
+    except ValueError as e:
+        con.error(f"bad geometry axes: {e}")
+        return 2
+    if args.smoke:
+        spec = GridSpec(
+            capacities_mb=(8, 16, 32, 64),
+            technologies=_resolve_techs(args, tech_group("serving")),
+            batches=(16,),
+            modes=("inference",),
+        )
+        workloads = _workloads("cv", "resnet18")
+    else:
+        spec = GridSpec(
+            capacities_mb=_parse_list(args.caps, float),
+            technologies=_resolve_techs(args, tech_group("paper")),
+            batches=_parse_list(args.batches, int),
+            modes=_parse_list(args.modes),
+        )
+        workloads = _workloads(args.domain, args.models)
+    rows = []
+    for name, wl in workloads.items():
+        t0 = time.perf_counter()
+        with obs.span("dse/geometry"):
+            grid = evaluate_geometry_grid(
+                wl, spec, axes=axes, backend=_grid_backend(args)
+            )
+        eval_ms = (time.perf_counter() - t0) * 1e3
+        for mode in spec.modes:
+            for batch in spec.batches:
+                objs, labels = grid.objective_arrays(mode, batch)
+                front = pareto_indices(objs)
+                ki = knee_index(objs, front)
+
+                def entry(i):
+                    return {
+                        "technology": labels[i][0],
+                        "capacity_mb": labels[i][1],
+                        "org": labels[i][2].org(),
+                        "energy_j": float(objs[i, 0]),
+                        "latency_s": float(objs[i, 1]),
+                        "area_mm2": float(objs[i, 2]),
+                    }
+
+                rows.append({
+                    "workload": name,
+                    "mode": mode,
+                    "batch": batch,
+                    "backend": grid.backend,
+                    "eval_ms": eval_ms,
+                    "n_points": len(labels),
+                    "n_designs": len(grid.designs),
+                    "n_infeasible": grid.n_infeasible,
+                    "knee_capacity_mb": knee_capacity(
+                        grid.dram_curve(mode, batch)
+                    ),
+                    "pareto": [entry(i) for i in front],
+                    "knee_point": entry(ki),
+                    "organizations": grid.org_table(mode, batch),
+                })
+    if not rows:
+        con.error("nothing to explore")
+        return 2
+    for row in rows:
+        kp = row["knee_point"]
+        org = kp["org"]
+        org_txt = (
+            f"rows={org['rows']} mux={org['mux']} bank={org['bank_mb']:g}MB"
+            if org else "pinned"
+        )
+        con.info(
+            f"# {row['workload']} {row['mode']} batch={row['batch']} "
+            f"({row['n_designs']} designs x {len(spec.capacities_mb)} caps"
+            f" = {row['n_points']} points, {row['n_infeasible']} infeasible"
+            f" orgs dropped, {row['eval_ms']:.1f} ms, {row['backend']})"
+        )
+        con.info(
+            f"  dram-curve knee      : {row['knee_capacity_mb']:g} MB\n"
+            f"  pareto frontier      : {len(row['pareto'])} points\n"
+            f"  knee point           : {kp['technology']}@{kp['capacity_mb']:g}MB"
+            f" [{org_txt}] energy={kp['energy_j']:.3e} J "
+            f"latency={kp['latency_s']:.3e} s area={kp['area_mm2']:.1f} mm2"
+        )
+        if args.full:
+            for p in row["organizations"]:
+                o = p["org"]
+                o_txt = (
+                    f"rows={o['rows']:>4} mux={o['mux']:>2} "
+                    f"bank={o['bank_mb']:g}MB" if o else "pinned"
+                )
+                con.info(
+                    f"    {p['technology']:>16}@{p['capacity_mb']:<6g} "
+                    f"[{o_txt}] E={p['energy_j']:.3e} "
+                    f"L={p['latency_s']:.3e} A={p['area_mm2']:.1f}"
+                )
+    ok = all(row["pareto"] for row in rows)
+    con.result(obs.stamp(
+        {"cli": "explore", "objective": "geometry_grid", "rows": rows,
+         "ok": ok},
+        config={"grid": spec, "geometry": axes},
+    ))
+    if args.smoke:
+        con.info("smoke OK" if ok else "smoke FAILED")
+    return 0 if ok else 1
+
+
 def explore_scenario(args) -> int:
     """Run a JSON-loaded ``repro.spec.Scenario`` end to end (--scenario)."""
     con = obs.Console.from_args(args)
@@ -367,6 +496,18 @@ def main(argv=None) -> int:
                     help="fast end-to-end check on a tiny grid")
     ap.add_argument("--serving", action="store_true",
                     help="serving-mode DSE: SLO-knee capacity at --qps")
+    ap.add_argument("--geometry", action="store_true",
+                    help="co-optimize capacity x bank organization through "
+                         "the repro.geom analytical model")
+    ap.add_argument("--geom-rows",
+                    default=",".join(str(r) for r in _GEOM_ROWS),
+                    help="with --geometry: subarray row counts to sweep")
+    ap.add_argument("--geom-mux",
+                    default=",".join(str(m) for m in _GEOM_MUX),
+                    help="with --geometry: column-mux degrees to sweep")
+    ap.add_argument("--geom-banks",
+                    default=",".join(f"{b:g}" for b in _GEOM_BANK_MB),
+                    help="with --geometry: bank sizes (MB) to sweep")
     ap.add_argument("--sweep-mode", default="shared",
                     choices=["shared", "exact"],
                     help="serving DSE evaluation: reuse the shared schedule "
@@ -396,6 +537,9 @@ def main(argv=None) -> int:
 
     if args.serving:
         return explore_serving(args)
+
+    if args.geometry:
+        return explore_geometry(args)
 
     if args.smoke:
         spec = GridSpec(

@@ -63,6 +63,14 @@ class Scenario:
     # replica MTBF / pinned failure times, requeue backoff).  ``None`` — the
     # default — runs fault-free, bit-identical to every pre-fault scenario.
     faults: dict | None = None
+    # Optional bank-organization block (batch modes only): a plain dict
+    # matching ``repro.dse.GeomAxes`` fields (rows / mux / bank_mb axes).
+    # When present the DSE co-optimizes capacity x organization through the
+    # geometry model (``repro.geom``) and every reported point carries its
+    # winning organization.  ``None`` — the default, and what every
+    # pre-geometry scenario JSON deserializes to — runs the fixed
+    # coefficient grid, bit-identical to before.
+    geometry: dict | None = None
 
     # -- validation / resolution -------------------------------------------
 
@@ -135,6 +143,13 @@ class Scenario:
                     f"mode is {self.mode!r}"
                 )
             self.fault_config()  # raises on unknown fields / bad rates
+        if self.geometry is not None:
+            if self.mode == "serving":
+                raise ValueError(
+                    "the 'geometry' block only applies to batch scenarios; "
+                    f"mode is {self.mode!r}"
+                )
+            self.geom_axes()  # raises on unknown fields / bad axis values
         return self
 
     def resolve_technologies(self) -> tuple[str, ...]:
@@ -193,6 +208,17 @@ class Scenario:
         if self.faults is None:
             return None
         return FaultConfig.from_dict(self.faults)
+
+    def geom_axes(self):
+        """The ``repro.dse.GeomAxes`` this scenario describes, or ``None``
+        (fixed-coefficient grid, the bit-identical default)."""
+        # Lazy import: repro.dse imports repro.spec at module level, so the
+        # reverse edge must stay inside the method.
+        from repro.dse.geomgrid import GeomAxes
+
+        if self.geometry is None:
+            return None
+        return GeomAxes.from_dict(self.geometry)
 
     def smoke(self) -> "Scenario":
         """A shrunk copy for CI smoke runs: one workload/batch/QPS point,
@@ -291,42 +317,54 @@ def run_scenario(sc: Scenario, backend: str = "auto") -> dict:
     backend = "jax" if backend == "pallas" else backend
     spec = GridSpec.from_scenario(sc)
     techs = sc.resolve_technologies()
+    geom = sc.geom_axes()
     rows = []
     for name, wl in sc.resolve_workloads().items():
-        grid = evaluate_workload_grid(wl, spec, backend=backend)
+        if geom is not None:
+            from repro.dse.geomgrid import evaluate_geometry_grid
+
+            grid = evaluate_geometry_grid(wl, spec, axes=geom, backend=backend)
+        else:
+            grid = evaluate_workload_grid(wl, spec, backend=backend)
         for batch in sc.batches:
             objs, labels = grid.objective_arrays(sc.mode, batch)
             front = pareto_indices(objs)
             ki = knee_index(objs, front)
+
+            def entry(i):
+                e = {
+                    "technology": labels[i][0],
+                    "capacity_mb": labels[i][1],
+                    "energy_j": float(objs[i, 0]),
+                    "latency_s": float(objs[i, 1]),
+                    "area_mm2": float(objs[i, 2]),
+                }
+                if geom is not None:  # labels carry the winning DesignPoint
+                    e["org"] = labels[i][2].org()
+                return e
+
             ratios = {}
             for cap in sc.capacities_mb:  # validate() pinned baseline in techs
-                by_tech = {
-                    t: grid.point(sc.mode, t, batch, cap) for t in techs
-                }
+                if geom is not None:
+                    by_tech = grid.best_metrics(sc.mode, batch, cap)
+                else:
+                    by_tech = {
+                        t: grid.point(sc.mode, t, batch, cap) for t in techs
+                    }
                 ratios[cap] = improvement_ratios(by_tech, baseline=sc.baseline)
-            rows.append({
+            row = {
                 "workload": name,
                 "mode": sc.mode,
                 "batch": batch,
                 "backend": grid.backend,
                 "knee_capacity_mb": knee_capacity(grid.dram_curve(sc.mode, batch)),
-                "pareto": [
-                    {
-                        "technology": labels[i][0],
-                        "capacity_mb": labels[i][1],
-                        "energy_j": float(objs[i, 0]),
-                        "latency_s": float(objs[i, 1]),
-                        "area_mm2": float(objs[i, 2]),
-                    }
-                    for i in front
-                ],
-                "knee_point": {
-                    "technology": labels[ki][0],
-                    "capacity_mb": labels[ki][1],
-                    "energy_j": float(objs[ki, 0]),
-                    "latency_s": float(objs[ki, 1]),
-                    "area_mm2": float(objs[ki, 2]),
-                },
+                "pareto": [entry(i) for i in front],
+                "knee_point": entry(ki),
                 "ratios_vs_baseline": ratios,
-            })
+            }
+            if geom is not None:
+                row["organizations"] = grid.org_table(sc.mode, batch)
+                row["n_designs"] = len(grid.designs)
+                row["n_infeasible"] = grid.n_infeasible
+            rows.append(row)
     return {"kind": "batch", "scenario": sc.name, "rows": rows}

@@ -24,10 +24,12 @@ from __future__ import annotations
 
 import dataclasses
 import difflib
+import math
 
 from repro.core.dtco import SOTDevice
 from repro.core.memory_system import MB, ArrayPPA, _sqrt_scale, device_array_terms
 from repro.faults.reliability import ReliabilitySpec
+from repro.geom.array import GeometrySpec
 
 
 class UnknownTechnologyError(ValueError, KeyError):
@@ -75,6 +77,11 @@ class MemTechSpec:
     t0_write_ns: float = 0.0
     tg_write_ns: float = 0.0
     bank_mb: float = 2.0  # bank granularity (banks = cap // bank_mb)
+    # Optional bank-geometry block (repro.geom): when present, every
+    # numeric coefficient above is *derived* from the analytical array
+    # model at build time instead of being pinned (the pinned values are
+    # ignored).  Mutually exclusive with ``device`` and ``components``.
+    geometry: GeometrySpec | None = None
     # Optional DTCO device point overriding the cell anchors.
     device: SOTDevice | None = None
     # Composite: ((tech_name, capacity_fraction), ...) summing to 1.
@@ -91,6 +98,21 @@ class MemTechSpec:
 
     # -- construction ------------------------------------------------------
 
+    def resolved(self) -> "MemTechSpec":
+        """This spec with any geometry-derived coefficients substituted.
+
+        Specs without a ``geometry`` block return ``self`` unchanged — the
+        legacy pinned-coefficient path stays bit-identical.  A geometry-
+        bearing spec comes back with ``geometry=None`` and the ten numeric
+        coefficients re-derived by :func:`repro.geom.fit.derive_coefficients`.
+        """
+        if self.geometry is None:
+            return self
+        from repro.geom.fit import derive_coefficients
+
+        coeffs = derive_coefficients(self.geometry)
+        return dataclasses.replace(self, geometry=None, **coeffs.spec_fields())
+
     def build(self, capacity_mb: float) -> ArrayPPA:
         """The array-level PPA of one GLB built from this spec.
 
@@ -98,6 +120,8 @@ class MemTechSpec:
         operand for operand so registry-built PPA is bit-identical to the
         seed constructors (tests/test_spec.py pins this).
         """
+        if self.geometry is not None:
+            return self.resolved().build(capacity_mb)
         if self.is_composite:
             return self._build_composite(capacity_mb)
         s = _sqrt_scale(capacity_mb)
@@ -168,6 +192,9 @@ class MemTechSpec:
             "t0_write_ns": self.t0_write_ns,
             "tg_write_ns": self.tg_write_ns,
             "bank_mb": self.bank_mb,
+            "geometry": (
+                self.geometry.to_dict() if self.geometry is not None else None
+            ),
             "device": (
                 dataclasses.asdict(self.device) if self.device is not None else None
             ),
@@ -193,6 +220,10 @@ class MemTechSpec:
             )
         if "name" not in d:
             raise ValueError("MemTechSpec dict is missing the 'name' field")
+        geom = d.get("geometry")
+        if geom is not None and not isinstance(geom, GeometrySpec):
+            geom = GeometrySpec.from_dict(geom)
+        d["geometry"] = geom
         dev = d.get("device")
         if dev is not None and not isinstance(dev, SOTDevice):
             dev_known = {f.name for f in dataclasses.fields(SOTDevice)}
@@ -236,11 +267,44 @@ def register_tech(spec: MemTechSpec, overwrite: bool = False) -> MemTechSpec:
     return spec
 
 
+#: Leaf physics fields that must be strictly positive (a zero access time,
+#: energy, or footprint is a data-entry bug, not a technology).
+_STRICT_POSITIVE_FIELDS = (
+    "area_um2_per_bit",
+    "read_energy_pj_2mb",
+    "write_energy_pj_2mb",
+    "t0_read_ns",
+    "t0_write_ns",
+    "bank_mb",
+)
+
+#: Leaf fields where zero is meaningful (an ideal NVM leaks nothing; a
+#: flat wire-growth coefficient is a capacity-independent array).
+_NON_NEGATIVE_FIELDS = (
+    "leakage_w_per_mb",
+    "tg_read_ns",
+    "tg_write_ns",
+    "energy_cap_slope",
+)
+
+
 def _validate(spec: MemTechSpec) -> None:
     if not spec.name or not spec.name.strip() or " " in spec.name:
         raise ValueError(f"invalid technology name {spec.name!r}")
     if spec.reliability is not None:
         spec.reliability.validate(owner=spec.name)
+    if spec.geometry is not None:
+        if spec.is_composite:
+            raise ValueError(
+                f"{spec.name!r}: a composite spec cannot carry a geometry "
+                "block (put geometry on its leaf components)"
+            )
+        if spec.device is not None:
+            raise ValueError(
+                f"{spec.name!r}: 'geometry' and 'device' are mutually "
+                "exclusive (both would own the cell latency/energy anchors)"
+            )
+        spec.geometry.validate(owner=spec.name)
     if spec.is_composite:
         fracs = [f for _, f in spec.components]
         if any(f <= 0 for f in fracs) or abs(sum(fracs) - 1.0) > 1e-9:
@@ -254,18 +318,32 @@ def _validate(spec: MemTechSpec) -> None:
             if comp not in _REGISTRY:
                 raise UnknownTechnologyError(comp, list_techs())
         return
-    for field in (
-        "area_um2_per_bit",
-        "read_energy_pj_2mb",
-        "write_energy_pj_2mb",
-        "bank_mb",
-    ):
-        if getattr(spec, field) <= 0:
-            raise ValueError(f"{spec.name!r}: {field} must be positive")
-    for field in ("leakage_w_per_mb", "t0_read_ns", "tg_read_ns",
-                  "t0_write_ns", "tg_write_ns"):
-        if getattr(spec, field) < 0:
-            raise ValueError(f"{spec.name!r}: {field} must be non-negative")
+    if spec.geometry is not None:
+        # The pinned fields are ignored; validate what build() will use.
+        spec = spec.resolved()
+    strict = _STRICT_POSITIVE_FIELDS
+    non_negative = _NON_NEGATIVE_FIELDS
+    if spec.device is not None:
+        # The device owns the cell anchors, so the pinned t0/energy fields
+        # are unused — only require they are not nonsense.
+        unused = ("read_energy_pj_2mb", "write_energy_pj_2mb",
+                  "t0_read_ns", "t0_write_ns")
+        strict = tuple(f for f in strict if f not in unused)
+        non_negative = non_negative + unused
+    for field in strict:
+        v = getattr(spec, field)
+        if not (isinstance(v, (int, float)) and math.isfinite(v) and v > 0):
+            raise ValueError(
+                f"{spec.name!r}: {field} must be a finite positive number; "
+                f"got {v!r}"
+            )
+    for field in non_negative:
+        v = getattr(spec, field)
+        if not (isinstance(v, (int, float)) and math.isfinite(v) and v >= 0):
+            raise ValueError(
+                f"{spec.name!r}: {field} must be finite and non-negative; "
+                f"got {v!r}"
+            )
 
 
 def get_tech(name: str) -> MemTechSpec:

@@ -1,0 +1,547 @@
+"""The ``repro.geom`` analytical bank model and its integrations.
+
+Four families:
+
+  * Golden calibration — the geometry-derived coefficients of every builtin
+    technology match the pinned seed anchors within the documented
+    ``fit.CALIBRATION_TOL`` (the subsystem's reason to exist: the anchors
+    now *emerge* from geometry).
+  * Physical invariants — latency monotone in subarray rows, bank area at
+    least the bitcell area times the bits stored, access energy monotone in
+    bitline length.
+  * Spec integration — ``MemTechSpec.geometry`` JSON round-trip, derived
+    vs pinned builds, strict leaf-field validation (non-positive /
+    non-finite physics rejected with the field named), and the bit-identical
+    no-geometry path.
+  * Geometry DSE — capacity x organization grid: numpy/jax held to the
+    same 1e-9 rtol contract as the fixed grid, pinned designs bitwise equal
+    to the fixed grid, infeasible organizations counted, scenario/CLI
+    round-trips, and manifest hashes that change with the geometry axes.
+"""
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.workload import cv_model_zoo
+from repro.dse import (
+    HAVE_JAX,
+    GeomAxes,
+    GridSpec,
+    base_geometry,
+    evaluate_geometry_grid,
+    evaluate_workload_grid,
+    refine_front,
+)
+from repro.geom import (
+    BUILTIN_GEOMETRY,
+    CALIBRATION_TOL,
+    COEFF_FIELDS,
+    BitcellGeometry,
+    GeometrySpec,
+    area_um2_per_bit,
+    calibration_report,
+    derive_coefficients,
+    derive_fields,
+    energy_anchors,
+    get_cell,
+    get_process,
+    latency_coefficients,
+    list_cells,
+    max_calibration_error,
+    rebuild_spec,
+    register_cell,
+)
+from repro.obs import Console
+from repro.spec import MemTechSpec, Scenario, get_tech, run_scenario
+
+RESNET18 = cv_model_zoo()["resnet18"]
+CAPS = (8.0, 16.0, 32.0, 64.0)
+N14 = get_process("n14")
+
+
+# ---------------------------------------------------------------------------
+# Golden calibration: geometry -> the pinned seed anchors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", ["sram", "sot", "sot_opt", "stt"])
+def test_golden_calibration_per_field(tech):
+    """Every derived coefficient lands within CALIBRATION_TOL of its
+    pinned anchor — per technology, per field, with the offender named."""
+    report = calibration_report((tech,))
+    for field, row in report[tech].items():
+        assert row["rel_err"] <= CALIBRATION_TOL, (
+            f"{tech}.{field}: derived {row['derived']!r} vs pinned "
+            f"{row['target']!r} (rel_err {row['rel_err']:.3e} > "
+            f"{CALIBRATION_TOL})"
+        )
+
+
+def test_golden_calibration_overall():
+    assert max_calibration_error(("sram", "sot", "sot_opt", "stt")) \
+        <= CALIBRATION_TOL
+
+
+@pytest.mark.parametrize("tech", ["sram", "sot", "sot_opt"])
+def test_rebuilt_spec_builds_close_to_pinned(tech):
+    """A geometry-rebuilt spec prices a GLB within tolerance of the pinned
+    spec at every capacity (the coefficients feed linear formulas, so the
+    coefficient tolerance bounds the build error)."""
+    pinned = get_tech(tech)
+    rebuilt = rebuild_spec(tech)
+    assert rebuilt.geometry == BUILTIN_GEOMETRY[tech]
+    for cap in CAPS:
+        a, b = pinned.build(cap), rebuilt.build(cap)
+        for field in ("read_latency_ns", "write_latency_ns",
+                      "read_energy_pj_per_access",
+                      "write_energy_pj_per_access", "leakage_w", "area_mm2"):
+            t, d = getattr(a, field), getattr(b, field)
+            assert d == pytest.approx(t, rel=3 * CALIBRATION_TOL), (
+                f"{tech}@{cap}MB {field}: {d} vs {t}"
+            )
+        assert a.banks == b.banks
+
+
+def test_derive_fields_vectorized_matches_scalar():
+    """The struct-of-arrays derive equals the scalar derive element-wise."""
+    rows = np.array([256.0, 512.0, 1024.0])
+    f = derive_fields("sot", "n14", rows, 512, 8.0, 2.0, np)
+    for i, r in enumerate((256, 512, 1024)):
+        scalar = derive_coefficients(
+            GeometrySpec(cell="sot", rows=r, cols=512, mux=8, bank_mb=2.0))
+        for field in COEFF_FIELDS:
+            assert float(f[field][i]) == pytest.approx(
+                getattr(scalar, field), rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Physical invariants
+# ---------------------------------------------------------------------------
+
+ALL_CELLS = ("sram6t", "sot", "sot_opt", "stt")
+
+
+@pytest.mark.parametrize("cell", ALL_CELLS)
+def test_latency_monotone_in_rows(cell):
+    """Taller subarrays are never faster: t0 is non-decreasing in rows
+    (longer bitlines, bigger decoder) at fixed cols/mux/bank."""
+    rows = np.array([64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0])
+    c, p = get_cell(cell), get_process("n14")
+    t0r, _, t0w, _ = latency_coefficients(c, p, rows, 512, 8.0, 4.0, np)
+    assert np.all(np.diff(t0r) >= 0), f"{cell} t0_read vs rows: {t0r}"
+    assert np.all(np.diff(t0w) >= 0), f"{cell} t0_write vs rows: {t0w}"
+
+
+@pytest.mark.parametrize("cell", ALL_CELLS)
+def test_bank_area_bounds_cell_area(cell):
+    """Bank area per bit is at least the bitcell footprint (periphery and
+    routing only ever add area) for every organization."""
+    c = get_cell(cell)
+    cell_um2 = c.cell_w_um * c.cell_h_um
+    rows = np.array([64.0, 256.0, 1024.0, 4096.0])
+    for mux in (1.0, 8.0, 64.0):
+        for bank in (0.5, 2.0, 8.0):
+            a_bit = area_um2_per_bit(c, N14, rows, 512, bank, np)
+            assert np.all(a_bit >= cell_um2), (
+                f"{cell} mux={mux} bank={bank}: {a_bit} < {cell_um2}"
+            )
+
+
+@pytest.mark.parametrize("cell", ALL_CELLS)
+def test_energy_monotone_in_bitline_length(cell):
+    """Stretching the bitline (taller cells at fixed rows) never reduces
+    access energy: more switched wire on both the array and the H-tree."""
+    base = get_cell(cell)
+    e_rd, e_wr = [], []
+    for scale in (1.0, 1.5, 2.0, 3.0):
+        c = dataclasses.replace(base, cell_h_um=base.cell_h_um * scale)
+        rd, wr, _ = energy_anchors(c, N14, 512.0, 512, 8.0, 2.0, np)
+        e_rd.append(float(rd))
+        e_wr.append(float(wr))
+    assert e_rd == sorted(e_rd), f"{cell} read energy vs bitline: {e_rd}"
+    assert e_wr == sorted(e_wr), f"{cell} write energy vs bitline: {e_wr}"
+
+
+def test_register_cell_validates_and_roundtrips():
+    cell = dataclasses.replace(get_cell("sot"), name="sot_labx")
+    try:
+        register_cell(cell)
+        assert get_cell("sot_labx") == cell
+        assert "sot_labx" in list_cells()
+        with pytest.raises(ValueError, match="already registered"):
+            register_cell(cell)
+        with pytest.raises(ValueError, match="read_i_ua"):
+            register_cell(dataclasses.replace(cell, name="bad", read_i_ua=0.0))
+    finally:
+        from repro.geom import cells as _cells
+
+        _cells._CELLS.pop("sot_labx", None)
+    with pytest.raises(KeyError, match="sot"):
+        get_cell("sot_labxx")  # near-miss hint names the real cells
+
+
+# ---------------------------------------------------------------------------
+# GeometrySpec / MemTechSpec integration
+# ---------------------------------------------------------------------------
+
+
+def test_geometry_spec_round_trip_and_rejections():
+    g = GeometrySpec(cell="sot_opt", rows=256, cols=512, mux=4, bank_mb=1.0)
+    assert GeometrySpec.from_dict(json.loads(json.dumps(g.to_dict()))) == g
+    with pytest.raises(ValueError, match="celll"):
+        GeometrySpec.from_dict({**g.to_dict(), "celll": "sot"})
+    with pytest.raises(ValueError, match="missing the 'cell'"):
+        GeometrySpec.from_dict({"rows": 512})
+    with pytest.raises(ValueError, match="power of two"):
+        GeometrySpec(cell="sot", rows=500).validate()
+    with pytest.raises(ValueError, match="rows"):
+        GeometrySpec(cell="sot", rows=8192).validate()
+    with pytest.raises(ValueError, match="exceeds the"):
+        # One 4096x4096 subarray (16 Mb) cannot fit a 1 MB (8 Mb) bank.
+        GeometrySpec(cell="sot", rows=4096, cols=4096, bank_mb=1.0).validate()
+    with pytest.raises(KeyError, match="unknown bitcell"):
+        GeometrySpec(cell="nope").validate()
+
+
+def test_mem_tech_spec_geometry_round_trip():
+    spec = rebuild_spec("sot")
+    again = MemTechSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert again == spec
+    assert again.build(64.0) == spec.build(64.0)
+
+
+def test_geometry_spec_resolves_and_builds():
+    """A geometry-bearing spec builds through its derived coefficients."""
+    spec = rebuild_spec("sot")
+    flat = spec.resolved()
+    assert flat.geometry is None
+    coeffs = derive_coefficients(BUILTIN_GEOMETRY["sot"])
+    for field in COEFF_FIELDS:
+        assert getattr(flat, field) == getattr(coeffs, field)
+    assert spec.build(64.0) == flat.build(64.0)
+
+
+def test_no_geometry_path_is_identity():
+    """resolved() on a pinned spec is the same object — the legacy path
+    cannot drift by construction."""
+    for tech in ("sram", "sot", "sot_opt", "stt", "hybrid"):
+        spec = get_tech(tech)
+        assert spec.geometry is None
+        assert spec.resolved() is spec
+        d = spec.to_dict()
+        assert d["geometry"] is None
+        assert MemTechSpec.from_dict(d) == spec
+
+
+def test_geometry_excluded_for_composites_and_devices():
+    g = GeometrySpec(cell="sot")
+    from repro.core.dtco import SOTDevice
+    from repro.spec.tech import _validate
+
+    with pytest.raises(ValueError, match="composite"):
+        _validate(MemTechSpec(
+            name="geo_mix", components=(("sram", 0.5), ("sot", 0.5)),
+            geometry=g,
+        ))
+    with pytest.raises(ValueError, match="mutually"):
+        _validate(MemTechSpec(
+            name="geo_dev", geometry=g,
+            device=SOTDevice(theta_sh=2.0, t_fl_nm=0.8),
+        ))
+
+
+# ---------------------------------------------------------------------------
+# Strict leaf validation (physics fields must be positive and finite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("field,value", [
+    ("area_um2_per_bit", float("nan")),
+    ("area_um2_per_bit", -0.1),
+    ("t0_read_ns", 0.0),
+    ("t0_write_ns", float("inf")),
+    ("read_energy_pj_2mb", -34.0),
+    ("write_energy_pj_2mb", float("nan")),
+    ("bank_mb", 0.0),
+    ("leakage_w_per_mb", -1.0),
+    ("tg_read_ns", float("inf")),
+    ("energy_cap_slope", float("nan")),
+])
+def test_leaf_validation_names_bad_field(field, value):
+    from repro.spec.tech import _validate
+
+    spec = dataclasses.replace(get_tech("sot"), name="bad_leaf",
+                               **{field: value})
+    with pytest.raises(ValueError, match=field):
+        _validate(spec)
+
+
+def test_geometry_derived_spec_is_validated_too():
+    """Validation resolves geometry first, so a geometry producing broken
+    coefficients is caught at registration time with the field named."""
+    from repro.spec.tech import _validate
+
+    # A wildly negative write-wire energy factor (a knob register_cell does
+    # not range-check) drives the derived write energy negative.
+    bad = dataclasses.replace(get_cell("sot"), name="geo_bad",
+                              wr_wire_e_factor=-1e6)
+    try:
+        register_cell(bad, overwrite=True)
+        spec = dataclasses.replace(
+            get_tech("sot"), name="bad_geo",
+            geometry=GeometrySpec(cell="geo_bad"),
+        )
+        with pytest.raises(ValueError, match="write_energy_pj_2mb"):
+            _validate(spec)
+    finally:
+        from repro.geom import cells as _cells
+
+        _cells._CELLS.pop("geo_bad", None)
+
+
+# ---------------------------------------------------------------------------
+# refine_front: skipped technologies are named (never silent)
+# ---------------------------------------------------------------------------
+
+
+def test_refine_front_names_skipped_technology(capsys):
+    rows = refine_front(
+        RESNET18, 16, "inference",
+        [("no_such_tech", 64.0)],
+        sim_config=None,
+    )
+    assert rows == []
+    err = capsys.readouterr().err
+    assert "refine_front: skipping technology 'no_such_tech'" in err
+    assert "64.0 MB" in err
+
+
+def test_refine_front_warn_routes_to_console():
+    import io
+
+    sink = io.StringIO()
+    refine_front(
+        RESNET18, 16, "inference", [("no_such_tech", 8.0)],
+        console=Console(err=sink),
+    )
+    assert "no_such_tech" in sink.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# Geometry DSE grid
+# ---------------------------------------------------------------------------
+
+AXES = GeomAxes(rows=(256, 512), mux=(4, 8), bank_mb=(1.0, 2.0))
+SPEC = GridSpec(capacities_mb=CAPS, technologies=("sram", "sot", "sot_opt"),
+                batches=(16,), modes=("inference",))
+
+
+@pytest.fixture(scope="module")
+def geom_grid():
+    return evaluate_geometry_grid(RESNET18, SPEC, axes=AXES, backend="numpy")
+
+
+def test_geom_axes_round_trip_and_rejections():
+    assert GeomAxes.from_dict(json.loads(json.dumps(AXES.to_dict()))) == AXES
+    with pytest.raises(ValueError, match="rowz"):
+        GeomAxes.from_dict({"rowz": [512]})
+    with pytest.raises(ValueError, match="non-empty"):
+        GeomAxes(rows=()).validate()
+    with pytest.raises(ValueError, match="mux"):
+        GeomAxes(mux=(0,)).validate()
+
+
+def test_geom_grid_shapes_and_feasibility(geom_grid):
+    # 3 techs x 8 orgs each, all feasible at these axes.
+    assert len(geom_grid.designs) == 3 * AXES.n_designs
+    assert geom_grid.n_infeasible == 0
+    assert geom_grid.metrics.energy_j.shape == (
+        1, len(geom_grid.designs), 1, len(CAPS))
+    for d in geom_grid.designs:
+        assert d.geometry is not None  # all three techs have geometry
+        org = d.org()
+        assert set(org) == {"rows", "cols", "mux", "bank_mb"}
+
+
+def test_geom_grid_counts_infeasible_orgs():
+    # rows=4096 x cols=512 = 2 Mb subarrays don't fit 0.125 MB (1 Mb) banks.
+    axes = GeomAxes(rows=(512, 4096), mux=(8,), bank_mb=(0.125,))
+    grid = evaluate_geometry_grid(
+        RESNET18,
+        GridSpec(capacities_mb=(8.0,), technologies=("sot",),
+                 batches=(16,), modes=("inference",)),
+        axes=axes, backend="numpy",
+    )
+    assert grid.n_infeasible == 1
+    assert len(grid.designs) == 1
+    with pytest.raises(ValueError, match="infeasible"):
+        evaluate_geometry_grid(
+            RESNET18,
+            GridSpec(capacities_mb=(8.0,), technologies=("sot",),
+                     batches=(16,), modes=("inference",)),
+            axes=GeomAxes(rows=(4096,), mux=(8,), bank_mb=(0.125,)),
+        )
+
+
+def test_pinned_design_bitwise_matches_fixed_grid():
+    """A technology without geometry (the hybrid composite) rides the
+    geometry grid as one pinned design, bitwise equal to the fixed grid."""
+    assert base_geometry("hybrid") is None
+    spec = GridSpec(capacities_mb=CAPS, technologies=("hybrid",),
+                    batches=(16,), modes=("inference",))
+    geom = evaluate_geometry_grid(RESNET18, spec, axes=AXES, backend="numpy")
+    fixed = evaluate_workload_grid(RESNET18, spec, backend="numpy")
+    assert len(geom.designs) == 1 and geom.designs[0].geometry is None
+    assert geom.designs[0].org() is None
+    for field in ("energy_j", "latency_s", "runtime_s", "dram_energy_j",
+                  "glb_energy_j", "leakage_energy_j", "compute_time_s"):
+        a = np.asarray(getattr(geom.metrics, field))[:, 0]
+        b = np.asarray(getattr(fixed.metrics, field))[:, 0]
+        assert np.array_equal(a, b), field
+
+
+@pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+def test_geom_grid_numpy_jax_equivalence(geom_grid):
+    """Same cross-backend contract as the fixed grid (1e-9 rtol)."""
+    jgrid = evaluate_geometry_grid(RESNET18, SPEC, axes=AXES, backend="jax")
+    assert jgrid.backend == "jax"
+    for field in ("energy_j", "latency_s", "runtime_s"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(geom_grid.metrics, field)),
+            np.asarray(getattr(jgrid.metrics, field)),
+            rtol=1e-9, atol=0, err_msg=field,
+        )
+
+
+def test_geom_grid_best_design_and_org_table(geom_grid):
+    table = geom_grid.org_table("inference", 16)
+    assert len(table) == 3 * len(CAPS)
+    for row in table:
+        assert row["org"] is not None
+        best = geom_grid.best_design(
+            "inference", row["technology"], 16, row["capacity_mb"])
+        assert geom_grid.designs[best].org() == row["org"]
+        # Best-by-EDP really is minimal across the tech's designs.
+        edp = [
+            geom_grid.point("inference", i, 16, row["capacity_mb"]).energy_j
+            * geom_grid.point("inference", i, 16, row["capacity_mb"]).latency_s
+            for i in geom_grid.tech_designs(row["technology"])
+        ]
+        got = (geom_grid.point("inference", best, 16, row["capacity_mb"])
+               .energy_j
+               * geom_grid.point("inference", best, 16, row["capacity_mb"])
+               .latency_s)
+        assert got == pytest.approx(min(edp))
+    best = geom_grid.best_metrics("inference", 16, 16.0)
+    assert set(best) == {"sram", "sot", "sot_opt"}
+    with pytest.raises(KeyError, match="not in grid"):
+        geom_grid.best_design("inference", "stt", 16, 16.0)
+
+
+def test_geom_grid_objective_labels_carry_designs(geom_grid):
+    objs, labels = geom_grid.objective_arrays("inference", 16)
+    assert objs.shape == (len(labels), 3)
+    techs = {t for t, _, _ in labels}
+    assert techs == {"sram", "sot", "sot_opt"}
+    for _, cap, d in labels:
+        assert cap in CAPS
+        assert d in geom_grid.designs
+
+
+def test_org_choice_beats_or_matches_calibration_point(geom_grid):
+    """Sweeping organizations can only improve on the calibration org when
+    the calibration org is inside the axes (it is, for sot: 512/8/2MB)."""
+    cal = BUILTIN_GEOMETRY["sot"]
+    assert (cal.rows in AXES.rows and cal.mux in AXES.mux
+            and cal.bank_mb in AXES.bank_mb)
+    cal_design = next(
+        i for i, d in enumerate(geom_grid.designs)
+        if d.technology == "sot" and d.geometry == cal
+    )
+    cal_m = geom_grid.point("inference", cal_design, 16, 64.0)
+    best_m = geom_grid.best_metrics("inference", 16, 64.0)["sot"]
+    assert (best_m.energy_j * best_m.latency_s
+            <= cal_m.energy_j * cal_m.latency_s * (1 + 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Scenario + CLI + manifest integration
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_geometry_block():
+    sc = Scenario(
+        name="geom-test", workloads=("resnet18",), batches=(16,),
+        capacities_mb=(8.0, 16.0), technologies=("sram", "sot_opt"),
+        geometry={"rows": [256, 512], "mux": [8], "bank_mb": [1.0]},
+    )
+    assert Scenario.from_dict(json.loads(json.dumps(sc.to_dict()))) == sc
+    out = run_scenario(sc)
+    row = out["rows"][0]
+    assert row["n_designs"] == 4 and row["n_infeasible"] == 0
+    assert row["knee_point"]["org"] is not None
+    assert all(p["org"] is not None for p in row["pareto"])
+    assert len(row["organizations"]) == 2 * 2
+    assert set(row["ratios_vs_baseline"]) == {8.0, 16.0}
+
+
+def test_scenario_geometry_rejections():
+    with pytest.raises(ValueError, match="batch scenarios"):
+        Scenario(mode="serving", domain="nlp", workloads=("bert",),
+                 geometry={"rows": [256]}).validate()
+    with pytest.raises(ValueError, match="non-empty"):
+        Scenario(geometry={"rows": []}).validate()
+    with pytest.raises(ValueError, match="rowz"):
+        Scenario(geometry={"rowz": [256]}).validate()
+
+
+def test_scenario_without_geometry_has_no_org_columns():
+    sc = Scenario(workloads=("resnet18",), capacities_mb=(8.0, 16.0))
+    row = run_scenario(sc)["rows"][0]
+    assert "organizations" not in row
+    assert "org" not in row["knee_point"]
+
+
+def test_geometry_example_scenario_smokes():
+    from repro.spec import load_scenario
+
+    sc = load_scenario("examples/scenarios/geometry_dtco.json").smoke()
+    out = run_scenario(sc)
+    assert out["rows"] and out["rows"][0]["pareto"]
+
+
+def test_explore_geometry_cli(capsys):
+    from repro.launch.explore import main
+
+    rc = main(["--geometry", "--smoke", "--json",
+               "--geom-rows", "256,512", "--geom-mux", "8",
+               "--geom-banks", "1"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["ok"] and out["objective"] == "geometry_grid"
+    assert out["rows"][0]["knee_point"]["org"] is not None
+    assert "config_hash" in out["manifest"]
+
+
+def test_explore_geometry_cli_rejects_bad_axes(capsys):
+    from repro.launch.explore import main
+
+    assert main(["--geometry", "--smoke", "--geom-rows", "0"]) == 2
+    assert "bad geometry axes" in capsys.readouterr().err
+
+
+def test_manifest_hash_tracks_geometry():
+    """The run manifest's config hash must change when only the geometry
+    axes change — geometry is part of the experiment identity."""
+    spec = SPEC
+    a = obs.stamp({"x": 1}, config={"grid": spec, "geometry": AXES})
+    b = obs.stamp({"x": 1}, config={
+        "grid": spec,
+        "geometry": dataclasses.replace(AXES, rows=(512,)),
+    })
+    assert a["manifest"]["config_hash"] != b["manifest"]["config_hash"]
